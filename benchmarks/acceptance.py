@@ -1,0 +1,88 @@
+"""Table I reproduction: acceptance length under given verification widths.
+
+We cannot ship Vicuna-7B + trained Medusa heads, so the *head-accuracy
+table* is fitted (3 scalars: a1, head-decay, rank-decay) to the paper's
+MT-bench row; the tree-construction machinery (greedy + brute-force) and the
+acceptance-length estimator are then exercised exactly as the paper does,
+and the remaining three dataset rows are compared as held-out targets
+(the paper itself transfers MT-bench trees to them).
+
+Real measured acceptance (trained tiny Medusa model, no fit anywhere) is
+produced by examples/e2e_train_serve.py and tests/test_system.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.speculative import tree as T
+
+WIDTHS = (1, 2, 4, 8, 16, 32, 64)
+
+# Paper Table I
+PAPER = {
+    "MT-bench":   [1, 1.72, 2.28, 2.59, 2.93, 3.19, 3.34],
+    "GSM8K":      [1, 1.76, 2.43, 2.69, 3.08, 3.34, 3.56],
+    "MBPP":       [1, 1.78, 2.54, 2.89, 3.27, 3.55, 3.74],
+    "Human-eval": [1, 1.77, 2.49, 2.80, 3.19, 3.48, 3.71],
+}
+
+
+def estimator_curve(accs, refine=False) -> list:
+    out = []
+    for w in WIDTHS:
+        spec = (T.spec_from_nodes([(-1, 0, 0)]) if w == 1
+                else T.build_tree(accs, w, refine=refine))
+        out.append(T.expected_acceptance_length(spec, accs))
+    return out
+
+
+def fit_accs(target=None, H=5, K=10):
+    """Least-squares fit of (a1, head_decay, rank_decay) to an AL row.
+    Greedy-only trees inside the search (greedy is estimator-optimal, so
+    refinement cannot change the fit); coarse-to-fine grid."""
+    target = np.asarray(target if target is not None else PAPER["MT-bench"])
+
+    def err_of(a1, hd, rd):
+        accs = T.default_accs(H, K, a1, hd, rd)
+        cur = np.asarray(estimator_curve(accs, refine=False))
+        return float(np.mean((cur - target) ** 2))
+
+    best, best_err = (0.7, 0.8, 0.4), np.inf
+    for a1 in np.linspace(0.55, 0.85, 7):
+        for hd in np.linspace(0.55, 0.95, 5):
+            for rd in np.linspace(0.15, 0.6, 6):
+                e = err_of(a1, hd, rd)
+                if e < best_err:
+                    best, best_err = (a1, hd, rd), e
+    # local refinement around the coarse optimum
+    a1, hd, rd = best
+    for da in np.linspace(-0.03, 0.03, 5):
+        for dh in np.linspace(-0.06, 0.06, 5):
+            for dr in np.linspace(-0.06, 0.06, 5):
+                e = err_of(a1 + da, hd + dh, rd + dr)
+                if e < best_err:
+                    best, best_err = (a1 + da, hd + dh, rd + dr), e
+    return T.default_accs(H, K, *best), best, best_err
+
+
+def run() -> list:
+    accs, params, err = fit_accs()
+    ours = estimator_curve(accs)
+    rows = []
+    print(f"# fitted accs: a1={params[0]:.3f} head_decay={params[1]:.3f} "
+          f"rank_decay={params[2]:.3f} (mse {err:.4f})")
+    print("width  " + "  ".join(f"{w:>5d}" for w in WIDTHS))
+    print("ours   " + "  ".join(f"{a:5.2f}" for a in ours))
+    for ds, row in PAPER.items():
+        rel = np.abs(np.asarray(ours) - np.asarray(row)) / np.asarray(row)
+        print(f"{ds:10s} " + "  ".join(f"{a:5.2f}" for a in row)
+              + f"   max rel dev {rel.max()*100:.1f}%")
+        rows.append((ds, float(rel.max())))
+    return [("acceptance_table1_fit_mse", err,
+             f"a1={params[0]:.3f},hd={params[1]:.3f},rd={params[2]:.3f}"),
+            ("acceptance_table1_maxdev_mtbench", rows[0][1], "held-in"),
+            ("acceptance_table1_maxdev_mbpp", rows[2][1], "held-out")]
+
+
+if __name__ == "__main__":
+    run()

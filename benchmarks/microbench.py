@@ -1,0 +1,54 @@
+"""Micro-benchmarks: jitted step latencies at smoke scale on CPU (regression
+tracking; not TPU predictions) — one speculative step vs one sequential step.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.speculative import tree as T
+from repro.core.speculative.medusa import init_medusa
+from repro.core.speculative.verify import spec_prefill, spec_step
+from repro.models.api import get_model
+
+
+def _bench(f, *args, reps=10):
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6     # us
+
+
+def run() -> list:
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    heads = init_medusa(cfg, jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 16), 0,
+                              cfg.vocab_size)
+    rows = []
+
+    _, _, cache = model.prefill(params, {"tokens": toks}, max_len=128)
+    dec = jax.jit(lambda p, c, t: model.decode(p, c, t))
+    us = _bench(lambda: dec(params, cache, toks[:, :1]))
+    rows.append(("decode_step_smoke", us, "1 token"))
+
+    spec = T.build_tree(T.default_accs(4, 4), 16)
+    tr = T.Tree.from_spec(spec)
+    st = spec_prefill(model, params, heads, {"tokens": toks}, max_len=128)
+    step = jax.jit(lambda p, h, s: spec_step(model, p, h, tr, s))
+    us = _bench(lambda: step(params, heads, st))
+    rows.append(("spec_step_w16_smoke", us, "verify 16 nodes"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

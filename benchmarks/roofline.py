@@ -1,0 +1,102 @@
+"""§Roofline: derive compute / memory / collective terms per (arch × shape ×
+mesh) from the dry-run artifacts in results/dryrun/.
+
+  compute    = HLO_FLOPs_per_dev / peak_FLOPs
+  memory     = HLO_bytes_per_dev / HBM_bw
+  collective = collective_bytes_per_dev / ICI_bw
+
+plus MODEL_FLOPS = 6·N·D (train) or 2·N_active·tokens (serve) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs (remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import INPUT_SHAPES
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def model_flops_per_device(rec) -> float:
+    shape = INPUT_SHAPES[rec["shape"]]
+    n_act = rec["model_params_active"]
+    dev = rec["n_devices"]
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_act * tokens / dev
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_act * tokens / dev
+    tokens = shape.global_batch            # decode: 1 new token per sample
+    return 2.0 * n_act * tokens / dev
+
+
+def load(results_dir=None, mesh="single", mode="hcmp", variant="baseline"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(results_dir or RESULTS, "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("mesh") != mesh or rec.get("mode") != mode:
+            continue
+        if rec.get("variant", "baseline") != variant:
+            continue
+        rows.append(rec)
+    return rows
+
+
+def analyse(rec) -> dict:
+    if rec["status"] != "ok":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "status": rec["status"]}
+    corr = rec.get("corrected")
+    if corr:                    # scan-trip-count-corrected costs (preferred)
+        flops, hbytes = corr["flops"], corr["hlo_bytes_accessed"]
+        cbytes = corr["collective_total"]
+    else:
+        flops, hbytes = rec["flops"], rec["hlo_bytes_accessed"]
+        cbytes = rec["collectives"]["total"]
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = hbytes / HBM_BW
+    t_x = cbytes / ICI_BW
+    bound = max([(t_c, "compute"), (t_m, "memory"), (t_x, "collective")])[1]
+    mf = model_flops_per_device(rec)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "bound": bound, "step_s": max(t_c, t_m, t_x),
+        "model_flops": mf, "useful_ratio": mf / max(flops, 1.0),
+        "peak_gb_per_dev": rec["memory"]["peak_bytes"] / 1e9,
+    }
+
+
+def table(mesh="single", mode="hcmp", results_dir=None) -> list:
+    return [analyse(r) for r in load(results_dir, mesh, mode)]
+
+
+def render_markdown(rows) -> str:
+    hdr = ("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "bound | useful FLOP ratio | peak GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status']} | — | — |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.3f} | "
+            f"{r['memory_s']*1e3:.3f} | {r['collective_s']*1e3:.3f} | "
+            f"**{r['bound']}** | {min(r['useful_ratio'],9.99):.2f} | "
+            f"{r['peak_gb_per_dev']:.2f} |\n")
+    return "".join(out)
+
+
+def main():
+    rows = table()
+    print(render_markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  Table I   -> acceptance.run()     (verification-tree acceptance lengths)
+  Fig 9     -> throughput.run()     (4 systems x widths, calibrated Jetson sim)
+  Fig 10a   -> partitioning.run()   (static vs dynamic attention partitioning)
+  Fig 10b   -> sparse.run()         (tree-sparse kernel strategies)
+  §Roofline -> roofline.main()      (from dry-run artifacts, if present)
+  micro     -> microbench.run()     (jitted step latencies, CPU smoke scale)
+
+Prints ``name,us_per_call,derived`` CSV at the end.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    rows = []
+    from benchmarks import acceptance, microbench, partitioning, sparse, \
+        throughput
+
+    print("=" * 70); print("## Table I — acceptance length vs width")
+    rows += acceptance.run()
+    print("=" * 70); print("## Fig 9 — decoding throughput (Jetson sim)")
+    rows += throughput.run()
+    print("=" * 70); print("## Fig 10a — dynamic partitioning")
+    rows += partitioning.run()
+    print("=" * 70); print("## Fig 10b — sparse strategies")
+    rows += sparse.run()
+    print("=" * 70); print("## micro — step latencies (CPU smoke)")
+    rows += microbench.run()
+
+    from benchmarks import ablations
+    print("=" * 70); print("## ablations (beyond paper)")
+    rows += ablations.run()
+
+    from benchmarks import roofline
+    try:
+        tb = roofline.table()
+        if tb:
+            print("=" * 70); print("## Roofline (from dry-run artifacts)")
+            print(roofline.render_markdown(tb))
+            ok = [r for r in tb if r.get("status") == "ok"]
+            rows.append(("roofline_cases_ok", float(len(ok)),
+                         f"of {len(tb)}"))
+    except Exception as e:  # dry-run artifacts may not exist yet
+        print(f"## Roofline skipped: {e}")
+
+    print("=" * 70)
+    print("name,us_per_call,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.4f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""ARCA profiling walkthrough (paper §III-C, Fig. 8): tree construction,
+width selection, contention-aware partitioning — on the calibrated Jetson
+simulator AND the TPU roofline (from dry-run artifacts when present).
+
+  PYTHONPATH=src python examples/arca_profile.py [--arch vicuna-7b]
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import arca
+from repro.core.speculative import tree as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="vicuna-7b")
+    ap.add_argument("--ctx", type=int, default=256)
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+
+    accs = T.default_accs(cfg.medusa_heads, cfg.medusa_top_k)
+    print(f"== verification-tree construction (width 16, Fig. 8) ==")
+    greedy = T.build_tree_greedy(accs, 16)
+    refined = T.refine_tree(greedy, accs)
+    print(f"greedy  E[AL] = {T.expected_acceptance_length(greedy, accs):.3f}")
+    print(f"refined E[AL] = {T.expected_acceptance_length(refined, accs):.3f}")
+    print("node (parent, depth, rank):")
+    for i in range(refined.width):
+        print(f"  n{i:02d} <- p{refined.parent[i]:02d} "
+              f"d{refined.depth[i]} r{refined.rank[i]}")
+
+    print(f"\n== strategy table ({args.arch}, ctx={args.ctx}, Jetson sim) ==")
+    strats = arca.choose_strategy(cfg, accs, ctx=args.ctx)
+    seq_t = arca.step_time_sequential(arca.JETSON_NX, cfg, args.ctx)
+    for w, s in strats.items():
+        print(f"W={w:3d} E[AL]={s.acceptance:5.2f} ratio={s.ratio:.3f} "
+              f"step={s.step_time*1e3:7.1f}ms thr={s.throughput:6.2f} tok/s "
+              f"({s.throughput*seq_t:4.2f}x)")
+    print(f"ARCA deployment choice: width={arca.best(strats).width}")
+
+    # TPU roofline source, if the dry-run artifacts exist
+    res = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+    hits = sorted(glob.glob(os.path.join(res, f"{args.arch}__decode*single*json")))
+    if hits:
+        rec = json.load(open(hits[0]))
+        if rec["status"] == "ok":
+            r = arca.roofline_time(rec["flops"], rec["hlo_bytes_accessed"],
+                                   rec["collectives"]["total"])
+            print(f"\n== TPU roofline ({rec['shape']}, 256 chips) ==")
+            print(f"compute {r['compute_s']*1e6:.1f}us  "
+                  f"memory {r['memory_s']*1e6:.1f}us  "
+                  f"collective {r['collective_s']*1e6:.1f}us -> "
+                  f"bound: {r['bound']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""End-to-end driver (the paper's pipeline at laptop scale):
+
+  1. train a small LM (~15M params) on a structured synthetic corpus,
+  2. train Medusa drafting heads on the frozen base model,
+  3. ARCA: measure REAL per-head top-k accuracies on calibration data,
+     build verification trees per width, pick the deployment strategy,
+  4. serve: sequential vs Ghidorah speculative decoding; report measured
+     acceptance length (the real Table-I analogue) and wall-clock speedup.
+
+  PYTHONPATH=src python examples/e2e_train_serve.py [--steps 200]
+"""
+import argparse
+import sys, os, time
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import arca
+from repro.core.speculative import tree as T
+from repro.core.speculative.medusa import draft_candidates, init_medusa, \
+    medusa_logits
+from repro.data.pipeline import MarkovDataset
+from repro.models.api import get_model
+from repro.runtime.engine import BatchEngine, SpeculativeEngine
+from repro.training.optimizer import adamw_init
+from repro.training.train import medusa_step, train_step
+
+
+def measure_head_accuracies(cfg, model, params, heads, data, n_batches=4,
+                            seq=128):
+    """Real per-head top-k accuracy table (replaces the fitted table)."""
+    H, K = cfg.medusa_heads, cfg.medusa_top_k
+    hits = np.zeros((H, K))
+    counts = 0
+    for s in range(n_batches):
+        toks = jnp.asarray(data.sample(8, seq, seed=100 + s)[:, :-1]
+                           .astype(np.int32))
+        _, extras, _ = model.prefill(params, {"tokens": toks},
+                                     return_cache=False)
+        logits = medusa_logits(cfg, heads, extras["hidden"])  # (B,S,H,V)
+        _, top = jax.lax.top_k(logits, K)                     # (B,S,H,K)
+        top = np.asarray(top)
+        tk = np.asarray(toks)
+        for h in range(H):
+            off = h + 2
+            if off >= seq:
+                continue
+            tgt = tk[:, off:]                                 # (B, S-off)
+            pred = top[:, :seq - off, h]                      # (B, S-off, K)
+            for k in range(K):
+                hits[h, k] += float(np.mean(pred[..., k] == tgt))
+        counts += 1
+    # P(rank-k is the target); cumulative not needed (tree uses per-rank)
+    return hits / max(counts, 1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--head-steps", type=int, default=150)
+    ap.add_argument("--tokens", type=int, default=96)
+    args = ap.parse_args()
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = get_model(cfg)
+    data = MarkovDataset(cfg.vocab_size, seed=1)
+
+    # ---- 1. base model training ------------------------------------
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(lambda p, o, b: train_step(cfg, model, p, o, b, lr=1e-3))
+    print(f"[1/4] training base model ({cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps)")
+    for i, batch in enumerate(data.batches(8, 64, args.steps)):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, m = step(params, opt, b)
+        if i % 50 == 0 or i == args.steps - 1:
+            print(f"  step {i:4d} ce={float(m['ce']):.3f}")
+
+    # ---- 2. Medusa heads (base frozen) -------------------------------
+    heads = init_medusa(cfg, jax.random.PRNGKey(1))
+    hopt = adamw_init(heads)
+    hstep = jax.jit(lambda h, o, b: medusa_step(cfg, model, params, h, o, b))
+    print(f"[2/4] training {cfg.medusa_heads} Medusa heads "
+          f"({args.head_steps} steps, base frozen)")
+    for i, batch in enumerate(data.batches(8, 64, args.head_steps, seed=500)):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        heads, hopt, m = hstep(heads, hopt, b)
+        if i % 50 == 0 or i == args.head_steps - 1:
+            print(f"  step {i:4d} head-loss={float(m['loss']):.3f}")
+
+    # ---- 3. ARCA: real accuracies -> trees -> MEASURED strategy -------
+    print("[3/4] ARCA: head accuracies + measured step times (this machine)")
+    accs = measure_head_accuracies(cfg, model, params, heads, data)
+    print("  top-1 accuracy per head:", np.round(accs[:, 0], 3).tolist())
+    cal_prompt = {"tokens": jnp.asarray(
+        data.sample(1, 32, seed=777)[:, :-1].astype(np.int32))}
+    best_w, best_thr, chosen = None, 0.0, None
+    for w in (2, 4, 8, 16, 32):
+        spec = T.build_tree(accs, w)
+        eng = SpeculativeEngine(model, heads, params, spec, max_len=256)
+        out, st = eng.generate(cal_prompt, 48)            # warm-up + measure
+        t = float(np.median(st["step_times"][1:]))
+        thr = st["acceptance_length"] / t
+        print(f"  W={w:3d}: E[AL]={T.expected_acceptance_length(spec, accs):.2f} "
+              f"measured AL={st['acceptance_length']:.2f} "
+              f"step={t*1e3:.1f}ms thr={thr:.1f} tok/s")
+        if thr > best_thr:
+            best_w, best_thr, chosen = w, thr, spec
+    print(f"  ARCA chose width={best_w} (measured-throughput mode)")
+
+    # ---- 4. serve: sequential vs Ghidorah ---------------------------
+    print(f"[4/4] serving {args.tokens} tokens")
+    prompt = {"tokens": jnp.asarray(
+        data.sample(1, 32, seed=999)[:, :-1].astype(np.int32))}
+    max_len = 32 + args.tokens + 8
+
+    seq_eng = BatchEngine(model, params, max_len=max_len)
+    out_seq, _ = seq_eng.generate(prompt, args.tokens)       # warm + result
+    t0 = time.perf_counter()
+    out_seq, _ = seq_eng.generate(prompt, args.tokens)
+    t_seq = time.perf_counter() - t0
+
+    spec_eng = SpeculativeEngine(model, heads, params, chosen,
+                                 max_len=max_len)
+    out_spec, stats = spec_eng.generate(prompt, args.tokens)
+    t0 = time.perf_counter()
+    out_spec, stats = spec_eng.generate(prompt, args.tokens)
+    t_spec = time.perf_counter() - t0
+
+    match = np.array_equal(out_spec[:args.tokens], out_seq[0][:args.tokens])
+    print(f"  sequential: {args.tokens/t_seq:7.1f} tok/s")
+    print(f"  ghidorah:   {args.tokens/t_spec:7.1f} tok/s  "
+          f"(REAL acceptance length {stats['acceptance_length']:.2f}, "
+          f"{stats['steps']} steps)")
+    print(f"  lossless: {match}; wall speedup {t_seq/t_spec:.2f}x "
+          f"(CPU smoke scale — algorithmic gain; HCMP parallel gain needs "
+          f"the pod)")
+    assert match, "speculative output diverged from sequential!"
+
+
+if __name__ == "__main__":
+    main()

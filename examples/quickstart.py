@@ -1,0 +1,60 @@
+"""Quickstart: build a model from the registry, prefill, decode, and run one
+Ghidorah speculative step.
+
+  PYTHONPATH=src python examples/quickstart.py [--arch qwen2-0.5b-smoke]
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.core.speculative import tree as T
+from repro.core.speculative.medusa import init_medusa
+from repro.core.speculative.verify import spec_prefill, spec_step
+from repro.models.api import get_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b-smoke")
+    args = ap.parse_args()
+
+    print("registry:", ", ".join(list_archs()))
+    cfg = get_config(args.arch)
+    model = get_model(cfg)
+    print(f"\n{cfg.name}: {cfg.num_layers}L d={cfg.d_model} "
+          f"{cfg.num_heads}H(kv={cfg.num_kv_heads}) "
+          f"{cfg.param_count()/1e6:.1f}M params ({model.family})")
+
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0,
+                              cfg.vocab_size)
+
+    # 1. prefill
+    logits, extras, cache = model.prefill(params, {"tokens": toks},
+                                          max_len=128)
+    print(f"prefill: logits {logits.shape}")
+
+    # 2. sequential decode
+    cur = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    for i in range(4):
+        lg, cache = model.decode(params, cache, cur)
+        cur = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+        print(f"decode step {i}: token {int(cur[0,0])}")
+
+    # 3. one speculative step (width-8 verification tree)
+    heads = init_medusa(cfg, jax.random.PRNGKey(2))
+    spec = T.build_tree(T.default_accs(cfg.medusa_heads, cfg.medusa_top_k), 8)
+    tr = T.Tree.from_spec(spec)
+    state = spec_prefill(model, params, heads, {"tokens": toks}, max_len=128)
+    state, emitted, n = spec_step(model, params, heads, tr, state)
+    print(f"speculative step: verified 8 tree nodes, "
+          f"accepted {int(n[0])} token(s): "
+          f"{[int(t) for t in emitted[0][:int(n[0])]]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Shared constants for the benchmark harness."""
+
+# Paper Table I, MBPP row (widths 4..64) — used as measured-AL input when
+# predicting Fig. 9 (the paper's headline speedup is quoted on MBPP).
+PAPER_MBPP_AL = [2.54, 2.89, 3.27, 3.55, 3.74]

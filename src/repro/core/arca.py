@@ -1,0 +1,276 @@
+"""ARCA — Architecture-aware profiling (paper §III-C).
+
+Determines the *speculative strategy* (verification width + tree) and the
+*partitioning strategy* (per-unit ratio), balancing acceptance length
+against hardware parallelism and memory contention.
+
+Two time sources feed the same search:
+
+  * ``Soc`` — an analytic model of a unified-memory CPU+GPU SoC, calibrated
+    to the paper's Jetson Xavier NX testbed (GPU @204 MHz, 6-core ARM
+    @1.9 GHz, shared LPDDR4x).  Used to reproduce Fig. 9 / Fig. 10.
+  * ``roofline_time`` — the TPU-mesh roofline (compute/HBM/ICI terms from
+    the dry-run artifacts).  Used by the serving launcher on the pod.
+
+On real hardware the same ``choose_strategy`` runs over measured step times
+(the profiling hooks in runtime/engine.py) — the search is identical, only
+the timer changes (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core.speculative import tree as T
+
+WIDTHS = (1, 2, 4, 8, 16, 32, 64)       # powers of two (§III-C2, wave quant)
+
+
+# ===========================================================================
+# workload model (per decode step)
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    weight_bytes: float          # active weight bytes read once per step
+    linear_flops: float          # 2 * N_active * W
+    attn_dense_flops: float      # W x ctx (the KV-cache part)
+    attn_sparse_flops: float     # tree-mask nnz part
+    kv_bytes: float              # KV cache bytes read
+    sync_points: int             # layer-boundary synchronizations
+
+
+def decode_workload(cfg, width: int, ctx: int,
+                    spec: Optional[T.TreeSpec] = None,
+                    dtype_bytes: int = 2) -> Workload:
+    n_active = cfg.active_param_count()
+    L = cfg.num_layers
+    H, hd, Hkv = cfg.num_heads, cfg.head_dim, cfg.num_kv_heads
+    nnz = int(spec.mask.sum()) if spec is not None else width * (width + 1) // 2
+    return Workload(
+        weight_bytes=n_active * dtype_bytes,
+        linear_flops=2.0 * n_active * width,
+        attn_dense_flops=2.0 * 2 * width * ctx * H * hd * L,
+        attn_sparse_flops=2.0 * 2 * nnz * H * hd * L,
+        kv_bytes=2.0 * ctx * Hkv * hd * L * dtype_bytes,
+        sync_points=2 * L,
+    )
+
+
+# ===========================================================================
+# unified-memory SoC model (Jetson NX calibration)
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class Unit:
+    name: str
+    flops: float                 # peak FLOP/s (fp16)
+    gemm_eff: float              # achieved fraction on dense GEMM (linears)
+    sparse_eff: float            # achieved fraction on tree-sparse work
+    attn_eff: float = 0.5        # achieved fraction on dense KV-cache
+                                 # attention (streaming, smaller GEMMs; CPUs
+                                 # are disproportionately bad here — the
+                                 # paper's computing-affinity argument)
+    bw_frac: float = 0.6         # fraction of shared DRAM bw one unit can
+                                 # pull alone (a single engine cannot
+                                 # saturate unified LPDDR — the reason
+                                 # hetero parallelism beats the 1-unit
+                                 # memory floor)
+
+
+@dataclasses.dataclass(frozen=True)
+class Soc:
+    units: Sequence[Unit]
+    dram_bw: float               # shared bytes/s (both units together)
+    sync_latency: float          # per cross-unit sync (unified-memory page)
+    contention: float = 1.08     # concurrent-access DRAM efficiency loss
+    em_ratio_err: float = 0.03   # EdgeNN's solo-profiled (contention-
+                                 # UNAWARE) partition ratio misallocation —
+                                 # what ARCA's contention-aware refinement
+                                 # fixes (paper SIII-C3)
+
+    @property
+    def gpu(self):
+        return self.units[0]
+
+    @property
+    def cpu(self):
+        return self.units[1]
+
+
+# Jetson Xavier NX, clocks locked per paper §IV-A (GPU 204 MHz, CPU 1.9 GHz).
+# flops: 48 Volta tensor cores x 64 FMA x 2 x 204 MHz ~ 1.25e12 fp16;
+# 6 Carmel cores x 1.9 GHz x 2x128-bit NEON fp16 FMA ~ 0.18e12.
+# gemm_eff / bw_frac calibrated against Fig. 9 in benchmarks/throughput.py;
+# fitted values are recorded in EXPERIMENTS.md.
+JETSON_NX = Soc(
+    units=(
+        Unit("volta-384c@204MHz", flops=1.25e12, gemm_eff=0.62,
+             sparse_eff=0.05, attn_eff=0.55, bw_frac=0.55),
+        Unit("carmel-6c@1.9GHz", flops=182e9, gemm_eff=0.50,
+             sparse_eff=0.35, attn_eff=0.12, bw_frac=0.50),
+    ),
+    dram_bw=59.7e9,
+    sync_latency=1e-4,           # <0.1 ms page sync (paper §II-D)
+)
+
+
+def _mem_time(soc: Soc, bytes_, concurrent: bool, unit: "Unit" = None) -> float:
+    if concurrent:
+        bw = soc.dram_bw / soc.contention
+    else:
+        bw = soc.dram_bw * (unit or soc.gpu).bw_frac
+    return bytes_ / bw
+
+
+def step_time_sequential(soc: Soc, cfg, ctx: int) -> float:
+    """1-token decode on the GPU (the paper's Sequential baseline)."""
+    wl = decode_workload(cfg, 1, ctx)
+    g = soc.gpu
+    t_c = (wl.linear_flops + wl.attn_dense_flops) / (g.flops * g.gemm_eff)
+    t_m = _mem_time(soc, wl.weight_bytes + wl.kv_bytes, concurrent=False)
+    return max(t_c, t_m)
+
+
+def step_time_medusa_gpu(soc: Soc, cfg, width: int, ctx: int,
+                         spec=None) -> float:
+    """Medusa on the GPU only; sparse part executed as dense-with-mask."""
+    wl = decode_workload(cfg, width, ctx, spec)
+    g = soc.gpu
+    dense_as_sparse = 2.0 * 2 * width * width * cfg.num_heads * cfg.head_dim \
+        * cfg.num_layers                      # full WxW, mask applied after
+    t_c = (wl.linear_flops + wl.attn_dense_flops + dense_as_sparse) \
+        / (g.flops * g.gemm_eff)
+    t_m = _mem_time(soc, wl.weight_bytes + wl.kv_bytes, concurrent=False)
+    return max(t_c, t_m)
+
+
+def _split_compute(soc: Soc, flops: float, ratio: float) -> float:
+    """Column-split GEMM time when GPU takes ``ratio`` of the columns."""
+    g, c = soc.gpu, soc.cpu
+    return max(flops * ratio / (g.flops * g.gemm_eff),
+               flops * (1 - ratio) / (c.flops * c.gemm_eff))
+
+
+def optimal_ratio(soc: Soc) -> float:
+    g, c = soc.gpu, soc.cpu
+    eg, ec = g.flops * g.gemm_eff, c.flops * c.gemm_eff
+    return eg / (eg + ec)
+
+
+def step_time_megatron(soc: Soc, cfg, width: int, ctx: int, spec=None,
+                       ratio: Optional[float] = None) -> float:
+    """Medusa+EM baseline: Megatron (col,row) TP across CPU+GPU with an
+    AllReduce every two linears (extra read+write of activations), attention
+    split by heads (both units run dense AND masked-sparse work), zero-copy
+    sync at every boundary."""
+    wl = decode_workload(cfg, width, ctx, spec)
+    if ratio is None:
+        ratio = max(0.05, optimal_ratio(soc) - soc.em_ratio_err)
+    dense_as_sparse = 2.0 * 2 * width * width * cfg.num_heads * cfg.head_dim \
+        * cfg.num_layers
+    t_c = _split_compute(soc, wl.linear_flops, ratio)
+    # head-split attention: the EdgeNN ratio comes from LINEAR-layer solo
+    # times, but each unit also gets that share of dense + masked-sparse
+    # attention, where the CPU's achievable efficiency is far lower — the
+    # affinity miss Ghidorah fixes (paper SIII-B2)
+    g, c = soc.gpu, soc.cpu
+    attn_work = wl.attn_dense_flops + dense_as_sparse
+    t_attn = max(attn_work * ratio / (g.flops * g.attn_eff),
+                 attn_work * (1 - ratio) / (c.flops * c.attn_eff))
+    # AllReduce: read both partials + write combined (3x activation traffic)
+    act_bytes = 2.0 * width * cfg.d_model * cfg.num_layers * 2
+    t_m = _mem_time(soc, wl.weight_bytes + wl.kv_bytes + 3 * act_bytes,
+                    concurrent=True)
+    t_sync = soc.sync_latency * wl.sync_points
+    return max(t_c + t_attn, t_m) + t_sync
+
+
+def step_time_ghidorah(soc: Soc, cfg, width: int, ctx: int, spec=None,
+                       ratio: Optional[float] = None) -> float:
+    """HCMP: column-only splits (no AllReduce traffic), dense attention to
+    the GPU, tree-sparse attention to the CPU (optimized SpMM), online-
+    softmax merge fused into the reduce (paper: 'almost no overhead')."""
+    wl = decode_workload(cfg, width, ctx, spec)
+    ratio = optimal_ratio(soc) if ratio is None else ratio
+    g, c = soc.gpu, soc.cpu
+    t_lin = _split_compute(soc, wl.linear_flops, ratio)
+    t_attn = max(wl.attn_dense_flops / (g.flops * g.attn_eff),
+                 wl.attn_sparse_flops / (c.flops * c.sparse_eff))
+    t_m = _mem_time(soc, wl.weight_bytes + wl.kv_bytes, concurrent=True)
+    t_sync = soc.sync_latency * (wl.sync_points / 2)   # one sync per layer
+    return max(t_lin + t_attn, t_m) + t_sync
+
+
+def contention_aware_ratio(soc: Soc, cfg, width: int, ctx: int,
+                           iters: int = 12) -> float:
+    """§III-C3: start from solo execution times, refine by bisection on the
+    bottleneck unit under the contention model."""
+    lo, hi = 0.05, 0.95
+    wl = decode_workload(cfg, width, ctx)
+    g, c = soc.gpu, soc.cpu
+    for _ in range(iters):
+        r = 0.5 * (lo + hi)
+        tg = wl.linear_flops * r / (g.flops * g.gemm_eff)
+        tc = wl.linear_flops * (1 - r) / (c.flops * c.gemm_eff)
+        if tg > tc:
+            hi = r
+        else:
+            lo = r
+    return 0.5 * (lo + hi)
+
+
+# ===========================================================================
+# strategy search (speculative + partitioning)
+# ===========================================================================
+@dataclasses.dataclass
+class Strategy:
+    width: int
+    tree: T.TreeSpec
+    ratio: float
+    acceptance: float
+    step_time: float
+    throughput: float            # tokens/s
+
+
+def choose_strategy(cfg, accs: np.ndarray, ctx: int = 256,
+                    soc: Soc = JETSON_NX,
+                    time_fn: Optional[Callable] = None,
+                    widths: Sequence[int] = WIDTHS,
+                    evaluator=None) -> Dict[int, Strategy]:
+    """For every candidate width: build the tree (greedy + refine), estimate
+    acceptance, time the step, compute tokens/s.  Returns {width: Strategy};
+    the deployment choice is the argmax."""
+    out = {}
+    for w in widths:
+        spec = (T.spec_from_nodes([(-1, 0, 0)]) if w == 1
+                else T.build_tree(accs, w, evaluator=evaluator))
+        al = T.expected_acceptance_length(spec, accs)
+        ratio = contention_aware_ratio(soc, cfg, w, ctx)
+        if time_fn is not None:
+            t = time_fn(cfg, w, ctx, spec)
+        elif w == 1:
+            t = step_time_sequential(soc, cfg, ctx)
+        else:
+            t = step_time_ghidorah(soc, cfg, w, ctx, spec, ratio)
+        out[w] = Strategy(width=w, tree=spec, ratio=ratio, acceptance=al,
+                          step_time=t, throughput=al / t)
+    return out
+
+
+def best(strategies: Dict[int, Strategy]) -> Strategy:
+    return max(strategies.values(), key=lambda s: s.throughput)
+
+
+# ===========================================================================
+# TPU-mesh roofline time source (per-device quantities from the dry-run)
+# ===========================================================================
+def roofline_time(flops_per_dev: float, hbm_bytes_per_dev: float,
+                  coll_bytes_per_dev: float, *, peak=197e12, hbm=819e9,
+                  ici=50e9) -> dict:
+    t_c = flops_per_dev / peak
+    t_m = hbm_bytes_per_dev / hbm
+    t_x = coll_bytes_per_dev / ici
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "bound": dom[1], "step_s": max(t_c, t_m, t_x)}

@@ -1,0 +1,137 @@
+"""HCMP sharding rules (paper §III-B) and the Megatron baseline, as
+PartitionSpec pytrees for pjit.
+
+Two tensor-parallel modes over the `model` mesh axis:
+
+  hcmp      column-only split of EVERY linear (paper §III-B1).  Activations
+            come out feature-sharded and are re-gathered at the next
+            consumer — the collective-minimal translation of "each unit
+            writes its own slice to its memory region; consumers read both"
+            to a discrete-memory TPU mesh.  For decode (W<=64 tokens) the
+            gathered activations are tiny vs the Megatron AllReduce pattern
+            which moves the same bytes TWICE (reduce + broadcast semantics).
+  megatron  the paper's baseline (Medusa+EM): (column, row) pairs with an
+            AllReduce closing every two linears.
+
+``fsdp=True`` additionally shards the non-`model` weight dim on `data`
+(needed for >=30B weights).  MoE experts shard on `model` (expert
+parallelism); the KV cache shards its *sequence* dim on `model` — GQA
+kv-head counts (2..8) don't divide a 16-way axis, and sequence sharding is
+what enables the paper's online-softmax partial merge across shards.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# leaf-name rule tables ----------------------------------------------------
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "up", "w", "out", "lm_head",
+        "in_z", "in_x", "conv_wx"}   # mamba z/x paths stay model-sharded
+_ROW = {"wo", "w_down", "down", "out_proj"}          # row-split in megatron
+_SHARD_1D = {"bq", "bk", "bv", "conv_bx", "norm_mamba"}  # follow column shards
+_MOE = {"w_gate", "w_up", "w_down"}                  # 3D (E, ., .)
+
+
+def _names(path):
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(p.key)
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            out.append(p.name)
+    return out
+
+
+def _leaf_spec(cfg, names, shape, mode, fsdp):
+    name = names[-1]
+    stacked = names and any(n in ("layers", "encoder", "decoder") for n in names)
+    moe = "moe" in names
+    xlstm_block = "block" in names                 # xLSTM internals: replicate
+    nd = len(shape)
+    lead = (None,) if stacked else ()
+    core = nd - len(lead)
+
+    def spec(*axes):
+        return P(*(lead + axes + (None,) * (core - len(axes))))
+
+    if xlstm_block:
+        return spec()
+    if moe and nd - len(lead) == 3 and name in _MOE:
+        # experts on model; fsdp shards the d/f dim on data
+        return spec("model", "data" if fsdp else None, None)
+    if name == "router":
+        return spec()
+    if name == "embed":
+        # (V, d): vocab column-shard; fsdp shards d
+        return P("model", "data" if fsdp else None)
+    if nd - len(lead) == 2 and name in _COL:
+        return spec("data" if fsdp else None, "model")
+    if nd - len(lead) == 2 and name in _ROW:
+        if mode == "megatron":
+            return spec("model", "data" if fsdp else None)
+        return spec("data" if fsdp else None, "model")   # hcmp: column again
+    if nd - len(lead) == 1 and name in _SHARD_1D:
+        return spec("model")
+    return spec()                                   # norms, scalars: replicated
+
+
+def param_specs(cfg, params, mode="hcmp"):
+    """params: pytree (or eval_shape struct) -> matching PartitionSpec tree."""
+    assert mode in ("hcmp", "megatron")
+    fsdp = cfg.fsdp
+
+    def rule(path, leaf):
+        return _leaf_spec(cfg, _names(path), leaf.shape, mode, fsdp)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+# ---------------------------------------------------------------------------
+# cache + activation specs
+# ---------------------------------------------------------------------------
+def cache_specs(cfg, cache, *, batch_axes=("pod", "data"), seq_axis="model"):
+    """KV cache: batch on data axes, SEQUENCE on `model` (HCMP online-softmax
+    shard merge).  Recurrent states: batch on data axes, heads on `model`
+    where divisible."""
+    dp = batch_axes
+
+    def rule(path, leaf):
+        names = _names(path)
+        name = names[-1]
+
+        def bax(bdim):
+            # batch=1 (long_500k single-sample decode) cannot shard: replicate
+            return dp if leaf.shape[bdim] > 1 else None
+
+        if name in ("k", "v"):            # (L, B, S, Hkv, hd)
+            return P(None, bax(1), seq_axis, None, None)
+        if name in ("cross_k", "cross_v"):  # (L, B, Senc, Hkv, hd)
+            hkv = leaf.shape[3]
+            head_ax = "model" if hkv % 16 == 0 else None
+            return P(None, bax(1), None, head_ax, None)
+        if name == "ssm":                 # (L, B, nh, hd, N)
+            nh = leaf.shape[2]
+            return P(None, bax(1), "model" if nh % 16 == 0 else None, None, None)
+        if name == "conv":                # (L, B, K-1, C) — tiny, replicate C
+            return P(None, bax(1), None, None)
+        if name in ("key_pos", "pos"):
+            return P() if leaf.ndim == 0 else P(None)
+        # xlstm layer states (B, ...) — batch only
+        if leaf.ndim >= 1 and "layers" in names:
+            return P(bax(0), *(None,) * (leaf.ndim - 1))
+        return P(*(None,) * leaf.ndim)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def batch_specs(batch, batch_axes=("pod", "data")):
+    """Input batches: shard dim0 (global batch) across the data axes;
+    batch=1 shapes fall back to replication."""
+    def rule(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] == 1:
+            return P(*(None,) * leaf.ndim)
+        return P(batch_axes, *(None,) * (leaf.ndim - 1))
+
+    return jax.tree_util.tree_map(rule, batch)

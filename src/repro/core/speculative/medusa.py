@@ -1,0 +1,59 @@
+"""Medusa drafting heads (paper's default speculative approach, §III-A).
+
+Each head h predicts the token at offset h+1 from the current hidden state:
+  head_h(x) = (x + silu(x @ W_h)) @ O_h        (ResBlock + linear)
+
+Heads are separate from base-model params (they're trained post-hoc; the
+end-to-end example trains them with the base model frozen).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def init_medusa(cfg, rng):
+    ks = jax.random.split(rng, cfg.medusa_heads)
+    dt = jnp.dtype(cfg.dtype)
+
+    def head_init(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "w": cm.dense_init(k1, cfg.d_model, cfg.d_model, dt, scale=0.02),
+            "out": cm.dense_init(k2, cfg.d_model, cfg.padded_vocab, dt),
+        }
+
+    return cm.stack_init(rng, cfg.medusa_heads, head_init)
+
+
+def medusa_logits(cfg, heads, hidden):
+    """hidden: (..., d) -> (..., H, V) — vmapped over stacked heads."""
+    def one(hp):
+        h = hidden + jax.nn.silu(hidden @ hp["w"])
+        return h @ hp["out"]
+
+    out = jax.vmap(one)(heads)                     # (H, ..., Vp)
+    return jnp.moveaxis(out, 0, -2)[..., :cfg.vocab_size]
+
+
+def draft_candidates(cfg, heads, hidden, top_k):
+    """hidden: (B, d) -> candidate tokens (B, H, K) + probs (B, H, K)."""
+    logits = medusa_logits(cfg, heads, hidden)     # (B, H, V)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    vals, idx = jax.lax.top_k(probs, top_k)
+    return idx.astype(jnp.int32), vals
+
+
+def expand_tree_tokens(tree, cur_token, candidates):
+    """Fill tree slots: node 0 = cur committed token; node n (depth d>0) =
+    head (d-1)'s rank[n] candidate.
+
+    cur_token: (B,), candidates: (B, H, K) -> (B, W) int32.
+    """
+    B = cur_token.shape[0]
+    head_idx = jnp.maximum(tree.depth - 1, 0)          # (W,)
+    cand = candidates[:, head_idx, tree.rank]          # (B, W)
+    root = jnp.zeros_like(tree.depth) == tree.depth    # depth==0 mask
+    return jnp.where(root[None, :], cur_token[:, None], cand)

@@ -1,0 +1,40 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; TPU is the
+compile target).  Set ``repro.kernels.ops.INTERPRET = False`` on real TPU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import sparse_tree as _sparse
+from repro.kernels import tree_attention as _tree
+
+INTERPRET = True
+
+
+def tree_attention(q, ck, cv, k_new, v_new, key_pos, pos, tree_depth,
+                   tree_mask, *, window=0, block_s=None):
+    """Signature used by models/attention.py (backend="pallas")."""
+    q_pos = (pos + tree_depth).astype(jnp.int32)           # (W,)
+    if window:
+        lo = q_pos - window
+    else:
+        lo = jnp.full_like(q_pos, -1)
+    kwargs = {"interpret": INTERPRET}
+    if block_s:
+        kwargs["block_s"] = block_s
+    return _tree.tree_attention(q, ck, cv, k_new, v_new, key_pos, q_pos, lo,
+                                tree_mask, **kwargs)
+
+
+def decode_attention(q, ck, cv, k_new, v_new, key_pos, pos, *, window=0):
+    """Plain decode = W=1 tree."""
+    return tree_attention(q, ck, cv, k_new, v_new, key_pos, pos,
+                          jnp.zeros((1,), jnp.int32),
+                          jnp.ones((1, 1), bool), window=window)
+
+
+def sparse_tree_attention(q, k_new, v_new, tree_mask):
+    return _sparse.sparse_tree_attention(q, k_new, v_new, tree_mask,
+                                         interpret=INTERPRET)

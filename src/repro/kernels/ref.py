@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets).
+
+These mirror the models/attention.py reference math but with the exact
+argument layout the kernels take, so tests can sweep shapes/dtypes and
+assert kernel == oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def tree_attention_ref(q, ck, cv, k_new, v_new, key_pos, q_pos, lo,
+                       tree_mask):
+    """Fused dense(cache)+sparse(tree) verification attention.
+
+    q:        (B, W, Hq, hd)
+    ck, cv:   (B, S, Hkv, hd)   KV cache
+    k_new:    (B, W, Hkv, hd)   fresh tree KVs
+    key_pos:  (S,) int32        absolute position per cache slot (-1 empty)
+    q_pos:    (W,) int32        absolute position per query node
+    lo:       (W,) int32        window lower bound per query (-1 = no window)
+    tree_mask:(W, W) bool       ancestor-or-self
+    returns   (B, W, Hq, hd) in q.dtype
+    """
+    scale = q.shape[-1] ** -0.5
+    cache_ok = ((key_pos[None, :] >= 0)
+                & (key_pos[None, :] <= q_pos[:, None])
+                & (key_pos[None, :] > lo[:, None]))            # (W, S)
+    dense = cm.gqa_attend_partial(q, ck, cv, cache_ok[None, None], scale)
+    sparse = cm.gqa_attend_partial(q, k_new, v_new,
+                                   tree_mask[None, None], scale)
+    return cm.merge_partials([dense, sparse]).astype(q.dtype)
+
+
+def decode_attention_ref(q, ck, cv, k_new, v_new, key_pos, q_pos, lo):
+    """W=1 special case (plain decode)."""
+    W = q.shape[1]
+    assert W == 1
+    return tree_attention_ref(q, ck, cv, k_new, v_new, key_pos, q_pos, lo,
+                              jnp.ones((1, 1), bool))
+
+
+def sparse_tree_ref(q, k_new, v_new, tree_mask):
+    """Sparse-part-only oracle (paper Fig. 10b comparisons): masked softmax
+    attention among the W tree tokens.  Returns normalized output."""
+    scale = q.shape[-1] ** -0.5
+    return cm.gqa_attend(q, k_new, v_new, tree_mask[None, None], scale)

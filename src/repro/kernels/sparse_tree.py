@@ -1,0 +1,58 @@
+"""Pallas kernel: sparse-part-only tree attention (block-masked).
+
+TPU-native counterpart of the paper's ARM COO SpMM (§III-B3): instead of
+scalar gather/FMA over COO indices (which would idle the MXU), the W×W tree
+correlation is computed as one VMEM-resident masked matmul.  Benchmarked in
+benchmarks/sparse.py against (a) the naive per-element oracle and (b) the
+dense-with-mask-over-everything strategy, mirroring Fig. 10b.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, scale):
+    q = q_ref[0, 0].astype(jnp.float32)            # (GW, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (W, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    tm = mask_ref[...]                             # (W, W)
+    GW = q.shape[0]
+    W = tm.shape[0]
+    G = GW // W
+    ok = jnp.broadcast_to(tm[None], (G, W, W)).reshape(GW, W)
+    s = jnp.where(ok, (q @ k.T) * scale, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(ok, jnp.exp(s - m), 0.0)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o_ref[0, 0] = ((p @ v) / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparse_tree_attention(q, k_new, v_new, tree_mask, *, interpret=True):
+    """q: (B, W, Hq, hd); returns (B, W, Hq, hd) — sparse part only."""
+    B, W, Hq, hd = q.shape
+    Hkv = k_new.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, W, Hkv, G, hd).transpose(0, 2, 3, 1, 4).reshape(
+        B, Hkv, G * W, hd)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=hd ** -0.5),
+        grid=(B, Hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G * W, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, W, 1, hd), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, W, 1, hd), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((W, W), lambda b, h: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G * W, hd), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G * W, hd), q.dtype),
+        interpret=interpret,
+    )(qg, k_new, v_new, tree_mask)
+    return out.reshape(B, Hkv, G, W, hd).transpose(0, 3, 1, 2, 4).reshape(
+        B, W, Hq, hd)

@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: fused tree-verification attention.
+
+The Ghidorah dense/sparse split, TPU-native (DESIGN.md §2): W draft queries
+attend to the KV cache (dense part, tiled over KV blocks in VMEM) and to the
+W fresh tree KVs under the ancestor mask (sparse part, VMEM-resident), with
+a single online-softmax accumulator carried across the grid — the kernel
+form of the paper's Eq.-1 online-softmax merge.
+
+Layout: one (batch, kv-head) pair per grid row; queries are grouped
+(G = Hq/Hkv rows per kv head) so the score matmul is (G*W, hd) x (hd, BS) —
+MXU-aligned when BS and hd are multiples of 128 and G*W of 8.
+
+Grid: (B, Hkv, nblocks+1); the last block handles the tree part and the
+normalization + writeback.  Scratch (o, m, l) persists across the KV-block
+axis (sequential minor-most grid dimension on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_S = 512
+
+
+def _kernel(q_ref, ck_ref, cv_ref, kn_ref, vn_ref, kpos_ref, qpos_ref,
+            lo_ref, mask_ref, o_ref, o_acc, m_acc, l_acc, *, nblocks, scale):
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        o_acc[...] = jnp.zeros_like(o_acc)
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (GW, hd)
+    GW = q.shape[0]
+    W = qpos_ref.shape[0]
+    G = GW // W
+
+    def online_update(s, v, valid):
+        """s: (GW, T) scores; v: (T, hd); valid: (GW, T) bool."""
+        s = jnp.where(valid, s * scale, NEG_INF)
+        m_new = jnp.maximum(m_acc[...], jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_acc[...] - m_new)
+        l_acc[...] = l_acc[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        o_acc[...] = o_acc[...] * corr + p @ v
+        m_acc[...] = m_new
+
+    @pl.when(i < nblocks)
+    def _cache_block():
+        k = ck_ref[0, :, 0].astype(jnp.float32)    # (BS, hd)
+        v = cv_ref[0, :, 0].astype(jnp.float32)
+        kpos = kpos_ref[...]                       # (BS,)
+        qpos = qpos_ref[...]                       # (W,)
+        lo = lo_ref[...]
+        ok = ((kpos[None, :] >= 0)
+              & (kpos[None, :] <= qpos[:, None])
+              & (kpos[None, :] > lo[:, None]))     # (W, BS)
+        ok = jnp.broadcast_to(ok[None], (G, W, ok.shape[1])).reshape(GW, -1)
+        online_update(q @ k.T, v, ok)
+
+    @pl.when(i == nblocks)
+    def _tree_block():
+        k = kn_ref[0, :, 0].astype(jnp.float32)    # (W, hd)
+        v = vn_ref[0, :, 0].astype(jnp.float32)
+        tm = mask_ref[...]                         # (W, W) bool
+        ok = jnp.broadcast_to(tm[None], (G,) + tm.shape).reshape(GW, -1)
+        online_update(q @ k.T, v, ok)
+        l_safe = jnp.maximum(l_acc[...], 1e-30)
+        o_ref[0, 0] = (o_acc[...] / l_safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def tree_attention(q, ck, cv, k_new, v_new, key_pos, q_pos, lo, tree_mask,
+                   *, block_s=DEFAULT_BLOCK_S, interpret=True):
+    """See ref.tree_attention_ref for semantics.  q: (B, W, Hq, hd)."""
+    B, W, Hq, hd = q.shape
+    S, Hkv = ck.shape[1], ck.shape[2]
+    G = Hq // Hkv
+
+    # pad cache length to a block multiple; padded slots get key_pos = -1
+    bs = min(block_s, max(S, 1))
+    pad = (-S) % bs
+    if pad:
+        ck = jnp.pad(ck, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(cv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        key_pos = jnp.pad(key_pos, (0, pad), constant_values=-1)
+    nblocks = (S + pad) // bs
+
+    # regroup queries: (B, Hkv, G*W, hd)
+    qg = q.reshape(B, W, Hkv, G, hd).transpose(0, 2, 3, 1, 4).reshape(
+        B, Hkv, G * W, hd)
+    # cache: (B, S, Hkv, hd) kept as-is; block over S
+    kn = k_new                                      # (B, W, Hkv, hd)
+
+    grid = (B, Hkv, nblocks + 1)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nblocks=nblocks, scale=hd ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G * W, hd), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, i, _n=nblocks: (b, jnp.minimum(i, _n - 1), h, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, i, _n=nblocks: (b, jnp.minimum(i, _n - 1), h, 0)),
+            pl.BlockSpec((1, W, 1, hd), lambda b, h, i: (b, 0, h, 0)),
+            pl.BlockSpec((1, W, 1, hd), lambda b, h, i: (b, 0, h, 0)),
+            pl.BlockSpec((bs,), lambda b, h, i, _n=nblocks: (jnp.minimum(i, _n - 1),)),
+            pl.BlockSpec((W,), lambda b, h, i: (0,)),
+            pl.BlockSpec((W,), lambda b, h, i: (0,)),
+            pl.BlockSpec((W, W), lambda b, h, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G * W, hd), lambda b, h, i: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G * W, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * W, hd), jnp.float32),   # o accumulator
+            pltpu.VMEM((G * W, 1), jnp.float32),    # running max m
+            pltpu.VMEM((G * W, 1), jnp.float32),    # running sum l
+        ],
+        interpret=interpret,
+    )(qg, ck, cv, kn, v_new, key_pos, q_pos, lo, tree_mask)
+    # regroup back: (B, W, Hq, hd)
+    return out.reshape(B, Hkv, G, W, hd).transpose(0, 3, 1, 2, 4).reshape(
+        B, W, Hq, hd)

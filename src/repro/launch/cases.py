@@ -1,0 +1,194 @@
+"""Dry-run case construction: (arch × input-shape × TP-mode) -> a jittable
+step function + ShapeDtypeStruct arguments + NamedShardings.
+
+No device memory is ever allocated here: params/caches/batches are
+``jax.eval_shape`` structs (weak-type-correct, shardable).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.core.hcmp import sharding as shd
+from repro.launch.mesh import data_axes
+from repro.models import encdec, hybrid, xlstm_model
+from repro.models.api import get_model
+from repro.runtime.cache import Cache, init_kv_cache
+from repro.training.optimizer import AdamWState, adamw_init
+from repro.training.train import train_step
+
+
+def decode_window(cfg, shape) -> int:
+    """Sliding window is engaged only for the long-context decode shape."""
+    if shape.seq_len > 32_768 and cfg.sliding_window:
+        return cfg.sliding_window
+    if cfg.name.startswith("llava"):
+        return cfg.sliding_window          # Mistral's window is native
+    return 0
+
+
+def supports(cfg, shape) -> tuple[bool, str]:
+    """long_500k requires sub-quadratic decode (window or recurrent state)."""
+    if shape.name == "long_500k":
+        if cfg.is_pure_recurrent or cfg.is_recurrent or cfg.sliding_window:
+            return True, ""
+        return False, "full-attention arch without sliding window"
+    return True, ""
+
+
+# --------------------------------------------------------------------------
+def _batch_struct(cfg, shape):
+    B = shape.global_batch
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        S = shape.seq_len - (cfg.num_frontend_tokens if cfg.frontend == "vision" else 0)
+        b = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+             "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    elif shape.kind == "prefill":
+        S = shape.seq_len - (cfg.num_frontend_tokens if cfg.frontend == "vision" else 0)
+        b = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:                                  # decode: one new token
+        b = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        b["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_frontend_tokens, cfg.d_model), dt)
+    if cfg.frontend == "audio" and shape.kind != "decode":
+        b["frame_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq_len, cfg.d_model), dt)
+    return b
+
+
+def _cache_struct(cfg, shape):
+    B = shape.global_batch
+    window = decode_window(cfg, shape)
+    size = min(shape.seq_len, window) if window else shape.seq_len
+
+    def build():
+        if cfg.is_encoder_decoder:
+            kv = init_kv_cache(cfg.num_layers, B, size, cfg.num_kv_heads,
+                               cfg.head_dim, window=window,
+                               dtype=jnp.dtype(cfg.dtype))
+            ck = jnp.zeros((cfg.num_layers, B, cfg.encoder_seq_len,
+                            cfg.num_kv_heads, cfg.head_dim), jnp.dtype(cfg.dtype))
+            return Cache(kv=kv, cross_k=ck, cross_v=ck)
+        if cfg.arch_type == "hybrid":
+            return hybrid.init_cache(cfg, B, size, window=window)
+        if cfg.arch_type == "ssm":
+            return xlstm_model.init_cache(cfg, B)
+        return Cache(kv=init_kv_cache(cfg.num_layers, B, size,
+                                      cfg.num_kv_heads, cfg.head_dim,
+                                      window=window, dtype=jnp.dtype(cfg.dtype)))
+
+    return jax.eval_shape(build)
+
+
+def shallow_clone(cfg, L: int, *, with_site: bool = False):
+    """Full-width config with L UNROLLED layers — used by the dry-run's
+    cost-correction lowers (XLA cost_analysis counts a scan body once, so the
+    scanned stack under-reports per-layer cost; see dryrun.corrected_costs).
+
+    ``with_site`` (hybrid): include exactly one shared-attention site."""
+    import dataclasses
+    kw = dict(num_layers=L, unroll_layers=True, remat=False)
+    if cfg.block_pattern is not None:
+        kw["block_pattern"] = tuple([cfg.block_pattern[0]] * L)
+    if cfg.shared_attention_every:
+        kw["shared_attention_every"] = L if with_site else L + 1
+    if cfg.is_encoder_decoder:
+        kw["num_encoder_layers"] = L
+    return dataclasses.replace(cfg, **kw)
+
+
+def build_case(arch: str, shape_name: str, mesh, *, mode: str = "hcmp",
+               cfg_override=None, variant: str = "baseline"):
+    """Returns dict(step, args (structs), in_shardings, label).
+
+    variants:
+      baseline     — train_step / full-logits prefill / 1-token decode
+      last_logits  — prefill computing only the final position's logits
+                     (serving semantics; EXPERIMENTS §Perf hillclimb A)
+      verify16     — Ghidorah W=16 tree-verification step instead of the
+                     sequential decode step (the paper's technique at pod
+                     scale; §Perf hillclimb C)
+      remat        — train_step with activation checkpointing (§Perf
+                     iteration E: recover the peak-memory cost of blocked
+                     attention's saved tiles)
+    """
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    if variant == "remat":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, remat=True)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = supports(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name} unsupported: {why}")
+    model = get_model(cfg)
+    dp = data_axes(mesh)
+
+    params_struct = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0)))
+    pspecs = shd.param_specs(cfg, params_struct, mode=mode)
+    ns = lambda spec_tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+    batch = _batch_struct(cfg, shape)
+    bspecs = shd.batch_specs(batch, batch_axes=dp)
+
+    if shape.kind == "train":
+        opt_struct = jax.eval_shape(adamw_init, params_struct)
+        ospecs = AdamWState(mu=pspecs, nu=pspecs, step=P())
+
+        def step(params, opt_state, batch):
+            return train_step(cfg, model, params, opt_state, batch)
+
+        return {
+            "cfg": cfg, "label": f"{arch}/{shape_name}/{mode}",
+            "step": step,
+            "args": (params_struct, opt_struct, batch),
+            "in_shardings": (ns(pspecs), ns(ospecs), ns(bspecs)),
+        }
+
+    if shape.kind == "prefill":
+        window = cfg.sliding_window if cfg.name.startswith("llava") else 0
+        last = variant == "last_logits"
+
+        def step(params, batch):
+            return model.prefill(params, batch, max_len=shape.seq_len,
+                                 window=window, last_logits=last)
+
+        return {
+            "cfg": cfg, "label": f"{arch}/{shape_name}/{mode}/{variant}",
+            "step": step,
+            "args": (params_struct, batch),
+            "in_shardings": (ns(pspecs), ns(bspecs)),
+        }
+
+    # decode
+    cache_struct = _cache_struct(cfg, shape)
+    cspecs = shd.cache_specs(cfg, cache_struct, batch_axes=dp)
+
+    if variant == "verify16":
+        from repro.core.speculative import tree as T
+        spec = T.build_tree(T.default_accs(cfg.medusa_heads,
+                                           cfg.medusa_top_k), 16)
+        tr = T.Tree.from_spec(spec)
+        batch = {"tokens": jax.ShapeDtypeStruct((shape.global_batch, 16),
+                                                jnp.int32)}
+        bspecs = shd.batch_specs(batch, batch_axes=dp)
+
+        def step(params, cache, batch):
+            return model.verify(params, cache, batch["tokens"], tr)
+    else:
+        def step(params, cache, batch):
+            return model.decode(params, cache, batch["tokens"])
+
+    return {
+        "cfg": cfg, "label": f"{arch}/{shape_name}/{mode}/{variant}",
+        "step": step,
+        "args": (params_struct, cache_struct, batch),
+        "in_shardings": (ns(pspecs), ns(cspecs), ns(bspecs)),
+    }

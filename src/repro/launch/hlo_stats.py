@@ -1,0 +1,64 @@
+"""Parse collective-communication bytes out of (post-SPMD) HLO text.
+
+cost_analysis() has no collective term, so §Roofline's collective_bytes
+comes from summing the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute in the compiled module.
+The compiled module is per-device, so byte counts are per-device.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[2,1024,320]{2,1,0} all-gather(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op_name: bytes, ..., 'total': bytes} (per device)."""
+    out = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("=", 1)[0]:
+            continue                      # avoid double-counting async pairs
+        shape_str, op = m.group(1), m.group(2)
+        out[op] += _shape_bytes(shape_str)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def hlo_op_histogram(hlo_text: str, top: int = 15) -> dict:
+    """Rough opcode histogram (perf-iteration diffing aid)."""
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z0-9-]+)\(", line)
+        if m:
+            counts[m.group(1)] += 1
+    return dict(sorted(counts.items(), key=lambda kv: -kv[1])[:top])

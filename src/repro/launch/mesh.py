@@ -1,0 +1,29 @@
+"""Production mesh construction (TPU v5e pod targets).
+
+Defined as functions (NOT module-level constants) so importing never touches
+jax device state.  Hardware constants for the roofline live here too.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e per-chip constants (roofline terms, EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(n_model: int = 1):
+    """Tiny mesh over however many local devices exist (tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // n_model, n_model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

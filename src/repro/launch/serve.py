@@ -1,0 +1,82 @@
+"""Serving launcher: single-sample Ghidorah speculative serving or batched
+sequential serving on the local device(s).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b-smoke \
+      --mode ghidorah --width 8 --tokens 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import arca
+from repro.core.speculative import tree as T
+from repro.core.speculative.medusa import init_medusa
+from repro.data.pipeline import MarkovDataset
+from repro.models.api import get_model
+from repro.runtime.engine import BatchEngine, SpeculativeEngine
+from repro.training import checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b-smoke")
+    ap.add_argument("--mode", default="ghidorah",
+                    choices=["ghidorah", "sequential"])
+    ap.add_argument("--width", type=int, default=0,
+                    help="verification width (0 = let ARCA choose)")
+    ap.add_argument("--tokens", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--heads-ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+    if args.ckpt:
+        params = checkpoint.restore(args.ckpt, params)
+
+    data = MarkovDataset(cfg.vocab_size, seed=1)
+    toks = data.sample(args.batch, args.prompt_len, seed=7)[:, :-1]
+    batch = {"tokens": toks.astype(np.int32)}
+    max_len = args.prompt_len + args.tokens + 8
+
+    if args.mode == "sequential":
+        eng = BatchEngine(model, params, max_len=max_len)
+        t0 = time.perf_counter()
+        out, stats = eng.generate(batch, args.tokens)
+        dt = time.perf_counter() - t0
+        print(f"[serve] sequential: {out.shape[1]} tokens/seq x {args.batch} "
+              f"in {dt:.2f}s ({out.size / dt:.1f} tok/s)")
+        return
+
+    heads = init_medusa(cfg, jax.random.PRNGKey(args.seed + 1))
+    if args.heads_ckpt:
+        heads = checkpoint.restore(args.heads_ckpt, heads)
+    accs = T.default_accs(cfg.medusa_heads, cfg.medusa_top_k)
+    if args.width:
+        spec = T.build_tree(accs, args.width)
+    else:
+        strat = arca.best(arca.choose_strategy(cfg, accs, ctx=args.prompt_len))
+        spec = strat.tree
+        print(f"[serve] ARCA chose width={strat.width} "
+              f"(E[AL]={strat.acceptance:.2f})")
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=max_len)
+    t0 = time.perf_counter()
+    out, stats = eng.generate({"tokens": batch["tokens"][:1]}, args.tokens)
+    dt = time.perf_counter() - t0
+    print(f"[serve] ghidorah: {len(out)} tokens in {dt:.2f}s "
+          f"({len(out) / dt:.1f} tok/s), "
+          f"acceptance length {stats['acceptance_length']:.2f} "
+          f"over {stats['steps']} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Training launcher (CPU-runnable smoke scale; same code lowers on the pod
+via launch/dryrun.py for the train_4k shape).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b-smoke \
+      --steps 50 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import MarkovDataset
+from repro.models.api import get_model
+from repro.training import checkpoint
+from repro.training.optimizer import adamw_init
+from repro.training.train import train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b-smoke")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+    opt = adamw_init(params)
+    data = MarkovDataset(cfg.vocab_size, seed=1)
+
+    step = jax.jit(lambda p, o, b: train_step(cfg, model, p, o, b, lr=args.lr))
+    t0 = time.perf_counter()
+    for i, batch in enumerate(data.batches(args.batch, args.seq, args.steps)):
+        batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        if cfg.frontend == "audio":
+            batch["frame_embeds"] = jax.numpy.zeros(
+                (args.batch, cfg.encoder_seq_len, cfg.d_model), cfg.dtype)
+        params, opt, metrics = step(params, opt, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"[train] step {i:4d} loss={float(metrics['loss']):.4f} "
+                  f"ce={float(metrics['ce']):.4f} "
+                  f"({(i+1)/(time.perf_counter()-t0):.2f} it/s)", flush=True)
+    if args.save:
+        checkpoint.save(args.save, params)
+        print(f"[train] saved {args.save}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Uniform model API across architecture families.
+
+``get_model(cfg)`` returns a ``Model`` namespace with:
+
+  init_params(rng)                               -> params
+  prefill(params, batch, max_len, window)        -> logits, aux, cache
+  decode(params, cache, tokens)                  -> logits, cache
+  verify(params, cache, tree_tokens, spec)       -> logits, extras
+  commit(cache, extras, spec, accept...)         -> cache
+
+``batch`` for prefill is a dict: {"tokens": (B,S)} and, for modality archs,
+{"frame_embeds" | "patch_embeds": (B,T,d)}.  The VLM path concatenates
+patch embeddings before the token embeddings (pre-projected, stub frontend).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, transformer, xlstm_model
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init_params: Callable
+    prefill: Callable            # (params, batch, *, max_len, window) -> (logits, aux, cache)
+    decode: Callable             # (params, cache, tokens, *, backend) -> (logits, cache)
+    verify: Callable             # (params, cache, tree_tokens, spec, *, backend) -> (logits, extras)
+    commit: Callable             # (cache, extras, spec, accept_nodes, n_accept, path_idx) -> cache
+    family: str
+
+
+def _dense_like(cfg, family):
+    def prefill(params, batch, *, max_len=None, window=0, return_cache=True,
+                last_logits=False):
+        tokens = batch["tokens"]
+        embeds = None
+        if cfg.frontend == "vision" and "patch_embeds" in batch:
+            tok_e = transformer.embed_tokens(cfg, params, tokens)
+            embeds = jnp.concatenate(
+                [batch["patch_embeds"].astype(tok_e.dtype), tok_e], axis=1)
+        return transformer.prefill(cfg, params, tokens, embeds,
+                                   max_len=max_len, window=window,
+                                   return_cache=return_cache,
+                                   last_logits=last_logits)
+
+    def verify(params, cache, tree_tokens, spec, *, backend="ref"):
+        return transformer.verify(cfg, params, cache, tree_tokens,
+                                  spec.depth, spec.mask, backend=backend)
+
+    def commit(cache, extras, spec, accept_nodes, n_accept, path_idx):
+        return transformer.commit(cfg, cache, extras, accept_nodes, n_accept,
+                                  spec.max_depth)
+
+    return Model(cfg=cfg,
+                 init_params=lambda rng: transformer.init_params(cfg, rng),
+                 prefill=prefill,
+                 decode=lambda params, cache, tokens, backend="ref":
+                     transformer.decode(cfg, params, cache, tokens, backend=backend),
+                 verify=verify, commit=commit, family=family)
+
+
+def _hybrid(cfg):
+    def prefill(params, batch, *, max_len=None, window=0, return_cache=True,
+                last_logits=False):
+        return hybrid.prefill(cfg, params, batch["tokens"],
+                              max_len=max_len, window=window,
+                              return_cache=return_cache,
+                              last_logits=last_logits)
+
+    def verify(params, cache, tree_tokens, spec, *, backend="ref"):
+        return hybrid.verify(cfg, params, cache, tree_tokens, spec.depth,
+                             spec.mask, paths=spec.paths,
+                             node_path=spec.node_path,
+                             node_depth=spec.node_depth, backend=backend)
+
+    def commit(cache, extras, spec, accept_nodes, n_accept, path_idx):
+        return hybrid.commit(cfg, cache, extras, accept_nodes, n_accept,
+                             path_idx, spec.max_depth)
+
+    return Model(cfg=cfg,
+                 init_params=lambda rng: hybrid.init_params(cfg, rng),
+                 prefill=prefill,
+                 decode=lambda params, cache, tokens, backend="ref":
+                     hybrid.decode(cfg, params, cache, tokens, backend=backend),
+                 verify=verify, commit=commit, family="hybrid")
+
+
+def _xlstm(cfg):
+    def prefill(params, batch, *, max_len=None, window=0, return_cache=True,
+                last_logits=False):
+        return xlstm_model.prefill(cfg, params, batch["tokens"],
+                                   last_logits=last_logits)
+
+    def verify(params, cache, tree_tokens, spec, *, backend="ref"):
+        return xlstm_model.verify(cfg, params, cache, tree_tokens, spec.depth,
+                                  spec.mask, paths=spec.paths,
+                                  node_path=spec.node_path,
+                                  node_depth=spec.node_depth)
+
+    def commit(cache, extras, spec, accept_nodes, n_accept, path_idx):
+        return xlstm_model.commit(cfg, cache, extras, accept_nodes, n_accept,
+                                  path_idx, spec.max_depth)
+
+    return Model(cfg=cfg,
+                 init_params=lambda rng: xlstm_model.init_params(cfg, rng),
+                 prefill=prefill,
+                 decode=lambda params, cache, tokens, backend="ref":
+                     xlstm_model.decode(cfg, params, cache, tokens),
+                 verify=verify, commit=commit, family="ssm")
+
+
+def _encdec(cfg):
+    def prefill(params, batch, *, max_len=None, window=0, return_cache=True,
+                last_logits=False):
+        return encdec.prefill(cfg, params, batch["tokens"],
+                              frame_embeds=batch.get("frame_embeds"),
+                              enc_out=batch.get("enc_out"),
+                              max_len=max_len, window=window,
+                              return_cache=return_cache,
+                              last_logits=last_logits)
+
+    def verify(params, cache, tree_tokens, spec, *, backend="ref"):
+        return encdec.verify(cfg, params, cache, tree_tokens, spec.depth,
+                             spec.mask, backend=backend)
+
+    def commit(cache, extras, spec, accept_nodes, n_accept, path_idx):
+        return encdec.commit(cfg, cache, extras, accept_nodes, n_accept,
+                             spec.max_depth)
+
+    return Model(cfg=cfg,
+                 init_params=lambda rng: encdec.init_params(cfg, rng),
+                 prefill=prefill,
+                 decode=lambda params, cache, tokens, backend="ref":
+                     encdec.decode(cfg, params, cache, tokens, backend=backend),
+                 verify=verify, commit=commit, family="audio")
+
+
+def get_model(cfg) -> Model:
+    if cfg.is_encoder_decoder:
+        return _encdec(cfg)
+    if cfg.arch_type == "hybrid":
+        return _hybrid(cfg)
+    if cfg.arch_type == "ssm":
+        return _xlstm(cfg)
+    return _dense_like(cfg, cfg.arch_type)       # dense | moe | vlm

@@ -1,0 +1,157 @@
+"""Encoder-decoder stack (SeamlessM4T-style audio->text backbone).
+
+The audio frontend (mel + conv codec) is STUBBED per the carve-out: the
+encoder consumes precomputed frame embeddings (B, frames, d).  Cross-attn
+K/V memory is computed once at prefill and stored in the cache; decoder
+self-attention supports full / sliding-window caches and tree verification.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.attention import (attn_cross, attn_init, attn_prefill,
+                                    attn_verify, cross_kv_init)
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.runtime.cache import Cache, KVCache, init_kv_cache
+
+
+def init_params(cfg, rng):
+    k_emb, k_enc, k_dec, k_out = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.dtype)
+
+    def enc_layer(k):
+        ka, km = jax.random.split(k)
+        return {"ln1": jnp.ones((cfg.d_model,), dt), "attn": attn_init(cfg, ka),
+                "ln2": jnp.ones((cfg.d_model,), dt), "mlp": mlp_init(cfg, km)}
+
+    def dec_layer(k):
+        ka, kc, km = jax.random.split(k, 3)
+        return {"ln1": jnp.ones((cfg.d_model,), dt), "attn": attn_init(cfg, ka),
+                "ln_c": jnp.ones((cfg.d_model,), dt), "cross": attn_init(cfg, kc),
+                "ln2": jnp.ones((cfg.d_model,), dt), "mlp": mlp_init(cfg, km)}
+
+    return {
+        "embed": cm.embed_init(k_emb, cfg.padded_vocab, cfg.d_model, dt),
+        "encoder": cm.stack_init(k_enc, cfg.num_encoder_layers, enc_layer),
+        "decoder": cm.stack_init(k_dec, cfg.num_layers, dec_layer),
+        "ln_enc": jnp.ones((cfg.d_model,), dt),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "lm_head": cm.dense_init(k_out, cfg.d_model, cfg.padded_vocab, dt),
+    }
+
+
+def _logits(cfg, params, x):
+    return (cm.rmsnorm(x, params["ln_f"], cfg.rmsnorm_eps)
+            @ params["lm_head"])[..., :cfg.vocab_size]
+
+
+def encode(cfg, params, frame_embeds):
+    """frame_embeds: (B, Senc, d) stubbed frontend output -> encoder memory."""
+    def body(x, lp):
+        a, _ = attn_prefill(cfg, lp["attn"],
+                            cm.rmsnorm(x, lp["ln1"], cfg.rmsnorm_eps),
+                            causal=False)
+        x = x + a
+        x = x + mlp_apply(cfg, lp["mlp"],
+                          cm.rmsnorm(x, lp["ln2"], cfg.rmsnorm_eps))
+        return x, None
+
+    x, _ = cm.layer_scan(cfg, body, frame_embeds, params["encoder"])
+    return cm.rmsnorm(x, params["ln_enc"], cfg.rmsnorm_eps)
+
+
+def _cross_memory(cfg, params, enc_out):
+    """Precompute per-decoder-layer cross K/V: (L, B, Senc, Hkv, hd)."""
+    def one(lp):
+        return cross_kv_init(cfg, lp["cross"], enc_out)
+    ks, vs = jax.vmap(one)(params["decoder"])
+    return ks, vs
+
+
+def prefill(cfg, params, tokens=None, embeds=None, *, enc_out=None,
+            frame_embeds=None, cache=None, window=0, max_len=None,
+            return_cache=True, last_logits=False):
+    """Decoder prefill.  Either ``enc_out`` or ``frame_embeds`` must be given
+    on the first call (cross memory is then cached)."""
+    x = params["embed"][tokens] if embeds is None else embeds
+    B, S, _ = x.shape
+    if cache is None or cache.cross_k is None:
+        if enc_out is None:
+            enc_out = encode(cfg, params, frame_embeds)
+        cross_k, cross_v = _cross_memory(cfg, params, enc_out)
+    else:
+        cross_k, cross_v = cache.cross_k, cache.cross_v
+    if cache is None:
+        size = max(S, max_len or 0) if return_cache else 1
+        kv = init_kv_cache(cfg.num_layers, B, size,
+                           cfg.num_kv_heads, cfg.head_dim, window=window,
+                           dtype=jnp.dtype(cfg.dtype))
+    else:
+        kv = cache.kv
+
+    def body(xc, xs):
+        lp, ck, cv = xs
+        a, (k, v) = attn_prefill(cfg, lp["attn"],
+                                 cm.rmsnorm(xc, lp["ln1"], cfg.rmsnorm_eps),
+                                 window=window)
+        xc = xc + a
+        xc = xc + attn_cross(cfg, lp["cross"],
+                             cm.rmsnorm(xc, lp["ln_c"], cfg.rmsnorm_eps), ck, cv)
+        xc = xc + mlp_apply(cfg, lp["mlp"],
+                            cm.rmsnorm(xc, lp["ln2"], cfg.rmsnorm_eps))
+        return xc, (k, v)
+
+    x, (ks, vs) = cm.layer_scan(cfg, body, x,
+                                (params["decoder"], cross_k, cross_v))
+
+    from repro.models.transformer import _bulk_write
+    kv = _bulk_write(kv, ks, vs, start=0)
+    cache_out = Cache(kv=kv, cross_k=cross_k, cross_v=cross_v)
+    return (_logits(cfg, params, x[:, -1:] if last_logits else x),
+            {"aux_loss": jnp.zeros((), jnp.float32), "hidden": x},
+            cache_out if return_cache else None)
+
+
+def verify(cfg, params, cache: Cache, tree_tokens, tree_depth, tree_mask,
+           *, backend="ref", **_):
+    x = params["embed"][tree_tokens]
+    kv = cache.kv
+
+    def body(xc, xs):
+        lp, ck, cv, xk, xv = xs
+        a, (k1, v1) = attn_verify(
+            cfg, lp["attn"], cm.rmsnorm(xc, lp["ln1"], cfg.rmsnorm_eps),
+            ck=ck, cv=cv, key_pos=kv.key_pos, pos=kv.pos,
+            tree_depth=tree_depth, tree_mask=tree_mask, window=kv.window,
+            backend=backend)
+        xc = xc + a
+        xc = xc + attn_cross(cfg, lp["cross"],
+                             cm.rmsnorm(xc, lp["ln_c"], cfg.rmsnorm_eps), xk, xv)
+        xc = xc + mlp_apply(cfg, lp["mlp"],
+                            cm.rmsnorm(xc, lp["ln2"], cfg.rmsnorm_eps))
+        return xc, (k1, v1)
+
+    x, (k_new, v_new) = cm.layer_scan(
+        cfg, body, x,
+        (params["decoder"], kv.k, kv.v, cache.cross_k, cache.cross_v))
+    return _logits(cfg, params, x), {"tree_kv": (k_new, v_new), "hidden": x}
+
+
+def decode(cfg, params, cache: Cache, tokens, *, backend="ref"):
+    logits, extras = verify(
+        cfg, params, cache, tokens,
+        tree_depth=jnp.zeros((1,), jnp.int32),
+        tree_mask=jnp.ones((1, 1), bool), backend=backend)
+    from repro.models.transformer import _bulk_write
+    k1, v1 = extras["tree_kv"]
+    kv = _bulk_write(cache.kv, k1, v1, start=cache.kv.pos)
+    return logits, Cache(kv=kv, cross_k=cache.cross_k, cross_v=cache.cross_v)
+
+
+def commit(cfg, cache: Cache, extras, accept_nodes, n_accept, max_depth):
+    from repro.models import transformer as tf
+    base = tf.commit(cfg, Cache(kv=cache.kv), extras, accept_nodes,
+                     n_accept, max_depth)
+    return Cache(kv=base.kv, cross_k=cache.cross_k, cross_v=cache.cross_v)

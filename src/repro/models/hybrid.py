@@ -1,0 +1,275 @@
+"""Zamba2-style hybrid stack: Mamba2 backbone + one weight-SHARED attention
+block applied every ``shared_attention_every`` layers (each application site
+has its own KV cache slice).
+
+Layer scan carries (x, shared-attn KV cache); Mamba params are stacked and
+scanned; the shared attention block's params are closure constants.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import mamba2 as mb
+from repro.models import recurrent_verify as rv
+from repro.models.attention import attn_init, attn_prefill, attn_verify
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.runtime.cache import Cache, KVCache, MambaState, init_kv_cache
+
+
+def n_sites(cfg):
+    # at least one cache slot so both lax.cond branches trace (a clone with
+    # zero firing sites still indexes site 0 in the dead branch)
+    return max(cfg.num_layers // cfg.shared_attention_every, 1)
+
+
+def init_params(cfg, rng):
+    k_embed, k_layers, k_attn, k_mlp, k_out = jax.random.split(rng, 5)
+    dt = jnp.dtype(cfg.dtype)
+
+    def layer_init(k):
+        return {"ln": jnp.ones((cfg.d_model,), dt), "mamba": mb.mamba_init(cfg, k)}
+
+    return {
+        "embed": cm.embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dt),
+        "layers": cm.stack_init(k_layers, cfg.num_layers, layer_init),
+        "shared": {
+            "ln1": jnp.ones((cfg.d_model,), dt),
+            "attn": attn_init(cfg, k_attn),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "mlp": mlp_init(cfg, k_mlp),
+        },
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "lm_head": cm.dense_init(k_out, cfg.d_model, cfg.padded_vocab, dt),
+    }
+
+
+def _logits(cfg, params, x):
+    return (cm.rmsnorm(x, params["ln_f"], cfg.rmsnorm_eps)
+            @ params["lm_head"])[..., :cfg.vocab_size]
+
+
+def _site_pred(cfg, idx):
+    every = cfg.shared_attention_every
+    site = idx // every
+    fires = jnp.logical_and((idx % every) == every - 1, site < n_sites(cfg))
+    return site, fires
+
+
+def _shared_attn_tree(cfg, sp, x, ak, av, key_pos, pos, tree_depth, tree_mask,
+                      window, backend="ref"):
+    """Shared attn + MLP on node-form hiddens.  Returns (x', (k_new, v_new))."""
+    h = cm.rmsnorm(x, sp["ln1"], cfg.rmsnorm_eps)
+    a, (k1, v1) = attn_verify(cfg, sp["attn"], h, ck=ak, cv=av,
+                              key_pos=key_pos, pos=pos, tree_depth=tree_depth,
+                              tree_mask=tree_mask, window=window, backend=backend)
+    x = x + a
+    x = x + mlp_apply(cfg, sp["mlp"], cm.rmsnorm(x, sp["ln2"], cfg.rmsnorm_eps))
+    return x, (k1, v1)
+
+
+# --------------------------------------------------------------------------
+def _group_params(cfg, layers):
+    """Split the stacked layer params into (n_groups, every, ...) site groups
+    plus an ungrouped tail.  The shared-attn KV cache is then touched ONLY at
+    group boundaries instead of riding every layer's scan carry/cond — the
+    scan-carry accounting (and real loop-state plumbing) scales with sites,
+    not layers (EXPERIMENTS §Perf iteration D2)."""
+    every = cfg.shared_attention_every
+    ns = cfg.num_layers // every
+    main = ns * every
+    tm = jax.tree_util.tree_map
+    grouped = (tm(lambda a: a[:main].reshape((ns, every) + a.shape[1:]),
+                  layers) if ns else None)
+    tail = tm(lambda a: a[main:], layers)
+    tail_len = cfg.num_layers - main
+    return ns, grouped, tail, tail_len
+
+
+def _tslice(tree, g):
+    return jax.tree_util.tree_map(lambda a: a[g], tree)
+
+
+def prefill(cfg, params, tokens=None, embeds=None, *, cache=None, window=0,
+            max_len=None, return_cache=True, last_logits=False):
+    x = params["embed"][tokens] if embeds is None else embeds
+    B, S, _ = x.shape
+    sp = params["shared"]
+    if cache is None:
+        # training (return_cache=False): 1-slot dummy KV cache, writes are noise
+        size = max(S, max_len or 0) if return_cache else 1
+        cache = init_cache(cfg, B, size, window=window)
+    kv = cache.kv
+
+    def mamba_seg(x, seg):
+        def body(xc, lp):
+            out, st = mb.mamba_prefill(
+                cfg, lp["mamba"], cm.rmsnorm(xc, lp["ln"], cfg.rmsnorm_eps))
+            return xc + out, st
+        return cm.layer_scan(cfg, body, x, seg)
+
+    size = kv.max_len
+    if S >= size:
+        k_slots = (S - size + jnp.arange(size)) % size
+        abs_pos = S - size + jnp.arange(size, dtype=jnp.int32)
+    else:
+        k_slots = jnp.arange(S) % size
+        abs_pos = jnp.arange(S, dtype=jnp.int32)
+
+    ns, grouped, tail, tail_len = _group_params(cfg, params["layers"])
+    ak, av = kv.k, kv.v
+    seg_states = []
+    for g in range(ns):                        # python loop over attn sites
+        x, st_g = mamba_seg(x, _tslice(grouped, g))
+        seg_states.append(st_g)
+        h = cm.rmsnorm(x, sp["ln1"], cfg.rmsnorm_eps)
+        a, (k1, v1) = attn_prefill(cfg, sp["attn"], h, window=window)
+        x = x + a
+        x = x + mlp_apply(cfg, sp["mlp"],
+                          cm.rmsnorm(x, sp["ln2"], cfg.rmsnorm_eps))
+        if S >= size:
+            k1, v1 = k1[:, -size:], v1[:, -size:]
+        # note: [g, :, slots] would trigger advanced-indexing axis moving;
+        # update the site slice in place instead
+        ak = ak.at[g].set(ak[g].at[:, k_slots].set(k1.astype(ak.dtype)))
+        av = av.at[g].set(av[g].at[:, k_slots].set(v1.astype(av.dtype)))
+    if tail_len:
+        x, st_t = mamba_seg(x, tail)
+        seg_states.append(st_t)
+    states = jax.tree_util.tree_map(
+        lambda *a: jnp.concatenate(a, axis=0), *seg_states)
+
+    key_pos = kv.key_pos.at[k_slots].set(abs_pos)
+    new_cache = Cache(
+        kv=KVCache(k=ak, v=av, key_pos=key_pos,
+                   pos=jnp.asarray(S, jnp.int32), window=kv.window),
+        mamba=MambaState(ssm=states["ssm"], conv=states["conv"],
+                         pos=jnp.asarray(S, jnp.int32)))
+    return (_logits(cfg, params, x[:, -1:] if last_logits else x),
+            {"aux_loss": jnp.zeros((), jnp.float32), "hidden": x},
+            new_cache if return_cache else None)
+
+
+# --------------------------------------------------------------------------
+def verify(cfg, params, cache: Cache, tree_tokens, tree_depth, tree_mask,
+           *, paths=None, node_path=None, node_depth=None, backend="ref"):
+    """Tree verify: Mamba layers verify per-path (state replication);
+    shared-attn sites verify in node form with the tree mask.
+
+    Returns (logits (B,W,V), extras dict for ``commit``).
+    """
+    x = params["embed"][tree_tokens]
+    B, W, _ = x.shape
+    P, D = paths.shape
+    kv, ms = cache.kv, cache.mamba
+    sp = params["shared"]
+    every = cfg.shared_attention_every
+
+    def mamba_seg(x, seg, ssm_seg, conv_seg):
+        def body(xc, xs):
+            lp, ssm_l, conv_l = xs
+
+            def step_fn(x_t, st):
+                return mb.mamba_step(cfg, lp["mamba"], x_t, st)
+
+            h = cm.rmsnorm(xc, lp["ln"], cfg.rmsnorm_eps)
+            y_nodes, depth_states = rv.path_verify(
+                step_fn, h, {"ssm": ssm_l, "conv": conv_l},
+                paths, node_path, node_depth)
+            return xc + y_nodes, depth_states
+        return cm.layer_scan(cfg, body, x, (seg, ssm_seg, conv_seg))
+
+    ns, grouped, tail, tail_len = _group_params(cfg, params["layers"])
+    seg_states, site_k, site_v = [], [], []
+    for g in range(ns):
+        lo, hi = g * every, (g + 1) * every
+        x, dst = mamba_seg(x, _tslice(grouped, g),
+                           ms.ssm[lo:hi], ms.conv[lo:hi])
+        seg_states.append(dst)
+        x, (k1, v1) = _shared_attn_tree(
+            cfg, sp, x, kv.k[g], kv.v[g], kv.key_pos, kv.pos,
+            tree_depth, tree_mask, kv.window, backend)
+        site_k.append(k1)
+        site_v.append(v1)
+    if tail_len:
+        x, dst = mamba_seg(x, tail, ms.ssm[ns * every:], ms.conv[ns * every:])
+        seg_states.append(dst)
+    depth_states = jax.tree_util.tree_map(
+        lambda *a: jnp.concatenate(a, axis=0), *seg_states)
+    if not site_k:                    # degenerate clones (no firing site)
+        z = jnp.zeros((B, W, cfg.num_kv_heads, cfg.head_dim), x.dtype)
+        site_k, site_v = [z], [z]
+    extras = {"depth_states": depth_states,       # leaves (L, D, B*P, ...)
+              "tree_k": jnp.stack(site_k),         # (n_sites, B, W, Hkv, hd)
+              "tree_v": jnp.stack(site_v),
+              "P": P, "hidden": x}
+    return _logits(cfg, params, x), extras
+
+
+def decode(cfg, params, cache: Cache, tokens, *, backend="ref"):
+    """1-token decode via the W=1 tree."""
+    logits, extras = verify(
+        cfg, params, cache, tokens,
+        tree_depth=jnp.zeros((1,), jnp.int32),
+        tree_mask=jnp.ones((1, 1), bool),
+        paths=jnp.zeros((1, 1), jnp.int32),
+        node_path=jnp.zeros((1,), jnp.int32),
+        node_depth=jnp.zeros((1,), jnp.int32),
+        backend=backend)
+    cache = commit(cfg, cache, extras,
+                   accept_nodes=jnp.zeros((1,), jnp.int32),
+                   n_accept=jnp.asarray(1, jnp.int32),
+                   path_idx=jnp.asarray(0, jnp.int32), max_depth=1)
+    return logits, cache
+
+
+def commit(cfg, cache: Cache, extras, accept_nodes, n_accept, path_idx,
+           max_depth):
+    """Commit accepted path: select recurrent states at (path, depth) and
+    scatter accepted tree KVs into the shared-attn cache sites."""
+    kv, ms = cache.kv, cache.mamba
+    B = kv.k.shape[1]
+    P = extras["P"]
+
+    # recurrent states: (L, D, B*P, ...) -> (L, B, ...)
+    def sel(s):
+        d_state = jax.lax.dynamic_index_in_dim(s, n_accept - 1, 1, False)
+        d_state = d_state.reshape((s.shape[0], B, P) + s.shape[3:])
+        return jax.lax.dynamic_index_in_dim(d_state, path_idx, 2, False)
+
+    new_ssm = sel(extras["depth_states"]["ssm"])
+    new_conv = sel(extras["depth_states"]["conv"])
+
+    # shared-attn KV scatter (same masked-write scheme as transformer.commit)
+    size = kv.max_len
+    idx = jnp.arange(max_depth, dtype=jnp.int32)
+    abs_pos = kv.pos + idx
+    slots = abs_pos % size
+    valid = idx < n_accept
+    sel_k = jnp.take(extras["tree_k"], accept_nodes, axis=2)
+    sel_v = jnp.take(extras["tree_v"], accept_nodes, axis=2)
+    mask = valid[None, None, :, None, None]
+    wk = jnp.where(mask, sel_k.astype(kv.k.dtype), kv.k[:, :, slots])
+    wv = jnp.where(mask, sel_v.astype(kv.v.dtype), kv.v[:, :, slots])
+    key_pos = kv.key_pos.at[slots].set(
+        jnp.where(valid, abs_pos, kv.key_pos[slots]))
+    new_pos = kv.pos + n_accept.astype(jnp.int32)
+    return Cache(
+        kv=KVCache(k=kv.k.at[:, :, slots].set(wk),
+                   v=kv.v.at[:, :, slots].set(wv),
+                   key_pos=key_pos, pos=new_pos, window=kv.window),
+        mamba=MambaState(ssm=new_ssm, conv=new_conv, pos=new_pos))
+
+
+def init_cache(cfg, batch, max_len, *, window=0):
+    di, nh, hd, N = mb.dims(cfg)
+    kv = init_kv_cache(n_sites(cfg), batch, max_len, cfg.num_kv_heads,
+                       cfg.head_dim, window=window, dtype=jnp.dtype(cfg.dtype))
+    return Cache(
+        kv=kv,
+        mamba=MambaState(
+            ssm=jnp.zeros((cfg.num_layers, batch, nh, hd, N), jnp.float32),
+            conv=jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv - 1, di + 2 * N),
+                           jnp.dtype(cfg.dtype)),
+            pos=jnp.zeros((), jnp.int32)))

@@ -1,0 +1,242 @@
+"""Mamba2 (SSD) block: scalar-decay state-space recurrence with heads.
+
+State per layer: ssm (B, nh, hd, N) fp32 + causal-conv tail (B, K-1, C)
+where C = di + 2N conv channels.  Prefill runs a time scan; decode is a
+single step.  Tree verification for recurrent blocks replicates state per
+tree path (see core/speculative/verify.py) — recorded in DESIGN.md
+§Arch-applicability as the honest adaptation of attention-tree sparsity.
+
+Projections are SPLIT per semantic component (z / x / BC / dt) rather than
+one fused in_proj: slicing a fused projection whose output dim is
+column-sharded forces XLA SPMD to regather/rematerialize the whole tensor
+(observed: ~70x HBM amplification on the zamba2 decode dry-run).  With the
+split, z/x stay cleanly `model`-sharded and B/C/dt stay replicated.
+EXPERIMENTS.md §Perf iteration D records the before/after.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = cfg.ssm_heads or max(di // 64, 1)
+    hd = di // nh
+    return di, nh, hd, cfg.ssm_state
+
+
+def mamba_init(cfg, rng):
+    di, nh, hd, N = dims(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 8)
+    return {
+        "in_z": cm.dense_init(ks[0], d, di, dt),
+        "in_x": cm.dense_init(ks[1], d, di, dt),
+        "in_bc": cm.dense_init(ks[2], d, 2 * N, dt),
+        "in_dt": cm.dense_init(ks[3], d, nh, dt),
+        "conv_wx": (jax.random.normal(ks[4], (cfg.ssm_conv, di), jnp.float32)
+                    * cfg.ssm_conv ** -0.5).astype(dt),
+        "conv_wbc": (jax.random.normal(ks[5], (cfg.ssm_conv, 2 * N), jnp.float32)
+                     * cfg.ssm_conv ** -0.5).astype(dt),
+        "conv_bx": jnp.zeros((di,), dt),
+        "conv_bbc": jnp.zeros((2 * N,), dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dt),
+        "out_proj": cm.dense_init(ks[6], di, d, dt),
+    }
+
+
+def _ssd_step(cfg, p, x_conv, bc_conv, dt_raw, state):
+    """One recurrence step after the conv.  x_conv: (B, di), bc_conv: (B, 2N)."""
+    di, nh, hd, N = dims(cfg)
+    x = x_conv.astype(jnp.float32).reshape(-1, nh, hd)
+    Bm = bc_conv[..., :N].astype(jnp.float32)                  # (B,N)
+    Cm = bc_conv[..., N:].astype(jnp.float32)                  # (B,N)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,nh)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dtv)                    # (B,nh)
+    upd = jnp.einsum("bhp,bn->bhpn", x * dtv[..., None], Bm)
+    state = a[..., None, None] * state + upd                   # (B,nh,hd,N)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm) + p["D"][None, :, None] * x
+    return y.reshape(-1, di), state
+
+
+def _conv_split(cfg, p, hist):
+    """hist: (B, K, C) with C = di + 2N (x part sharded, bc part replicated).
+    Returns silu'd (x_c (B, di), bc_c (B, 2N))."""
+    di = cfg.ssm_expand * cfg.d_model
+    x_c = jnp.einsum("bkc,kc->bc", hist[..., :di].astype(jnp.float32),
+                     p["conv_wx"].astype(jnp.float32)) \
+        + p["conv_bx"].astype(jnp.float32)
+    bc_c = jnp.einsum("bkc,kc->bc", hist[..., di:].astype(jnp.float32),
+                      p["conv_wbc"].astype(jnp.float32)) \
+        + p["conv_bbc"].astype(jnp.float32)
+    return jax.nn.silu(x_c), jax.nn.silu(bc_c)
+
+
+def mamba_step(cfg, p, x_t, state):
+    """x_t: (B, d); state: dict(ssm (B,nh,hd,N) fp32, conv (B,K-1,C))."""
+    z = x_t @ p["in_z"]
+    xin = x_t @ p["in_x"]
+    bc = x_t @ p["in_bc"]
+    dt_raw = x_t @ p["in_dt"]
+    xbc = jnp.concatenate([xin, bc], axis=-1)
+    hist = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # (B,K,C)
+    x_c, bc_c = _conv_split(cfg, p, hist)
+    y, ssm = _ssd_step(cfg, p, x_c, bc_c, dt_raw, state["ssm"])
+    y = cm.rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype),
+                   p["norm"], cfg.rmsnorm_eps)
+    out = y @ p["out_proj"]
+    new_state = {"ssm": ssm, "conv": hist[:, 1:, :]}
+    return out, new_state
+
+
+def _ssd_chunk(cfg, p, x_c, bc_c, dt_raw, S0):
+    """Closed-form parallel evaluation of one SSD chunk (exact unroll of the
+    scalar-decay recurrence — no stabilizer needed since decay <= 1):
+
+      S_t = a_t S_{t-1} + (dt_t x_t) (x) B_t ,  a_t = exp(-exp(A_log) dt_t)
+      y_t = C_t . S_t + D x_t
+         = sum_{s<=t} e^{L_t - L_s} (B_s . C_t)(dt_s x_s) + e^{L_t} (C_t . S_0)
+
+    with L_t = cumsum log a.  Within-chunk work is (T,T) matmuls per head —
+    MXU-shaped, replacing the T-step time scan (EXPERIMENTS §Perf iter. F).
+
+    x_c: (B,T,di) conv'd; bc_c: (B,T,2N); dt_raw: (B,T,nh); S0 fp32.
+    Returns (y (B,T,di), S_T).
+    """
+    di, nh, hd, N = dims(cfg)
+    B, T, _ = x_c.shape
+    xh = x_c.astype(jnp.float32).reshape(B, T, nh, hd)
+    Bm = bc_c[..., :N].astype(jnp.float32)                 # (B,T,N)
+    Cm = bc_c[..., N:].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,T,nh)
+    log_a = -jnp.exp(p["A_log"]) * dtv                     # (B,T,nh), <= 0
+    L = jnp.cumsum(log_a, axis=1)                          # (B,T,nh)
+
+    # decay matrix W_ts = exp(L_t - L_s) for s <= t  -> (B,nh,T,T)
+    Lh = jnp.swapaxes(L, 1, 2)                             # (B,nh,T)
+    W = jnp.exp(Lh[..., :, None] - Lh[..., None, :])
+    W = jnp.where(jnp.tril(jnp.ones((T, T), bool)), W, 0.0)
+    scores = jnp.einsum("btn,bsn->bts", Cm, Bm)            # (B,T,T) shared
+    G = scores[:, None] * W                                # (B,nh,T,T)
+    xdt = xh * dtv[..., None]                              # (B,T,nh,hd)
+    y = jnp.einsum("bhts,bshp->bthp", G, xdt)
+    # carried initial-state contribution
+    y = y + jnp.exp(Lh)[..., None].swapaxes(1, 2) \
+        * jnp.einsum("bhpn,btn->bthp", S0, Cm)
+    y = y + p["D"][None, None, :, None] * xh
+    # chunk-end state
+    wT = jnp.exp(Lh[..., -1:] - Lh)                        # (B,nh,T)
+    S_T = jnp.exp(Lh[..., -1])[..., None, None] * S0 \
+        + jnp.einsum("bht,bthp,btn->bhpn", wT, xdt, Bm)
+    return y.reshape(B, T, di), S_T
+
+
+def mamba_prefill(cfg, p, x, state=None, chunk=256):
+    """x: (B, S, d).  Chunked SSD prefill (exact vs the time scan; falls
+    back to the scan when cfg.mamba_chunked is False)."""
+    B, S, d = x.shape
+    di, nh, hd, N = dims(cfg)
+    if state is None:
+        state = init_state(cfg, B, dtype=x.dtype)
+    if not getattr(cfg, "mamba_chunked", True):
+        return _mamba_prefill_scan(cfg, p, x, state)
+
+    z = x @ p["in_z"]
+    xin = x @ p["in_x"]
+    bc = x @ p["in_bc"]
+    dt_raw = x @ p["in_dt"]
+    xbc = jnp.concatenate([xin, bc], axis=-1)
+
+    K = cfg.ssm_conv
+    hist = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)
+    conv_w = jnp.concatenate([p["conv_wx"], p["conv_wbc"]], axis=-1)
+    conv_b = jnp.concatenate([p["conv_bx"], p["conv_bbc"]], axis=-1)
+    wins = jnp.stack([hist[:, i:i + S] for i in range(K)], axis=2)
+    xbc_c = jnp.einsum("bskc,kc->bsc", wins.astype(jnp.float32),
+                       conv_w.astype(jnp.float32)) + conv_b.astype(jnp.float32)
+    xbc_c = jax.nn.silu(xbc_c)
+
+    T = min(chunk, S)
+    n_full = S // T
+    rem = S - n_full * T
+    if n_full > 1:
+        def seg(a):
+            return jnp.swapaxes(
+                a[:, :n_full * T].reshape(B, n_full, T, a.shape[-1]), 0, 1)
+
+        def step(S0, inp):
+            xc, dtr = inp
+            y, S_T = _ssd_chunk(cfg, p, xc[..., :di], xc[..., di:], dtr, S0)
+            return S_T, y
+
+        ssm, ys = jax.lax.scan(step, state["ssm"],
+                               (seg(xbc_c), seg(dt_raw)))
+        y_main = jnp.swapaxes(ys, 0, 1).reshape(B, n_full * T, di)
+    else:
+        y_main, ssm = _ssd_chunk(cfg, p, xbc_c[:, :n_full * T, :di],
+                                 xbc_c[:, :n_full * T, di:],
+                                 dt_raw[:, :n_full * T], state["ssm"])
+    if rem:
+        y_rem, ssm = _ssd_chunk(cfg, p, xbc_c[:, n_full * T:, :di],
+                                xbc_c[:, n_full * T:, di:],
+                                dt_raw[:, n_full * T:], ssm)
+        y = jnp.concatenate([y_main, y_rem], axis=1)
+    else:
+        y = y_main
+
+    y = cm.rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                   p["norm"], cfg.rmsnorm_eps)
+    out = y @ p["out_proj"]
+    return out, {"ssm": ssm,
+                 "conv": hist[:, -(K - 1):, :] if K > 1 else hist[:, :0, :]}
+
+
+def _mamba_prefill_scan(cfg, p, x, state):
+    """Time-scan prefill (the correctness baseline)."""
+    B, S, d = x.shape
+    di, nh, hd, N = dims(cfg)
+
+    z = x @ p["in_z"]                                           # (B,S,di)
+    xin = x @ p["in_x"]
+    bc = x @ p["in_bc"]
+    dt_raw = x @ p["in_dt"]
+    xbc = jnp.concatenate([xin, bc], axis=-1)
+
+    # causal depthwise conv along time (parallel, not scanned)
+    K = cfg.ssm_conv
+    hist = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)
+    conv_w = jnp.concatenate([p["conv_wx"], p["conv_wbc"]], axis=-1)
+    conv_b = jnp.concatenate([p["conv_bx"], p["conv_bbc"]], axis=-1)
+    wins = jnp.stack([hist[:, i:i + S] for i in range(K)], axis=2)  # (B,S,K,C)
+    xbc_c = jnp.einsum("bskc,kc->bsc", wins.astype(jnp.float32),
+                       conv_w.astype(jnp.float32)) + conv_b.astype(jnp.float32)
+    xbc_c = jax.nn.silu(xbc_c)
+
+    def step(ssm, inp):
+        xbc_t, dt_t = inp
+        y, ssm = _ssd_step(cfg, p, xbc_t[..., :di], xbc_t[..., di:],
+                           dt_t, ssm)
+        return ssm, y
+
+    ssm, ys = jax.lax.scan(step, state["ssm"],
+                           (jnp.swapaxes(xbc_c, 0, 1), jnp.swapaxes(dt_raw, 0, 1)))
+    y = jnp.swapaxes(ys, 0, 1)                                  # (B,S,di)
+    y = cm.rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                   p["norm"], cfg.rmsnorm_eps)
+    out = y @ p["out_proj"]
+    return out, {"ssm": ssm, "conv": hist[:, -(K - 1):, :] if K > 1 else hist[:, :0, :]}
+
+
+def init_state(cfg, batch, dtype=jnp.bfloat16):
+    di, nh, hd, N = dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nh, hd, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), dtype),
+    }

@@ -1,0 +1,72 @@
+"""Tree verification through recurrent (SSM/xLSTM) blocks.
+
+A state-space recurrence cannot attend sparsely to a token *tree* the way
+attention can (DESIGN.md §Arch-applicability): instead the tree's paths are
+verified by replicating the state per path and stepping each path's tokens.
+Node outputs are recovered from (path, depth) coordinates — identical across
+paths sharing the prefix, so any covering path works.
+
+This is the Ghidorah compute/acceptance trade-off in recurrent form: the
+draft costs P×D steps instead of W tree slots; ARCA's cost model accounts
+for it when choosing the verification width for these architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expand_paths(x_nodes, paths):
+    """x_nodes: (B, W, d); paths: (P, D) node ids -> (D, B, P, d)."""
+    xp = jnp.take(x_nodes, paths, axis=1)          # (B, P, D, d)
+    return jnp.transpose(xp, (2, 0, 1, 3))
+
+
+def collapse_nodes(y_steps, node_path, node_depth):
+    """y_steps: (D, B, P, d) -> node outputs (B, W, d)."""
+    y = y_steps[node_depth, :, node_path]           # (W, B, d)
+    return jnp.transpose(y, (1, 0, 2))
+
+
+def replicate_state(state, P):
+    """Tile each (B, ...) state leaf to (B*P, ...)."""
+    def rep(s):
+        return jnp.broadcast_to(s[:, None], (s.shape[0], P) + s.shape[1:]) \
+                  .reshape((s.shape[0] * P,) + s.shape[1:])
+    return jax.tree_util.tree_map(rep, state)
+
+
+def path_verify(step_fn, x_nodes, state, paths, node_path, node_depth):
+    """Run ``step_fn`` over every tree path with per-path state.
+
+    step_fn(x_t (B*P, d), state) -> (y (B*P, d), state)
+    Returns (y_nodes (B, W, d), per_depth_states) where each state leaf is
+    stacked (D, B*P, ...) — states AFTER processing each depth, used by
+    ``select_committed_state`` once the accepted path is known.
+    """
+    B, W, d = x_nodes.shape
+    P, D = paths.shape
+    xs = expand_paths(x_nodes, paths).reshape(D, B * P, d)
+    st0 = replicate_state(state, P)
+
+    def step(st, x_t):
+        y, st = step_fn(x_t, st)
+        return st, (y, st)
+
+    _, (ys, sts) = jax.lax.scan(step, st0, xs)
+    y_nodes = collapse_nodes(ys.reshape(D, B, P, d), node_path, node_depth)
+    return y_nodes, sts
+
+
+def select_committed_state(per_depth_states, path_idx, n_accept, batch, P):
+    """State after accepting ``n_accept`` tokens along path ``path_idx``.
+
+    per_depth_states leaves: (D, B*P, ...) -> (B, ...).
+    """
+    def sel(s):
+        d_state = jax.lax.dynamic_index_in_dim(
+            s, n_accept - 1, axis=0, keepdims=False)       # (B*P, ...)
+        d_state = d_state.reshape((batch, P) + s.shape[2:])
+        return jax.lax.dynamic_index_in_dim(
+            d_state, path_idx, axis=1, keepdims=False)     # (B, ...)
+    return jax.tree_util.tree_map(sel, per_depth_states)

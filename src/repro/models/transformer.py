@@ -1,0 +1,191 @@
+"""Decoder-only transformer stack (dense / MoE / VLM) with layer-scan.
+
+Per-layer params are stacked on a leading L axis and the stack is traversed
+with ``lax.scan`` (compile-time sanity for 94-layer configs).  Three paths:
+
+  prefill  tokens/embeds (B,S)   -> logits (B,S,V), filled Cache
+  decode   token (B,1) + Cache   -> logits (B,1,V), updated Cache
+  verify   tree tokens (B,W)+Cache -> logits (B,W,V), uncommitted tree KVs
+
+``commit`` scatters the accepted tree path's KVs into the cache (Ghidorah's
+accept-then-fallback step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.attention import attn_decode, attn_init, attn_prefill, attn_verify
+from repro.models.mlp import mlp_apply, mlp_init, moe_apply, moe_init
+from repro.runtime.cache import Cache, KVCache, init_kv_cache
+
+
+def init_params(cfg, rng):
+    k_embed, k_layers, k_out = jax.random.split(rng, 3)
+    dt = jnp.dtype(cfg.dtype)
+
+    def layer_init(k):
+        ka, km = jax.random.split(k)
+        p = {
+            "ln1": jnp.ones((cfg.d_model,), dt),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "attn": attn_init(cfg, ka),
+        }
+        p["moe" if cfg.num_experts else "mlp"] = (
+            moe_init(cfg, km) if cfg.num_experts else mlp_init(cfg, km))
+        return p
+
+    params = {
+        "embed": cm.embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dt),
+        "layers": cm.stack_init(k_layers, cfg.num_layers, layer_init),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = cm.dense_init(k_out, cfg.d_model, cfg.padded_vocab, dt)
+    return params
+
+
+def _mix(cfg, lp, h):
+    if cfg.num_experts:
+        return moe_apply(cfg, lp["moe"], h)
+    return mlp_apply(cfg, lp["mlp"], h), jnp.zeros((), jnp.float32)
+
+
+def _logits(cfg, params, x):
+    x = cm.rmsnorm(x, params["ln_f"], cfg.rmsnorm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ head)[..., :cfg.vocab_size]
+
+
+def embed_tokens(cfg, params, tokens):
+    return params["embed"][tokens]
+
+
+# --------------------------------------------------------------------------
+def prefill(cfg, params, tokens=None, embeds=None, *, cache=None, window=0,
+            max_len=None, return_cache=True, last_logits=False):
+    """Returns (logits (B,S,V), extras, Cache).  ``embeds`` overrides token
+    embedding (VLM path: pre-projected patch embeds + token embeds).
+    ``max_len`` sets cache capacity (>= S + expected new tokens).
+    ``return_cache=False`` (training) skips all KV-cache work."""
+    x = embed_tokens(cfg, params, tokens) if embeds is None else embeds
+    B, S, _ = x.shape
+    eff_window = window                 # 0 = full attention; engine decides
+
+    def body(xc, lp):
+        a, (k, v) = attn_prefill(cfg, lp["attn"],
+                                 cm.rmsnorm(xc, lp["ln1"], cfg.rmsnorm_eps),
+                                 window=eff_window)
+        xc = xc + a
+        m, aux = _mix(cfg, lp, cm.rmsnorm(xc, lp["ln2"], cfg.rmsnorm_eps))
+        kv_out = (k, v) if return_cache else ()
+        return xc + m, (kv_out, aux)
+
+    x, (kvs, auxs) = cm.layer_scan(cfg, body, x, params["layers"])
+    # serving only needs the last position's next-token distribution; the
+    # full (B, S, V) logits tensor (and its vocab-sharded collectives) is a
+    # training-only cost.  See EXPERIMENTS.md SPerf hillclimb A.
+    logits = _logits(cfg, params, x[:, -1:] if last_logits else x)
+    extras = {"aux_loss": jnp.sum(auxs), "hidden": x}
+
+    if not return_cache:
+        return logits, extras, None
+    ks, vs = kvs
+    if cache is None:
+        cache = Cache(kv=init_kv_cache(
+            cfg.num_layers, B, max(S, max_len or 0), cfg.num_kv_heads,
+            cfg.head_dim, window=eff_window, dtype=jnp.dtype(cfg.dtype)))
+    kv = _bulk_write(cache.kv, ks, vs, start=0)
+    return logits, extras, Cache(kv=kv)
+
+
+def _bulk_write(kv: KVCache, ks, vs, start):
+    """Write (L,B,S,Hkv,hd) prefill KVs.  Ring buffer keeps the tail."""
+    S = ks.shape[2]
+    size = kv.max_len
+    if S >= size:                     # only the last `size` entries survive
+        ks, vs = ks[:, :, -size:], vs[:, :, -size:]
+        abs_pos = start + S - size + jnp.arange(size, dtype=jnp.int32)
+    else:
+        abs_pos = start + jnp.arange(S, dtype=jnp.int32)
+    slots = abs_pos % size
+    return KVCache(k=kv.k.at[:, :, slots].set(ks.astype(kv.k.dtype)),
+                   v=kv.v.at[:, :, slots].set(vs.astype(kv.v.dtype)),
+                   key_pos=kv.key_pos.at[slots].set(abs_pos),
+                   pos=jnp.asarray(start + S, jnp.int32), window=kv.window)
+
+
+# --------------------------------------------------------------------------
+def verify(cfg, params, cache: Cache, tree_tokens, tree_depth, tree_mask,
+           *, backend="ref"):
+    """Tree-verification forward: W draft tokens vs cache + tree mask.
+
+    Returns (logits (B,W,V), tree_kv (k,v each (L,B,W,Hkv,hd))).
+    KVs are NOT committed — call ``commit`` with the accepted path.
+    """
+    x = embed_tokens(cfg, params, tree_tokens)
+    kv = cache.kv
+
+    def body(xc, xs):
+        lp, ck, cv = xs
+        a, (k1, v1) = attn_verify(
+            cfg, lp["attn"], cm.rmsnorm(xc, lp["ln1"], cfg.rmsnorm_eps),
+            ck=ck, cv=cv, key_pos=kv.key_pos, pos=kv.pos,
+            tree_depth=tree_depth, tree_mask=tree_mask,
+            window=kv.window, backend=backend)
+        xc = xc + a
+        m, _ = _mix(cfg, lp, cm.rmsnorm(xc, lp["ln2"], cfg.rmsnorm_eps))
+        return xc + m, (k1, v1)
+
+    x, (k_new, v_new) = cm.layer_scan(cfg, body, x,
+                                  (params["layers"], kv.k, kv.v))
+    extras = {"tree_kv": (k_new, v_new), "hidden": x}
+    return _logits(cfg, params, x), extras
+
+
+def decode(cfg, params, cache: Cache, tokens, *, backend="ref"):
+    """Plain 1-token decode (the Sequential baseline step).
+
+    tokens: (B, 1).  Returns (logits (B,1,V), updated Cache).
+    """
+    logits, extras = verify(
+        cfg, params, cache, tokens,
+        tree_depth=jnp.zeros((1,), jnp.int32),
+        tree_mask=jnp.ones((1, 1), bool),
+        backend=backend)
+    k1, v1 = extras["tree_kv"]
+    kv = _bulk_write(cache.kv, k1, v1, start=cache.kv.pos)
+    return logits, Cache(kv=kv)
+
+
+def commit(cfg, cache: Cache, extras, accept_nodes, n_accept, max_depth):
+    """Scatter the accepted tree path's KVs at positions [pos, pos+n).
+
+    accept_nodes: (Dmax,) node indices of the accepted path (padded);
+    n_accept: () number of accepted tokens (1..Dmax).
+    Writes are masked: slots beyond n_accept keep their previous contents.
+    """
+    kv = cache.kv
+    tree_kv = extras["tree_kv"] if isinstance(extras, dict) else extras
+    k_new, v_new = tree_kv                                   # (L,B,W,Hkv,hd)
+    size = kv.max_len
+    idx = jnp.arange(max_depth, dtype=jnp.int32)
+    abs_pos = kv.pos + idx
+    slots = abs_pos % size
+    valid = idx < n_accept
+
+    sel_k = jnp.take(k_new, accept_nodes, axis=2)            # (L,B,Dmax,...)
+    sel_v = jnp.take(v_new, accept_nodes, axis=2)
+    old_k = kv.k[:, :, slots]
+    old_v = kv.v[:, :, slots]
+    mask = valid[None, None, :, None, None]
+    wk = jnp.where(mask, sel_k.astype(kv.k.dtype), old_k)
+    wv = jnp.where(mask, sel_v.astype(kv.v.dtype), old_v)
+    new_pos_vals = jnp.where(valid, abs_pos, kv.key_pos[slots])
+    return Cache(kv=KVCache(
+        k=kv.k.at[:, :, slots].set(wk),
+        v=kv.v.at[:, :, slots].set(wv),
+        key_pos=kv.key_pos.at[slots].set(new_pos_vals),
+        pos=kv.pos + n_accept.astype(jnp.int32),
+        window=kv.window))

@@ -1,0 +1,242 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with recurrent gate connections) — arXiv:2405.04517.
+
+Both expose ``*_step`` (decode) and ``*_prefill`` (time scan).  States are
+fp32.  These blocks carry their own projections (cfg.d_ff == 0 for xLSTM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+# --------------------------------------------------------------------------
+# mLSTM: per-head matrix memory C (hd x hd), normalizer n (hd,), max-state m
+# --------------------------------------------------------------------------
+def mlstm_dims(cfg):
+    di = 2 * cfg.d_model
+    nh = cfg.num_heads
+    hd = di // nh
+    return di, nh, hd
+
+
+def mlstm_init(cfg, rng):
+    d = cfg.d_model
+    di, nh, hd = mlstm_dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 8)
+    return {
+        "up": cm.dense_init(ks[0], d, 2 * di, dt),          # [x_in, gate]
+        "wq": cm.dense_init(ks[1], di, di, dt),
+        "wk": cm.dense_init(ks[2], di, di, dt),
+        "wv": cm.dense_init(ks[3], di, di, dt),
+        "wi": cm.dense_init(ks[4], di, nh, jnp.dtype(jnp.float32)),
+        "wf": cm.dense_init(ks[5], di, nh, jnp.dtype(jnp.float32)),
+        "skip": jnp.ones((di,), dt),
+        "norm": jnp.ones((di,), dt),
+        "down": cm.dense_init(ks[6], di, d, dt),
+    }
+
+
+def _mlstm_gates(p, xi):
+    i_raw = xi.astype(jnp.float32) @ p["wi"]                # (..., nh)
+    f_raw = xi.astype(jnp.float32) @ p["wf"]
+    return i_raw, jax.nn.log_sigmoid(f_raw)
+
+
+def _mlstm_qkv(cfg, p, xi):
+    di, nh, hd = mlstm_dims(cfg)
+    shp = xi.shape[:-1] + (nh, hd)
+    q = (xi @ p["wq"]).reshape(shp)
+    k = (xi @ p["wk"]).reshape(shp) * hd ** -0.5
+    v = (xi @ p["wv"]).reshape(shp)
+    return q, k, v
+
+
+def mlstm_step(cfg, p, x_t, state):
+    """x_t: (B, d); state: dict(C (B,nh,hd,hd), n (B,nh,hd), m (B,nh))."""
+    di, nh, hd = mlstm_dims(cfg)
+    up = x_t @ p["up"]
+    xi, gate = up[..., :di], up[..., di:]
+    q, k, v = _mlstm_qkv(cfg, p, xi)
+    q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
+    i_raw, f_log = _mlstm_gates(p, xi)
+
+    m_new = jnp.maximum(f_log + state["m"], i_raw)           # (B,nh)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(f_log + state["m"] - m_new)
+    C = f_g[..., None, None] * state["C"] + i_g[..., None, None] * (
+        v[..., :, None] * k[..., None, :])                   # (B,nh,hd,hd)
+    n = f_g[..., None] * state["n"] + i_g[..., None] * k
+    h_num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h = (h_num / h_den[..., None]).reshape(x_t.shape[0], di)
+
+    y = cm.rmsnorm(h.astype(x_t.dtype), p["norm"], cfg.rmsnorm_eps)
+    y = y + xi * p["skip"]
+    y = y * jax.nn.silu(gate)
+    return y @ p["down"], {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_prefill_scan(cfg, p, x, state=None):
+    """Per-step recurrence (the correctness baseline — O(S) sequential)."""
+    B, S, d = x.shape
+    if state is None:
+        state = mlstm_init_state(cfg, B)
+
+    def step(st, x_t):
+        out, st = mlstm_step(cfg, p, x_t, st)
+        return st, out
+
+    state, ys = jax.lax.scan(step, state, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), state
+
+
+def _mlstm_chunk(cfg, p, xi_c, state):
+    """Closed-form parallel evaluation of one chunk (exact unroll of the
+    stabilized recurrence):
+
+      m_t = max_{s<=t}( F_t - F_s + i_s , F_t + m_0 )
+      C_t = sum_s e^{F_t-F_s+i_s-m_t} v_s k_s^T + e^{F_t+m_0-m_t} C_0
+
+    Within-chunk work is one (T,T) masked matmul per head — MXU-shaped,
+    removing the T-step scan (EXPERIMENTS §Perf hillclimb B).
+    xi_c: (B, T, di) post-up-projection inner activations.
+    """
+    di, nh, hd = mlstm_dims(cfg)
+    B, T, _ = xi_c.shape
+    q, k, v = _mlstm_qkv(cfg, p, xi_c)
+    q, k, v = (jnp.swapaxes(t.astype(jnp.float32), 1, 2) for t in (q, k, v))
+    i_raw, f_log = _mlstm_gates(p, xi_c)                   # (B,T,nh)
+    i_raw = jnp.swapaxes(i_raw, 1, 2)                      # (B,nh,T)
+    f_log = jnp.swapaxes(f_log, 1, 2)
+    F = jnp.cumsum(f_log, axis=-1)                         # (B,nh,T)
+
+    # decay/inject matrix D~ (B,nh,T,T): F_t - F_s + i_s for s<=t
+    Dm = F[..., :, None] - F[..., None, :] + i_raw[..., None, :]
+    causal = jnp.tril(jnp.ones((T, T), bool))
+    Dm = jnp.where(causal, Dm, -jnp.inf)
+    m_state = F + state["m"][..., None]                    # (B,nh,T)
+    m = jnp.maximum(jnp.max(Dm, axis=-1), m_state)         # (B,nh,T)
+
+    S = jnp.exp(Dm - m[..., None]) * jnp.einsum("bhtd,bhsd->bhts", q, k)
+    carry_w = jnp.exp(m_state - m)                         # (B,nh,T)
+    num = jnp.einsum("bhts,bhsd->bhtd", S, v) \
+        + carry_w[..., None] * jnp.einsum("bhvk,bhtk->bhtv", state["C"], q)
+    den = jnp.sum(S, axis=-1) \
+        + carry_w * jnp.einsum("bhk,bhtk->bht", state["n"], q)
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]    # (B,nh,T,hd)
+    h = jnp.swapaxes(h, 1, 2).reshape(B, T, di)
+
+    # chunk-end state (t = T-1)
+    wT = jnp.exp(Dm[..., -1, :] - m[..., -1:])             # (B,nh,T)
+    C_T = jnp.einsum("bhs,bhsv,bhsk->bhvk", wT, v, k) \
+        + carry_w[..., -1, None, None] * state["C"]
+    n_T = jnp.einsum("bhs,bhsk->bhk", wT, k) \
+        + carry_w[..., -1, None] * state["n"]
+    m_T = m[..., -1]
+    return h, {"C": C_T, "n": n_T, "m": m_T}
+
+
+def mlstm_prefill(cfg, p, x, state=None, chunk=256):
+    """Chunked-parallel prefill (exact vs the scan baseline; falls back to
+    the scan when cfg.mlstm_chunked is False)."""
+    B, S, d = x.shape
+    if not getattr(cfg, "mlstm_chunked", True):
+        return mlstm_prefill_scan(cfg, p, x, state)
+    if state is None:
+        state = mlstm_init_state(cfg, B)
+    di, nh, hd = mlstm_dims(cfg)
+
+    up = x @ p["up"]
+    xi, gate = up[..., :di], up[..., di:]
+
+    T = min(chunk, S)
+    n_full = S // T
+    rem = S - n_full * T
+    if n_full > 1:
+        xs = jnp.swapaxes(xi[:, :n_full * T].reshape(B, n_full, T, di), 0, 1)
+
+        def step(st, xi_c):
+            h, st = _mlstm_chunk(cfg, p, xi_c, st)
+            return st, h
+
+        state, hs = jax.lax.scan(step, state, xs)
+        h_main = jnp.swapaxes(hs, 0, 1).reshape(B, n_full * T, di)
+    else:
+        h_main, state = _mlstm_chunk(cfg, p, xi[:, :n_full * T], state)
+    if rem:
+        h_rem, state = _mlstm_chunk(cfg, p, xi[:, n_full * T:], state)
+        h_flat = jnp.concatenate([h_main, h_rem], axis=1)
+    else:
+        h_flat = h_main
+
+    y = cm.rmsnorm(h_flat.astype(x.dtype), p["norm"], cfg.rmsnorm_eps)
+    y = y + xi * p["skip"]
+    y = y * jax.nn.silu(gate)
+    return y @ p["down"], state
+
+
+def mlstm_init_state(cfg, batch):
+    di, nh, hd = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# sLSTM: scalar memory per unit, recurrent gate connections (inherently
+# sequential — the reason xLSTM keeps only a few sLSTM layers)
+# --------------------------------------------------------------------------
+def slstm_init(cfg, rng):
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 9)
+    p = {"norm": jnp.ones((d,), dt), "down": cm.dense_init(ks[8], d, d, dt)}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p["w" + g] = cm.dense_init(ks[i], d, d, dt)
+        p["r" + g] = cm.dense_init(ks[4 + i], d, d, dt, scale=0.0)  # zero-init recurrence
+        p["b" + g] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def slstm_step(cfg, p, x_t, state):
+    """x_t: (B, d); state: dict(c, n, h, m) each (B, d) fp32."""
+    h_prev = state["h"].astype(x_t.dtype)
+
+    def gate(g):
+        return (x_t @ p["w" + g] + h_prev @ p["r" + g]).astype(jnp.float32) + p["b" + g]
+
+    i_raw, f_raw, z_raw, o_raw = gate("i"), gate("f"), gate("z"), gate("o")
+    f_log = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(f_log + state["m"], i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(f_log + state["m"] - m_new)
+    c = f_g * state["c"] + i_g * jnp.tanh(z_raw)
+    n = f_g * state["n"] + i_g
+    h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1.0)
+    y = cm.rmsnorm(h.astype(x_t.dtype), p["norm"], cfg.rmsnorm_eps)
+    return y @ p["down"], {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_prefill(cfg, p, x, state=None):
+    B, S, d = x.shape
+    if state is None:
+        state = slstm_init_state(cfg, B, d)
+
+    def step(st, x_t):
+        out, st = slstm_step(cfg, p, x_t, st)
+        return st, out
+
+    state, ys = jax.lax.scan(step, state, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), state
+
+
+def slstm_init_state(cfg, batch, d=None):
+    d = d or cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -1e30, jnp.float32)}

@@ -1,0 +1,114 @@
+"""xLSTM model stack (sLSTM + mLSTM mix, unrolled — small configs only).
+
+Pure recurrent: no KV cache; long_500k decode is O(1) in context length.
+Tree verification uses per-path state replication (recurrent_verify).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLSTM, SLSTM
+from repro.models import common as cm
+from repro.models import recurrent_verify as rv
+from repro.models import xlstm as xl
+from repro.runtime.cache import Cache, XLSTMState
+
+
+def init_params(cfg, rng):
+    ks = jax.random.split(rng, cfg.num_layers + 2)
+    dt = jnp.dtype(cfg.dtype)
+    layers = []
+    for i, kind in enumerate(cfg.blocks()):
+        init = xl.slstm_init if kind == SLSTM else xl.mlstm_init
+        layers.append({"ln": jnp.ones((cfg.d_model,), dt),
+                       "block": init(cfg, ks[i])})
+    return {
+        "embed": cm.embed_init(ks[-2], cfg.padded_vocab, cfg.d_model, dt),
+        "layers": tuple(layers),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "lm_head": cm.dense_init(ks[-1], cfg.d_model, cfg.padded_vocab, dt),
+    }
+
+
+def _logits(cfg, params, x):
+    return (cm.rmsnorm(x, params["ln_f"], cfg.rmsnorm_eps)
+            @ params["lm_head"])[..., :cfg.vocab_size]
+
+
+def init_cache(cfg, batch, max_len=0, *, window=0) -> Cache:
+    sts = []
+    for kind in cfg.blocks():
+        if kind == SLSTM:
+            sts.append(xl.slstm_init_state(cfg, batch))
+        else:
+            sts.append(xl.mlstm_init_state(cfg, batch))
+    return Cache(xlstm=XLSTMState(layers=tuple(sts),
+                                  pos=jnp.zeros((), jnp.int32)))
+
+
+def prefill(cfg, params, tokens=None, embeds=None, *, cache=None, window=0,
+            max_len=None, return_cache=True, last_logits=False):
+    x = params["embed"][tokens] if embeds is None else embeds
+    B, S, _ = x.shape
+    if cache is None:
+        cache = init_cache(cfg, B)
+    new_states = []
+    for lp, kind, st in zip(params["layers"], cfg.blocks(),
+                            cache.xlstm.layers):
+        h = cm.rmsnorm(x, lp["ln"], cfg.rmsnorm_eps)
+        fn = xl.slstm_prefill if kind == SLSTM else xl.mlstm_prefill
+        y, st = fn(cfg, lp["block"], h, st)
+        x = x + y
+        new_states.append(st)
+    pos = cache.xlstm.pos + S
+    return (_logits(cfg, params, x[:, -1:] if last_logits else x),
+            {"aux_loss": jnp.zeros((), jnp.float32), "hidden": x},
+            Cache(xlstm=XLSTMState(layers=tuple(new_states), pos=pos)))
+
+
+def verify(cfg, params, cache: Cache, tree_tokens, tree_depth, tree_mask,
+           *, paths=None, node_path=None, node_depth=None, backend="ref"):
+    x = params["embed"][tree_tokens]
+    B, W, _ = x.shape
+    P, D = paths.shape
+    depth_states = []
+    for lp, kind, st in zip(params["layers"], cfg.blocks(),
+                            cache.xlstm.layers):
+        step = xl.slstm_step if kind == SLSTM else xl.mlstm_step
+
+        def step_fn(x_t, s, _p=lp["block"], _step=step):
+            return _step(cfg, _p, x_t, s)
+
+        h = cm.rmsnorm(x, lp["ln"], cfg.rmsnorm_eps)
+        y_nodes, sts = rv.path_verify(step_fn, h, st, paths,
+                                      node_path, node_depth)
+        x = x + y_nodes
+        depth_states.append(sts)
+    return _logits(cfg, params, x), {"depth_states": tuple(depth_states),
+                                     "P": P, "B": B, "hidden": x}
+
+
+def decode(cfg, params, cache: Cache, tokens, *, backend="ref"):
+    logits, extras = verify(
+        cfg, params, cache, tokens,
+        tree_depth=jnp.zeros((1,), jnp.int32),
+        tree_mask=jnp.ones((1, 1), bool),
+        paths=jnp.zeros((1, 1), jnp.int32),
+        node_path=jnp.zeros((1,), jnp.int32),
+        node_depth=jnp.zeros((1,), jnp.int32))
+    cache = commit(cfg, cache, extras,
+                   accept_nodes=jnp.zeros((1,), jnp.int32),
+                   n_accept=jnp.asarray(1, jnp.int32),
+                   path_idx=jnp.asarray(0, jnp.int32), max_depth=1)
+    return logits, cache
+
+
+def commit(cfg, cache: Cache, extras, accept_nodes, n_accept, path_idx,
+           max_depth):
+    B, P = extras["B"], extras["P"]
+    new_layers = tuple(
+        rv.select_committed_state(sts, path_idx, n_accept, B, P)
+        for sts in extras["depth_states"])
+    return Cache(xlstm=XLSTMState(layers=new_layers,
+                                  pos=cache.xlstm.pos + n_accept))

@@ -1,0 +1,126 @@
+"""Decode-state caches: KV cache (full or sliding-window ring buffer),
+Mamba2 SSM state, xLSTM states, and encoder cross-attention memory.
+
+Conventions
+-----------
+- KV arrays are stacked over layers: ``(L, B, S, Hkv, hd)`` so model stacks can
+  ``lax.scan`` over the leading axis.
+- ``key_pos (S,)`` holds the absolute position stored in each cache slot
+  (-1 = empty).  With a sliding window the cache is a ring buffer: slot(p) =
+  p % S.  The attention mask is derived from ``key_pos`` (validity + causality
+  + window), so ring wraparound needs no special-casing.
+- ``pos ()`` is the number of tokens processed so far (uniform across the
+  batch; the serving engine schedules uniform-length batches and pads).
+- RoPE is applied to keys at *write* time with their absolute position.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["k", "v", "key_pos", "pos"], meta_fields=["window"])
+@dataclasses.dataclass
+class KVCache:
+    k: jax.Array          # (L, B, S, Hkv, hd)
+    v: jax.Array          # (L, B, S, Hkv, hd)
+    key_pos: jax.Array    # (S,) int32 absolute position per slot; -1 empty
+    pos: jax.Array        # ()  int32 tokens processed so far
+    window: int = 0       # static: 0 = full attention; >0 = sliding window
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[2]
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["ssm", "conv", "pos"], meta_fields=[])
+@dataclasses.dataclass
+class MambaState:
+    ssm: jax.Array        # (L, B, nh, hd, N) float32
+    conv: jax.Array       # (L, B, K-1, C)    conv tail (C = di + 2N)
+    pos: jax.Array        # () int32
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["layers", "pos"], meta_fields=[])
+@dataclasses.dataclass
+class XLSTMState:
+    layers: tuple         # per-layer dict of state arrays (unrolled stack)
+    pos: jax.Array
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["kv", "mamba", "xlstm", "cross_k", "cross_v"],
+         meta_fields=[])
+@dataclasses.dataclass
+class Cache:
+    """Union cache for all architecture families (unused fields = None)."""
+    kv: Optional[KVCache] = None            # self-attention layers
+    mamba: Optional[MambaState] = None      # Mamba2 layers
+    xlstm: Optional[XLSTMState] = None      # xLSTM layers
+    cross_k: Optional[jax.Array] = None     # (L, B, Senc, Hkv, hd) enc-dec
+    cross_v: Optional[jax.Array] = None
+
+    @property
+    def pos(self) -> jax.Array:
+        for c in (self.kv, self.mamba, self.xlstm):
+            if c is not None:
+                return c.pos
+        raise ValueError("empty cache")
+
+
+# --------------------------------------------------------------------------
+def init_kv_cache(n_layers, batch, max_len, n_kv, head_dim, *, window=0,
+                  dtype=jnp.bfloat16) -> KVCache:
+    size = min(max_len, window) if window else max_len
+    return KVCache(
+        k=jnp.zeros((n_layers, batch, size, n_kv, head_dim), dtype),
+        v=jnp.zeros((n_layers, batch, size, n_kv, head_dim), dtype),
+        key_pos=jnp.full((size,), -1, jnp.int32),
+        pos=jnp.zeros((), jnp.int32),
+        window=window,
+    )
+
+
+def kv_write(cache_k, cache_v, key_pos, k_new, v_new, start_pos):
+    """Write S_new entries at absolute positions [start, start+S_new).
+
+    cache_k/v: (B, S, Hkv, hd) — per-layer slices (inside scan).
+    k_new/v_new: (B, S_new, Hkv, hd).  Ring indexing: slot = pos % S.
+    Returns updated (cache_k, cache_v, key_pos).
+    """
+    S = cache_k.shape[1]
+    s_new = k_new.shape[1]
+    abs_pos = start_pos + jnp.arange(s_new, dtype=jnp.int32)
+    slots = abs_pos % S
+    ck = cache_k.at[:, slots].set(k_new)
+    cv = cache_v.at[:, slots].set(v_new)
+    kp = key_pos.at[slots].set(abs_pos)
+    return ck, cv, kp
+
+
+def decode_mask(key_pos, q_pos, window):
+    """Validity mask (T,) for one query at absolute position q_pos.
+
+    key_pos: (T,) absolute positions in cache (-1 empty).
+    """
+    ok = (key_pos >= 0) & (key_pos <= q_pos)
+    if window:
+        ok &= key_pos > q_pos - window
+    return ok
+
+
+def prefill_mask(seq_len, window, q_offset=0, dtype=bool):
+    """Causal (optionally windowed) (S, S) mask for prefill."""
+    q = jnp.arange(seq_len)[:, None] + q_offset
+    k = jnp.arange(seq_len)[None, :] + q_offset
+    m = k <= q
+    if window:
+        m &= k > q - window
+    return m

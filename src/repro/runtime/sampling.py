@@ -1,0 +1,20 @@
+"""Sampling utilities (greedy is the paper's acceptance rule)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(rng, logits, temperature=1.0, top_k=0):
+    if temperature <= 0:
+        return greedy(logits)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cut = vals[..., -1:]
+        logits = jnp.where(logits < cut, -1e30, logits)
+    return jax.random.categorical(rng, logits).astype(jnp.int32)

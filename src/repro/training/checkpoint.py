@@ -1,0 +1,30 @@
+"""Flat .npz checkpointing for arbitrary param pytrees."""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree) -> None:
+    leaves, treedef = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, treedef=np.frombuffer(str(treedef).encode(), np.uint8),
+             **{f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)})
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    data = np.load(path)
+    leaves, treedef = _flatten(like)
+    new = [np.asarray(data[f"leaf_{i}"]).astype(np.asarray(l).dtype)
+           for i, l in enumerate(leaves)]
+    for old, n in zip(leaves, new):
+        assert old.shape == n.shape, (old.shape, n.shape)
+    return jax.tree_util.tree_unflatten(treedef, new)

@@ -1,0 +1,49 @@
+"""AdamW in pure JAX (no optax dependency)."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["mu", "nu", "step"], meta_fields=[])
+@dataclasses.dataclass
+class AdamWState:
+    mu: object
+    nu: object
+    step: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(mu=zeros,
+                      nu=jax.tree_util.tree_map(jnp.copy, zeros),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr=3e-4, b1=0.9,
+                 b2=0.95, eps=1e-8, weight_decay=0.01):
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    # separate tree_maps (tuple-packing leaves would break on pytrees that
+    # use tuples as containers, e.g. the xLSTM layer stack); XLA CSEs the
+    # recomputed moment updates under jit.
+    tm = jax.tree_util.tree_map
+    new_mu = tm(lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                grads, state.mu)
+    new_nu = tm(lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                grads, state.nu)
+
+    def upd(p, m, v):
+        delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps) \
+            + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = tm(upd, params, new_mu, new_nu)
+    return new_params, AdamWState(mu=new_mu, nu=new_nu, step=step)

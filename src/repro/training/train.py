@@ -1,0 +1,75 @@
+"""LM training step (next-token CE + MoE aux loss) and Medusa-head training.
+
+``train_step`` is the function the train_4k dry-run shapes lower; it is a
+full forward + backward + AdamW update.  ``medusa_step`` trains drafting
+heads against offset targets with the base model frozen (the end-to-end
+example uses it to produce *real* acceptance-length measurements).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.speculative.medusa import medusa_logits
+from repro.training.optimizer import adamw_update
+
+
+def lm_loss(cfg, model, params, batch):
+    """batch: tokens (B,S) int32, labels (B,S) int32 (-100 = ignore)."""
+    logits, extras, _ = model.prefill(params, batch, return_cache=False)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:
+        # VLM: logits cover [patch_embeds; tokens] — loss on the text tail
+        logits = logits[:, -labels.shape[1]:]
+    valid = labels >= 0
+    labels = jnp.maximum(labels, 0)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    n = jnp.maximum(jnp.sum(valid), 1)
+    ce = -jnp.sum(jnp.where(valid, ll, 0.0)) / n
+    return ce + extras["aux_loss"], ce
+
+
+def train_step(cfg, model, params, opt_state, batch, *, lr=3e-4):
+    """One optimizer step.  Returns (params, opt_state, metrics)."""
+    if cfg.remat:
+        loss_fn = jax.checkpoint(lambda p: lm_loss(cfg, model, p, batch))
+    else:
+        loss_fn = lambda p: lm_loss(cfg, model, p, batch)
+    (loss, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+    return params, opt_state, {"loss": loss, "ce": ce}
+
+
+# --------------------------------------------------------------------------
+# Medusa head training (base model frozen)
+# --------------------------------------------------------------------------
+def medusa_loss(cfg, model, params, heads, batch):
+    """Head h is trained to predict the token at offset h+1."""
+    _, extras, _ = model.prefill(params, batch, return_cache=False)
+    hidden = extras["hidden"]                                # (B,S,d)
+    logits = medusa_logits(cfg, heads, hidden)               # (B,S,H,V)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    H = cfg.medusa_heads
+    total = 0.0
+    count = 0
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    for h in range(H):
+        off = h + 2                       # hidden at t predicts t+h+2 for head h+1
+        if off >= S:
+            break
+        tgt = tokens[:, off:]
+        pred = lp[:, : S - off, h]
+        ll = jnp.take_along_axis(pred, tgt[..., None], axis=-1)[..., 0]
+        total = total - jnp.mean(ll)
+        count += 1
+    return total / max(count, 1)
+
+
+def medusa_step(cfg, model, params, heads, opt_state, batch, *, lr=1e-3):
+    loss, grads = jax.value_and_grad(
+        lambda h: medusa_loss(cfg, model, params, h, batch))(heads)
+    heads, opt_state = adamw_update(grads, opt_state, heads, lr=lr,
+                                    weight_decay=0.0)
+    return heads, opt_state, {"loss": loss}

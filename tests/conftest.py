@@ -1,0 +1,9 @@
+import os
+import sys
+
+# allow running plain `pytest tests/` too
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# smoke tests must see the single real CPU device (the 512-device flag is
+# set ONLY inside launch/dryrun.py, per the dry-run contract)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

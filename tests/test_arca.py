@@ -1,0 +1,68 @@
+"""ARCA strategy-search properties + simulator sanity (paper §III-C)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import arca
+from repro.core.speculative import tree as T
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("vicuna-7b")
+    accs = T.default_accs(4, 10)
+    return cfg, accs
+
+
+def test_strategy_search_structure(setup):
+    cfg, accs = setup
+    strats = arca.choose_strategy(cfg, accs, ctx=256)
+    assert set(strats) == set(arca.WIDTHS)
+    best = arca.best(strats)
+    # optimum must be interior (not the widest) on edge hardware — the
+    # paper's central claim about balancing acceptance vs parallelism
+    assert best.width < 64
+    assert best.width >= 4
+    # acceptance monotone in width, throughput NOT monotone
+    als = [strats[w].acceptance for w in arca.WIDTHS]
+    assert all(b >= a - 1e-9 for a, b in zip(als, als[1:]))
+    thr = [strats[w].throughput for w in arca.WIDTHS]
+    assert max(thr) > thr[-1], "wider must eventually hurt"
+
+
+def test_partition_ratio_balances(setup):
+    cfg, accs = setup
+    soc = arca.JETSON_NX
+    r = arca.contention_aware_ratio(soc, cfg, 16, 256)
+    wl = arca.decode_workload(cfg, 16, 256)
+    tg = wl.linear_flops * r / (soc.gpu.flops * soc.gpu.gemm_eff)
+    tc = wl.linear_flops * (1 - r) / (soc.cpu.flops * soc.cpu.gemm_eff)
+    assert abs(tg - tc) / max(tg, tc) < 0.05
+
+
+def test_system_ordering(setup):
+    """Ghidorah >= Medusa+EM >= Medusa-GPU at the paper's width (16)."""
+    cfg, accs = setup
+    soc = arca.JETSON_NX
+    spec = T.build_tree(accs, 16)
+    g = arca.step_time_ghidorah(soc, cfg, 16, 256, spec)
+    em = arca.step_time_megatron(soc, cfg, 16, 256, spec)
+    m = arca.step_time_medusa_gpu(soc, cfg, 16, 256, spec)
+    assert g <= em <= m * 1.01
+
+
+def test_ghidorah_speedup_regime(setup):
+    """End-to-end speedup at W=16 lands in the paper's reported regime."""
+    cfg, accs = setup
+    strats = arca.choose_strategy(cfg, accs, ctx=256)
+    seq = arca.step_time_sequential(arca.JETSON_NX, cfg, 256)
+    speed16 = strats[16].throughput * seq
+    assert speed16 > 3.0, f"W=16 speedup too small: {speed16:.2f}"
+
+
+def test_roofline_time():
+    r = arca.roofline_time(1e12, 1e9, 1e8)
+    assert r["bound"] == "compute"
+    assert r["step_s"] == pytest.approx(1e12 / 197e12)
+    r2 = arca.roofline_time(1e9, 1e12, 1e8)
+    assert r2["bound"] == "memory"

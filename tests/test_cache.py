@@ -1,0 +1,44 @@
+"""Ring-buffer KV cache properties (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.cache import decode_mask, kv_write, prefill_mask
+
+
+@given(size=st.integers(2, 16), n_writes=st.integers(1, 40),
+       window=st.sampled_from([0, 4, 8]))
+@settings(max_examples=40, deadline=None)
+def test_ring_buffer_semantics(size, n_writes, window):
+    B, H, hd = 1, 1, 4
+    ck = jnp.zeros((B, size, H, hd))
+    cv = jnp.zeros((B, size, H, hd))
+    kp = jnp.full((size,), -1, jnp.int32)
+    for pos in range(n_writes):
+        k = jnp.full((B, 1, H, hd), float(pos))
+        ck, cv, kp = kv_write(ck, cv, kp, k, k, jnp.asarray(pos, jnp.int32))
+    kp_np = np.asarray(kp)
+    # slot s holds the latest absolute position congruent to s
+    for s in range(size):
+        expect = max((p for p in range(n_writes) if p % size == s),
+                     default=-1)
+        assert kp_np[s] == expect
+        if expect >= 0:
+            assert float(np.asarray(ck)[0, s, 0, 0]) == float(expect)
+    # decode mask at q_pos = n_writes: only valid, causal, in-window slots
+    ok = np.asarray(decode_mask(kp, jnp.asarray(n_writes), window))
+    for s in range(size):
+        valid = kp_np[s] >= 0 and kp_np[s] <= n_writes
+        if window:
+            valid = valid and kp_np[s] > n_writes - window
+        assert ok[s] == valid
+
+
+@given(S=st.integers(1, 24), window=st.sampled_from([0, 3, 7]))
+@settings(max_examples=30, deadline=None)
+def test_prefill_mask(S, window):
+    m = np.asarray(prefill_mask(S, window))
+    for q in range(S):
+        for k in range(S):
+            expect = k <= q and (window == 0 or k > q - window)
+            assert m[q, k] == expect

@@ -1,0 +1,32 @@
+"""HLO collective parser unit tests (the roofline's collective term)."""
+from repro.launch.hlo_stats import collective_bytes, hlo_op_histogram
+
+HLO = """
+ENTRY %main {
+  %p0 = bf16[8,128]{1,0} parameter(0)
+  %ag = bf16[8,2048]{1,0} all-gather(bf16[8,128]{1,0} %p0), dimensions={1}
+  %ar = f32[4096]{0} all-reduce(f32[4096]{0} %x), to_apply=%sum
+  %rs = f32[256]{0} reduce-scatter(f32[4096]{0} %ar), dimensions={0}
+  %a2a = (s32[16]{0}, s32[16]{0}) all-to-all(s32[16]{0} %a, s32[16]{0} %b)
+  %cp = bf16[2,4]{1,0} collective-permute(bf16[2,4]{1,0} %y)
+  %ags = (f32[8]{0}, f32[8]{0}) all-gather-start(f32[8]{0} %z)
+  %agd = f32[8]{0} all-gather-done((f32[8]{0}, f32[8]{0}) %ags)
+  %dot = f32[8,8]{1,0} dot(f32[8,4]{1,0} %l, f32[4,8]{1,0} %r)
+}
+"""
+
+
+def test_collective_bytes():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 8 * 2048 * 2 + 8 * 8      # ag + ag-start tuple
+    assert out["all-reduce"] == 4096 * 4
+    assert out["reduce-scatter"] == 256 * 4
+    assert out["all-to-all"] == 2 * 16 * 4
+    assert out["collective-permute"] == 2 * 4 * 2
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_histogram():
+    h = hlo_op_histogram(HLO)
+    assert h.get("all-gather", 0) >= 1
+    assert "dot" in h

@@ -1,0 +1,88 @@
+"""Pallas kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ref import sparse_tree_ref, tree_attention_ref
+from repro.kernels.sparse_tree import sparse_tree_attention
+from repro.kernels.tree_attention import tree_attention
+
+
+def _rand_tree_mask(W, seed=0):
+    rng = np.random.default_rng(seed)
+    parent = np.full(W, -1)
+    for i in range(1, W):
+        parent[i] = rng.integers(0, i)
+    mask = np.zeros((W, W), bool)
+    depth = np.zeros(W, np.int32)
+    for i in range(W):
+        j = i
+        while j >= 0:
+            mask[i, j] = True
+            j = parent[j]
+        d, j = 0, i
+        while parent[j] >= 0:
+            d, j = d + 1, parent[j]
+        depth[i] = d
+    return jnp.asarray(mask), jnp.asarray(depth)
+
+
+CASES = [
+    # B, W, Hq, Hkv, hd, S, pos, window, block_s, dtype
+    (1, 1, 4, 4, 64, 32, 17, 0, 16, jnp.float32),        # plain decode
+    (2, 8, 4, 2, 64, 40, 33, 0, 16, jnp.float32),        # GQA tree
+    (1, 16, 8, 1, 128, 128, 100, 0, 64, jnp.float32),    # MQA, wide tree
+    (2, 4, 4, 4, 32, 24, 24, 16, 8, jnp.float32),        # sliding window
+    (1, 8, 4, 2, 64, 64, 64, 0, 64, jnp.bfloat16),       # bf16, full ring
+    (1, 32, 2, 2, 16, 8, 6, 0, 8, jnp.float32),          # tiny cache, big tree
+]
+
+
+@pytest.mark.parametrize("B,W,Hq,Hkv,hd,S,pos,window,block_s,dtype", CASES)
+def test_tree_attention_vs_oracle(B, W, Hq, Hkv, hd, S, pos, window,
+                                  block_s, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(B * W + S), 5)
+    q = jax.random.normal(ks[0], (B, W, Hq, hd), dtype)
+    ck = jax.random.normal(ks[1], (B, S, Hkv, hd), dtype)
+    cv = jax.random.normal(ks[2], (B, S, Hkv, hd), dtype)
+    kn = jax.random.normal(ks[3], (B, W, Hkv, hd), dtype)
+    vn = jax.random.normal(ks[4], (B, W, Hkv, hd), dtype)
+    # ring-buffer key positions: slots hold [pos-S, pos) when full else [0,pos)
+    base = np.arange(S)
+    if pos >= S:
+        kp = ((pos - S) // S) * S + base
+        kp = np.where(kp < pos - S, kp + S, kp)
+        kp = pos - S + ((base - (pos % S)) % S)
+    else:
+        kp = np.where(base < pos, base, -1)
+    key_pos = jnp.asarray(kp, jnp.int32)
+    mask, depth = _rand_tree_mask(W, seed=S)
+    q_pos = pos + depth
+    lo = q_pos - window if window else jnp.full_like(q_pos, -1)
+
+    ref = tree_attention_ref(q, ck, cv, kn, vn, key_pos, q_pos, lo, mask)
+    out = tree_attention(q, ck, cv, kn, vn, key_pos, q_pos, lo, mask,
+                         block_s=block_s, interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("W,Hq,Hkv,hd,dtype", [
+    (4, 4, 2, 32, jnp.float32),
+    (16, 8, 8, 64, jnp.float32),
+    (64, 4, 1, 128, jnp.bfloat16),
+])
+def test_sparse_tree_vs_oracle(W, Hq, Hkv, hd, dtype):
+    B = 2
+    ks = jax.random.split(jax.random.PRNGKey(W), 3)
+    q = jax.random.normal(ks[0], (B, W, Hq, hd), dtype)
+    kn = jax.random.normal(ks[1], (B, W, Hkv, hd), dtype)
+    vn = jax.random.normal(ks[2], (B, W, Hkv, hd), dtype)
+    mask, _ = _rand_tree_mask(W, seed=W)
+    ref = sparse_tree_ref(q, kn, vn, mask)
+    out = sparse_tree_attention(q, kn, vn, mask, interpret=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)

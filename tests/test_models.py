@@ -1,0 +1,89 @@
+"""Decode-vs-prefill consistency per family + verify/commit semantics."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models.api import get_model
+from repro.core.speculative import tree as T
+
+FAMILY_ARCHS = ["qwen2-0.5b", "qwen3-moe-30b-a3b", "zamba2-7b", "xlstm-125m",
+                "seamless-m4t-medium", "glm4-9b"]
+
+
+def _setup(arch, B=2, S=12):
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.frontend == "audio":
+        batch["frame_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.encoder_seq_len, cfg.d_model),
+            jnp.dtype(cfg.dtype))
+    return cfg, model, params, toks, batch
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_decode_matches_prefill(arch):
+    cfg, model, params, toks, batch = _setup(arch)
+    full, _, _ = model.prefill(params, batch, max_len=16)
+    half = {**batch, "tokens": toks[:, :8]}
+    _, _, cache = model.prefill(params, half, max_len=16)
+    outs = []
+    for i in range(8, 12):
+        lg, cache = model.decode(params, cache, toks[:, i:i + 1])
+        outs.append(lg[:, 0])
+    err = float(jnp.max(jnp.abs(jnp.stack(outs, 1) - full[:, 8:12])))
+    assert err < 5e-2, err
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_verify_chain_matches_teacher_forcing(arch):
+    cfg, model, params, toks, batch = _setup(arch)
+    full, _, _ = model.prefill(params, batch, max_len=20)
+    half = {**batch, "tokens": toks[:, :8]}
+    _, _, cache = model.prefill(params, half, max_len=20)
+    # chain tree = the true continuation
+    spec = T.spec_from_nodes([(-1, 0, 0), (0, 1, 0), (1, 2, 0), (2, 3, 0)])
+    tr = T.Tree.from_spec(spec)
+    vlog, extras = model.verify(params, cache, toks[:, 8:12], tr)
+    err = float(jnp.max(jnp.abs(vlog - full[:, 8:12])))
+    assert err < 5e-2, err
+
+    # commit 3 of 4, then decode the 12th token == teacher forcing
+    cache = model.commit(cache, extras, tr,
+                         jnp.arange(4, dtype=jnp.int32),
+                         jnp.asarray(3, jnp.int32), jnp.asarray(0, jnp.int32))
+    lg, _ = model.decode(params, cache, toks[:, 11:12])
+    err2 = float(jnp.max(jnp.abs(lg[:, 0] - full[:, 11])))
+    assert err2 < 5e-2, err2
+
+
+def test_windowed_decode_matches_windowed_prefill():
+    cfg, model, params, toks, batch = _setup("glm4-9b")
+    lw, _, cw = model.prefill(params, {**batch, "tokens": toks[:, :8]},
+                              max_len=6, window=6)
+    for i in range(8, 12):
+        lwi, cw = model.decode(params, cw, toks[:, i:i + 1])
+    lw_full, _, _ = model.prefill(params, batch, window=6)
+    err = float(jnp.max(jnp.abs(lwi[:, 0] - lw_full[:, -1])))
+    assert err < 5e-2, err
+
+
+def test_vlm_prefix_embeddings():
+    cfg = get_config("llava-next-mistral-7b").reduced()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    patches = jax.random.normal(
+        jax.random.PRNGKey(2), (B, cfg.num_frontend_tokens, cfg.d_model),
+        jnp.dtype(cfg.dtype))
+    logits, _, cache = model.prefill(
+        params, {"tokens": toks, "patch_embeds": patches}, max_len=64)
+    assert logits.shape == (B, S + cfg.num_frontend_tokens, cfg.vocab_size)
+    # decode continues after the multimodal prefix
+    lg, cache = model.decode(params, cache, toks[:, :1])
+    assert lg.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(lg)))

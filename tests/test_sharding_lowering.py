@@ -1,0 +1,68 @@
+"""Sharded lowering tests: reduced configs must lower+compile on a small
+multi-device mesh in BOTH TP modes, in a subprocess (the 8-device XLA flag
+must not leak into this process — smoke tests see 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.core.hcmp import sharding as shd
+from repro.models.api import get_model
+from repro.runtime.cache import init_kv_cache, Cache
+from repro.models import hybrid, xlstm_model
+
+arch, mode = sys.argv[1], sys.argv[2]
+cfg = get_config(arch).reduced()
+model = get_model(cfg)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+params_struct = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+pspecs = shd.param_specs(cfg, params_struct, mode=mode)
+ns = lambda t: jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), t,
+                                      is_leaf=lambda x: isinstance(x, P))
+B, S = 8, 64
+def build_cache():
+    if cfg.arch_type == "hybrid":
+        return hybrid.init_cache(cfg, B, S)
+    if cfg.arch_type == "ssm":
+        return xlstm_model.init_cache(cfg, B)
+    ck = init_kv_cache(cfg.num_layers, B, S, cfg.num_kv_heads, cfg.head_dim,
+                       dtype=jnp.dtype(cfg.dtype))
+    if cfg.is_encoder_decoder:
+        cz = jnp.zeros((cfg.num_layers, B, 16, cfg.num_kv_heads, cfg.head_dim),
+                       jnp.dtype(cfg.dtype))
+        return Cache(kv=ck, cross_k=cz, cross_v=cz)
+    return Cache(kv=ck)
+cache_struct = jax.eval_shape(build_cache)
+cspecs = shd.cache_specs(cfg, cache_struct, batch_axes=("data",))
+tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+with mesh:
+    f = jax.jit(lambda p, c, t: model.decode(p, c, t),
+                in_shardings=(ns(pspecs), ns(cspecs),
+                              NamedSharding(mesh, P("data", None))))
+    compiled = f.lower(params_struct, cache_struct, tok).compile()
+print(json.dumps({"ok": True, "flops": compiled.cost_analysis().get("flops", 0)}))
+"""
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "qwen3-moe-30b-a3b",
+                                  "zamba2-7b", "seamless-m4t-medium",
+                                  "xlstm-125m"])
+@pytest.mark.parametrize("mode", ["hcmp", "megatron"])
+def test_reduced_arch_lowers_on_mesh(arch, mode):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT, arch, mode],
+                         capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"]
