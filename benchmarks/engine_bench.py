@@ -1,0 +1,185 @@
+"""Measured engine throughput: sequential vs speculative decoding across
+batch sizes B x chunk depths K, on THIS machine (CPU container smoke scale).
+
+First *measured* record of the BENCH trajectory: the chunked device-resident
+driver (K speculative steps per host sync) and batched speculative decode
+(per-sequence acceptance lengths) vs the seed's B=1 per-step Python loop.
+
+Measurement environment: the grid runs in a SUBPROCESS with XLA CPU
+intra-op threading pinned off — on the 2-core container the thread-handoff
+cost exceeds the parallel gain at smoke shapes and adds ~2x noise (measured;
+see CHANGES.md PR 1), so pinning makes runs comparable across PRs.  The
+model is an "engine-smoke" config (d=128, 2 layers) chosen so that engine
+overheads — host syncs, dispatch, cache writes — are the measured quantity
+rather than GEMM time; a 2-CPU box cannot expose memory-bandwidth batching
+gains, so aggregate scale-up numbers here are a floor, not the TPU story.
+
+  PYTHONPATH=src python benchmarks/engine_bench.py [--tokens 64]
+
+Emits a JSON record to ``benchmarks/results/engine_bench.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+BATCHES = (1, 4, 8)
+CHUNKS = (1, 8)
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "results")
+_WORKER_ENV = {
+    "XLA_FLAGS": "--xla_cpu_multi_thread_eigen=false "
+                 "intra_op_parallelism_threads=1",
+    "JAX_PLATFORMS": "cpu",
+}
+
+
+def _engine_smoke_cfg():
+    import dataclasses
+
+    from repro.configs import get_config
+    return dataclasses.replace(
+        get_config("qwen2-0.5b").reduced(),
+        name="qwen2-engine-smoke", d_model=128, num_heads=2, num_kv_heads=2,
+        head_dim=32, d_ff=256, vocab_size=256)
+
+
+def _time(fn, reps=3):
+    fn()                                     # warm-up (compile)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _worker(n_tokens: int, reps: int) -> dict:
+    """Runs inside the pinned subprocess; returns the JSON record."""
+    import jax
+    import numpy as np
+
+    from repro.core.speculative import tree as T
+    from repro.core.speculative.medusa import init_medusa
+    from repro.models.api import get_model
+    from repro.runtime.engine import BatchEngine, SpeculativeEngine
+    from repro.runtime.sampling import greedy
+
+    cfg = _engine_smoke_cfg()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    heads = init_medusa(cfg, jax.random.PRNGKey(1))
+    spec = T.build_tree(T.default_accs(cfg.medusa_heads, cfg.medusa_top_k), 4)
+    max_len = 32 + n_tokens + spec.max_depth * 8
+
+    record = {"arch": cfg.name, "n_tokens": n_tokens, "tree_width": 4,
+              "grid": []}
+    prompts = {
+        B: {"tokens": jax.random.randint(jax.random.PRNGKey(2), (B, 16), 0,
+                                         cfg.vocab_size)}
+        for B in BATCHES
+    }
+
+    # the seed's per-step Python sequential loop (pre-chunking baseline)
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=max_len))
+    decode = jax.jit(lambda p, c, t: model.decode(p, c, t))
+
+    def legacy(batch, n):
+        logits, _, cache = prefill(params, batch)
+        cur = greedy(logits[:, -1])
+        out = [np.asarray(cur)]
+        for _ in range(n - 1):
+            lg, cache = decode(params, cache, cur[:, None])
+            cur = greedy(lg[:, 0])
+            cur.block_until_ready()
+            out.append(np.asarray(cur))
+        return np.stack(out, axis=1)
+
+    t_legacy = _time(lambda: legacy(prompts[1], n_tokens), reps)
+    record["legacy_seq_b1_tok_s"] = n_tokens / t_legacy
+
+    for B in BATCHES:
+        for K in CHUNKS:
+            seq = BatchEngine(model, params, max_len=max_len, chunk=K)
+            t = _time(lambda: seq.generate(prompts[B], n_tokens), reps)
+            record["grid"].append({"engine": "sequential", "B": B, "K": K,
+                                   "tok_s": B * n_tokens / t})
+
+            eng = SpeculativeEngine(model, heads, params, spec,
+                                    max_len=max_len, chunk=K)
+            _, stats = eng.generate(prompts[B], n_tokens)
+            t = _time(lambda: eng.generate(prompts[B], n_tokens), reps)
+            record["grid"].append({"engine": "speculative", "B": B, "K": K,
+                                   "tok_s": B * n_tokens / t,
+                                   "acceptance": stats["acceptance_length"]})
+
+    def _tok_s(engine, B, K):
+        return next(g["tok_s"] for g in record["grid"]
+                    if (g["engine"], g["B"], g["K"]) == (engine, B, K))
+
+    record["speedup_spec_k8_vs_legacy_b1"] = \
+        _tok_s("speculative", 1, 8) / record["legacy_seq_b1_tok_s"]
+    record["scaleup_spec_b8_vs_b1_k8"] = \
+        _tok_s("speculative", 8, 8) / _tok_s("speculative", 1, 8)
+    # batched + chunked engine vs what the seed engine could do (B=1,
+    # per-step cadence) — the serving-shaped end-to-end gain this PR adds
+    record["speedup_spec_b8k8_vs_seed_b1k1"] = \
+        _tok_s("speculative", 8, 8) / _tok_s("speculative", 1, 1)
+    return record
+
+
+def run(n_tokens=64, reps=3) -> list:
+    """Spawn the pinned-environment worker, persist + pretty-print results."""
+    env = dict(os.environ)
+    env.update(_WORKER_ENV)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--worker",
+         "--tokens", str(n_tokens), "--reps", str(reps)],
+        capture_output=True, text=True, env=env, timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(f"engine_bench worker failed:\n{out.stderr[-2000:]}")
+    record = json.loads(out.stdout.strip().splitlines()[-1])
+
+    rows = [("engine_legacy_seq_b1", 1e6 / record["legacy_seq_b1_tok_s"],
+             f"{record['legacy_seq_b1_tok_s']:.1f} tok/s")]
+    for g in record["grid"]:
+        name = f"engine_{g['engine'][:4]}_b{g['B']}_k{g['K']}"
+        derived = f"{g['tok_s']:.1f} tok/s agg"
+        if "acceptance" in g:
+            derived += f", AL={g['acceptance']:.2f}"
+        rows.append((name, 1e6 / g["tok_s"], derived))
+    rows.append(("engine_speedup_spec_k8_vs_legacy",
+                 record["speedup_spec_k8_vs_legacy_b1"], "x vs per-step loop"))
+    rows.append(("engine_scaleup_spec_b8_vs_b1",
+                 record["scaleup_spec_b8_vs_b1_k8"], "x aggregate (2-CPU box)"))
+    rows.append(("engine_speedup_b8k8_vs_seed",
+                 record["speedup_spec_b8k8_vs_seed_b1k1"],
+                 "x vs seed B=1 per-step engine"))
+
+    os.makedirs(RESULT_DIR, exist_ok=True)
+    path = os.path.join(RESULT_DIR, "engine_bench.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    for name, val, derived in rows:
+        print(f"{name},{val:.1f},{derived}")
+    print(f"[engine_bench] wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=64)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--worker", action="store_true")
+    args = ap.parse_args()
+    if args.worker:
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "src"))
+        print(json.dumps(_worker(args.tokens, args.reps)))
+    else:
+        run(args.tokens, args.reps)

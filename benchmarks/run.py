@@ -34,6 +34,11 @@ def main() -> None:
     print("=" * 70); print("## micro — step latencies (CPU smoke)")
     rows += microbench.run()
 
+    from benchmarks import engine_bench
+    print("=" * 70); print("## engine — measured tokens/sec "
+                           "(batch x chunk, CPU smoke)")
+    rows += engine_bench.run(n_tokens=32)
+
     from benchmarks import ablations
     print("=" * 70); print("## ablations (beyond paper)")
     rows += ablations.run()

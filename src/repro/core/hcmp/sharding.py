@@ -114,8 +114,10 @@ def cache_specs(cfg, cache, *, batch_axes=("pod", "data"), seq_axis="model"):
             return P(None, bax(1), "model" if nh % 16 == 0 else None, None, None)
         if name == "conv":                # (L, B, K-1, C) — tiny, replicate C
             return P(None, bax(1), None, None)
-        if name in ("key_pos", "pos"):
-            return P() if leaf.ndim == 0 else P(None)
+        if name == "key_pos":             # (B, S): follow k/v batch + seq
+            return P(bax(0), seq_axis)
+        if name == "pos":                 # (B,) per-sequence positions
+            return P() if leaf.ndim == 0 else P(bax(0))
         # xlstm layer states (B, ...) — batch only
         if leaf.ndim >= 1 and "layers" in names:
             return P(bax(0), *(None,) * (leaf.ndim - 1))

@@ -51,6 +51,20 @@ class TreeSpec:
         }
 
 
+def _register_tree(cls):
+    """Register Tree as a pytree so it can be passed as a jit ARGUMENT: the
+    serving engine then shares one compiled ``spec_step`` across all trees of
+    the same shape (width, max_depth, n_paths) instead of re-jitting per tree
+    — ARCA's brute-force evaluator sweeps many same-width candidates."""
+    import jax
+    from functools import partial as _p
+    return _p(jax.tree_util.register_dataclass,
+              data_fields=["depth", "mask", "paths", "node_path",
+                           "node_depth", "parent", "rank"],
+              meta_fields=["width", "max_depth"])(cls)
+
+
+@_register_tree
 @dataclasses.dataclass(frozen=True)
 class Tree:
     """jit-friendly view of TreeSpec (jnp arrays) used by model.verify."""

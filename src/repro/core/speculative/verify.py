@@ -59,15 +59,17 @@ def accept_walk(tree, tree_tokens, logits):
          data_fields=["cache", "cur_token", "hidden"], meta_fields=[])
 @dataclasses.dataclass
 class SpecState:
-    """Carry between speculative steps (single-sample, B=1 per the paper)."""
+    """Carry between speculative steps (any batch size B)."""
     cache: Any
     cur_token: jax.Array     # (B,) last committed token (next root)
     hidden: jax.Array        # (B, d) hidden at that token (drafting input)
 
 
 def spec_step(model, params, heads, tree, state: SpecState, *, backend="ref"):
-    """One Ghidorah speculative decoding step.
+    """One Ghidorah speculative decoding step, batched over sequences.
 
+    Each sequence accepts its own chain length; the commit is a per-sequence
+    masked ring write, so positions diverge across the batch.
     Returns (new_state, out_tokens (B, Dmax) emitted tokens padded with the
     bonus, n_out (B,) = acceptance length this step).
     """
@@ -78,11 +80,10 @@ def spec_step(model, params, heads, tree, state: SpecState, *, backend="ref"):
                                   backend=backend)
     acc = accept_walk(tree, tree_tokens, logits)
 
-    # single-sample commit (paper's end-user setting): B == 1
-    chain0 = acc["chain"][0]
-    n0 = acc["n_accept"][0]
-    path_idx = tree.node_path[acc["last_node"][0]]
-    cache = model.commit(state.cache, extras, tree, chain0, n0, path_idx)
+    # batched commit: per-sequence accepted chain / length / path
+    path_idx = tree.node_path[acc["last_node"]]              # (B,)
+    cache = model.commit(state.cache, extras, tree, acc["chain"],
+                         acc["n_accept"], path_idx)
 
     hidden = extras["hidden"]                       # (B, W, d)
     new_hidden = jnp.take_along_axis(

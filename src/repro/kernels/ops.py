@@ -15,8 +15,16 @@ INTERPRET = True
 
 def tree_attention(q, ck, cv, k_new, v_new, key_pos, pos, tree_depth,
                    tree_mask, *, window=0, block_s=None):
-    """Signature used by models/attention.py (backend="pallas")."""
-    q_pos = (pos + tree_depth).astype(jnp.int32)           # (W,)
+    """Signature used by models/attention.py (backend="pallas").
+
+    ``pos`` is () or (B,) and ``key_pos`` (S,) or (B, S): sequences sit at
+    different absolute positions once batched speculative commits diverge,
+    so the kernel takes per-batch ``q_pos``/``lo`` rows.
+    """
+    B = q.shape[0]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    key_pos_b = jnp.broadcast_to(key_pos, (B, ck.shape[1]))
+    q_pos = pos_b[:, None] + tree_depth[None, :].astype(jnp.int32)  # (B, W)
     if window:
         lo = q_pos - window
     else:
@@ -24,8 +32,8 @@ def tree_attention(q, ck, cv, k_new, v_new, key_pos, pos, tree_depth,
     kwargs = {"interpret": INTERPRET}
     if block_s:
         kwargs["block_s"] = block_s
-    return _tree.tree_attention(q, ck, cv, k_new, v_new, key_pos, q_pos, lo,
-                                tree_mask, **kwargs)
+    return _tree.tree_attention(q, ck, cv, k_new, v_new, key_pos_b, q_pos,
+                                lo, tree_mask, **kwargs)
 
 
 def decode_attention(q, ck, cv, k_new, v_new, key_pos, pos, *, window=0):

@@ -39,7 +39,7 @@ def _kernel(q_ref, ck_ref, cv_ref, kn_ref, vn_ref, kpos_ref, qpos_ref,
 
     q = q_ref[0, 0].astype(jnp.float32)            # (GW, hd)
     GW = q.shape[0]
-    W = qpos_ref.shape[0]
+    W = qpos_ref.shape[1]
     G = GW // W
 
     def online_update(s, v, valid):
@@ -57,9 +57,9 @@ def _kernel(q_ref, ck_ref, cv_ref, kn_ref, vn_ref, kpos_ref, qpos_ref,
     def _cache_block():
         k = ck_ref[0, :, 0].astype(jnp.float32)    # (BS, hd)
         v = cv_ref[0, :, 0].astype(jnp.float32)
-        kpos = kpos_ref[...]                       # (BS,)
-        qpos = qpos_ref[...]                       # (W,)
-        lo = lo_ref[...]
+        kpos = kpos_ref[0]                         # (BS,) this sequence's row
+        qpos = qpos_ref[0]                         # (W,)
+        lo = lo_ref[0]
         ok = ((kpos[None, :] >= 0)
               & (kpos[None, :] <= qpos[:, None])
               & (kpos[None, :] > lo[:, None]))     # (W, BS)
@@ -80,7 +80,9 @@ def _kernel(q_ref, ck_ref, cv_ref, kn_ref, vn_ref, kpos_ref, qpos_ref,
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def tree_attention(q, ck, cv, k_new, v_new, key_pos, q_pos, lo, tree_mask,
                    *, block_s=DEFAULT_BLOCK_S, interpret=True):
-    """See ref.tree_attention_ref for semantics.  q: (B, W, Hq, hd)."""
+    """See ref.tree_attention_ref for semantics.  q: (B, W, Hq, hd);
+    key_pos: (B, S); q_pos/lo: (B, W) — per-sequence position rows (batched
+    speculative decoding leaves each sequence at its own absolute position)."""
     B, W, Hq, hd = q.shape
     S, Hkv = ck.shape[1], ck.shape[2]
     G = Hq // Hkv
@@ -91,7 +93,7 @@ def tree_attention(q, ck, cv, k_new, v_new, key_pos, q_pos, lo, tree_mask,
     if pad:
         ck = jnp.pad(ck, ((0, 0), (0, pad), (0, 0), (0, 0)))
         cv = jnp.pad(cv, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        key_pos = jnp.pad(key_pos, (0, pad), constant_values=-1)
+        key_pos = jnp.pad(key_pos, ((0, 0), (0, pad)), constant_values=-1)
     nblocks = (S + pad) // bs
 
     # regroup queries: (B, Hkv, G*W, hd)
@@ -112,9 +114,10 @@ def tree_attention(q, ck, cv, k_new, v_new, key_pos, q_pos, lo, tree_mask,
                          lambda b, h, i, _n=nblocks: (b, jnp.minimum(i, _n - 1), h, 0)),
             pl.BlockSpec((1, W, 1, hd), lambda b, h, i: (b, 0, h, 0)),
             pl.BlockSpec((1, W, 1, hd), lambda b, h, i: (b, 0, h, 0)),
-            pl.BlockSpec((bs,), lambda b, h, i, _n=nblocks: (jnp.minimum(i, _n - 1),)),
-            pl.BlockSpec((W,), lambda b, h, i: (0,)),
-            pl.BlockSpec((W,), lambda b, h, i: (0,)),
+            pl.BlockSpec((1, bs),
+                         lambda b, h, i, _n=nblocks: (b, jnp.minimum(i, _n - 1))),
+            pl.BlockSpec((1, W), lambda b, h, i: (b, 0)),
+            pl.BlockSpec((1, W), lambda b, h, i: (b, 0)),
             pl.BlockSpec((W, W), lambda b, h, i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, G * W, hd), lambda b, h, i: (b, h, 0, 0)),

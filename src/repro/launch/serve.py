@@ -1,8 +1,9 @@
-"""Serving launcher: single-sample Ghidorah speculative serving or batched
-sequential serving on the local device(s).
+"""Serving launcher: batched Ghidorah speculative serving or batched
+sequential serving on the local device(s), with the device-resident chunked
+decode loop (one host sync per ``--chunk`` steps).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b-smoke \
-      --mode ghidorah --width 8 --tokens 64
+      --mode ghidorah --width 8 --tokens 64 --batch 4 --chunk 8
 """
 from __future__ import annotations
 
@@ -31,6 +32,8 @@ def main():
                     help="verification width (0 = let ARCA choose)")
     ap.add_argument("--tokens", type=int, default=64)
     ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="device-resident steps per host sync")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--heads-ckpt", default=None)
@@ -49,7 +52,7 @@ def main():
     max_len = args.prompt_len + args.tokens + 8
 
     if args.mode == "sequential":
-        eng = BatchEngine(model, params, max_len=max_len)
+        eng = BatchEngine(model, params, max_len=max_len, chunk=args.chunk)
         t0 = time.perf_counter()
         out, stats = eng.generate(batch, args.tokens)
         dt = time.perf_counter() - t0
@@ -68,14 +71,17 @@ def main():
         spec = strat.tree
         print(f"[serve] ARCA chose width={strat.width} "
               f"(E[AL]={strat.acceptance:.2f})")
-    eng = SpeculativeEngine(model, heads, params, spec, max_len=max_len)
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=max_len,
+                            chunk=args.chunk)
     t0 = time.perf_counter()
-    out, stats = eng.generate({"tokens": batch["tokens"][:1]}, args.tokens)
+    out, stats = eng.generate(batch, args.tokens)        # full batch: B >= 1
     dt = time.perf_counter() - t0
-    print(f"[serve] ghidorah: {len(out)} tokens in {dt:.2f}s "
-          f"({len(out) / dt:.1f} tok/s), "
+    n_out = out.size
+    print(f"[serve] ghidorah: {n_out} tokens "
+          f"({args.batch} seq x chunk {args.chunk}) in {dt:.2f}s "
+          f"({n_out / dt:.1f} tok/s), "
           f"acceptance length {stats['acceptance_length']:.2f} "
-          f"over {stats['steps']} steps")
+          f"over {stats['steps']} seq-steps")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,12 @@
   prefill(params, batch, max_len, window)        -> logits, aux, cache
   decode(params, cache, tokens)                  -> logits, cache
   verify(params, cache, tree_tokens, spec)       -> logits, extras
-  commit(cache, extras, spec, accept...)         -> cache
+  commit(cache, extras, spec,
+         accept_nodes (B, Dmax), n_accept (B,),
+         path_idx (B,))                          -> cache
+
+``commit`` is batched: every sequence commits its own accepted chain length,
+so cache positions diverge per sequence (see runtime/cache.py).
 
 ``batch`` for prefill is a dict: {"tokens": (B,S)} and, for modality archs,
 {"frame_embeds" | "patch_embeds": (B,T,d)}.  The VLM path concatenates

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common as cm
-from repro.runtime.cache import decode_mask, prefill_mask
+from repro.runtime.cache import batched_decode_mask, prefill_mask
 
 
 def attn_init(cfg, rng):
@@ -166,22 +166,26 @@ def attn_verify(cfg, p, x, *, ck, cv, key_pos, pos, tree_depth, tree_mask,
 
     x: (B, W, d); ck/cv: (B, S, Hkv, hd) cache; tree_depth: (W,) node depth
     (0 = first new token); tree_mask: (W, W) ancestor-or-self mask.
+    ``pos`` and ``key_pos`` are per-sequence — () or (B,), and (S,) or (B, S)
+    — because batched speculative decoding leaves each sequence at its own
+    absolute position after a commit.
     Returns (out (B, W, d), (k_new, v_new)) — fresh KVs NOT yet committed.
     """
     B, W, _ = x.shape
-    positions = pos + tree_depth[None, :]                      # (1|B, W)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    key_pos_b = jnp.broadcast_to(key_pos, (B, ck.shape[1]))
+    positions = pos_b[:, None] + tree_depth[None, :]           # (B, W)
     q, k_new, v_new = _qkv(cfg, p, x, positions)
     scale = cfg.head_dim ** -0.5
 
     if backend == "pallas":
         from repro.kernels import ops as kops
-        o = kops.tree_attention(q, ck, cv, k_new, v_new, key_pos,
-                                pos, tree_depth, tree_mask, window=window)
+        o = kops.tree_attention(q, ck, cv, k_new, v_new, key_pos_b,
+                                pos_b, tree_depth, tree_mask, window=window)
     else:
-        # dense part: W queries vs the KV cache (per-query window mask)
-        q_pos = positions[0]                                   # (W,)
-        cache_ok = jax.vmap(lambda qp: decode_mask(key_pos, qp, window))(q_pos)
-        dense = cm.gqa_attend_partial(q, ck, cv, cache_ok[None, None], scale)
+        # dense part: W queries vs the KV cache (per-batch, per-query mask)
+        cache_ok = batched_decode_mask(key_pos_b, positions, window)  # (B,W,S)
+        dense = cm.gqa_attend_partial(q, ck, cv, cache_ok[:, None], scale)
         # sparse part: W queries vs W fresh tree KVs under the ancestor mask
         sparse = cm.gqa_attend_partial(q, k_new, v_new,
                                        tree_mask[None, None], scale)

@@ -15,7 +15,8 @@ from repro.models import mamba2 as mb
 from repro.models import recurrent_verify as rv
 from repro.models.attention import attn_init, attn_prefill, attn_verify
 from repro.models.mlp import mlp_apply, mlp_init
-from repro.runtime.cache import Cache, KVCache, MambaState, init_kv_cache
+from repro.runtime.cache import (Cache, KVCache, MambaState, init_kv_cache,
+                                 kv_commit)
 
 
 def n_sites(cfg):
@@ -140,12 +141,11 @@ def prefill(cfg, params, tokens=None, embeds=None, *, cache=None, window=0,
     states = jax.tree_util.tree_map(
         lambda *a: jnp.concatenate(a, axis=0), *seg_states)
 
-    key_pos = kv.key_pos.at[k_slots].set(abs_pos)
+    key_pos = kv.key_pos.at[:, k_slots].set(abs_pos)       # same row per seq
+    pos = jnp.full((B,), S, jnp.int32)
     new_cache = Cache(
-        kv=KVCache(k=ak, v=av, key_pos=key_pos,
-                   pos=jnp.asarray(S, jnp.int32), window=kv.window),
-        mamba=MambaState(ssm=states["ssm"], conv=states["conv"],
-                         pos=jnp.asarray(S, jnp.int32)))
+        kv=KVCache(k=ak, v=av, key_pos=key_pos, pos=pos, window=kv.window),
+        mamba=MambaState(ssm=states["ssm"], conv=states["conv"], pos=pos))
     return (_logits(cfg, params, x[:, -1:] if last_logits else x),
             {"aux_loss": jnp.zeros((), jnp.float32), "hidden": x},
             new_cache if return_cache else None)
@@ -209,6 +209,7 @@ def verify(cfg, params, cache: Cache, tree_tokens, tree_depth, tree_mask,
 
 def decode(cfg, params, cache: Cache, tokens, *, backend="ref"):
     """1-token decode via the W=1 tree."""
+    B = tokens.shape[0]
     logits, extras = verify(
         cfg, params, cache, tokens,
         tree_depth=jnp.zeros((1,), jnp.int32),
@@ -218,48 +219,42 @@ def decode(cfg, params, cache: Cache, tokens, *, backend="ref"):
         node_depth=jnp.zeros((1,), jnp.int32),
         backend=backend)
     cache = commit(cfg, cache, extras,
-                   accept_nodes=jnp.zeros((1,), jnp.int32),
-                   n_accept=jnp.asarray(1, jnp.int32),
-                   path_idx=jnp.asarray(0, jnp.int32), max_depth=1)
+                   accept_nodes=jnp.zeros((B, 1), jnp.int32),
+                   n_accept=jnp.ones((B,), jnp.int32),
+                   path_idx=jnp.zeros((B,), jnp.int32), max_depth=1)
     return logits, cache
 
 
 def commit(cfg, cache: Cache, extras, accept_nodes, n_accept, path_idx,
            max_depth):
-    """Commit accepted path: select recurrent states at (path, depth) and
-    scatter accepted tree KVs into the shared-attn cache sites."""
+    """Commit accepted paths: select each sequence's recurrent state at its
+    (path, depth) and scatter its accepted tree KVs into the shared-attn
+    cache sites.  accept_nodes (B, Dmax); n_accept/path_idx (B,)."""
     kv, ms = cache.kv, cache.mamba
     B = kv.k.shape[1]
     P = extras["P"]
 
-    # recurrent states: (L, D, B*P, ...) -> (L, B, ...)
+    # recurrent states: (L, D, B*P, ...) -> (L, B, ...), per-sequence indices
     def sel(s):
-        d_state = jax.lax.dynamic_index_in_dim(s, n_accept - 1, 1, False)
-        d_state = d_state.reshape((s.shape[0], B, P) + s.shape[3:])
-        return jax.lax.dynamic_index_in_dim(d_state, path_idx, 2, False)
+        sbp = s.reshape(s.shape[:2] + (B, P) + s.shape[3:])    # (L,D,B,P,...)
+
+        def one(sb, n, pi):
+            # sb: (L, D, P, ...) for one sequence
+            d_state = jax.lax.dynamic_index_in_dim(sb, n - 1, 1, False)
+            return jax.lax.dynamic_index_in_dim(d_state, pi, 1, False)
+
+        return jax.vmap(one, in_axes=(2, 0, 0), out_axes=1)(
+            sbp, n_accept, path_idx)
 
     new_ssm = sel(extras["depth_states"]["ssm"])
     new_conv = sel(extras["depth_states"]["conv"])
 
-    # shared-attn KV scatter (same masked-write scheme as transformer.commit)
-    size = kv.max_len
-    idx = jnp.arange(max_depth, dtype=jnp.int32)
-    abs_pos = kv.pos + idx
-    slots = abs_pos % size
-    valid = idx < n_accept
-    sel_k = jnp.take(extras["tree_k"], accept_nodes, axis=2)
-    sel_v = jnp.take(extras["tree_v"], accept_nodes, axis=2)
-    mask = valid[None, None, :, None, None]
-    wk = jnp.where(mask, sel_k.astype(kv.k.dtype), kv.k[:, :, slots])
-    wv = jnp.where(mask, sel_v.astype(kv.v.dtype), kv.v[:, :, slots])
-    key_pos = kv.key_pos.at[slots].set(
-        jnp.where(valid, abs_pos, kv.key_pos[slots]))
-    new_pos = kv.pos + n_accept.astype(jnp.int32)
+    # shared-attn KV scatter (vmapped masked ring write, as transformer.commit)
+    new_kv = kv_commit(kv, extras["tree_k"], extras["tree_v"],
+                       accept_nodes, n_accept, max_depth)
     return Cache(
-        kv=KVCache(k=kv.k.at[:, :, slots].set(wk),
-                   v=kv.v.at[:, :, slots].set(wv),
-                   key_pos=key_pos, pos=new_pos, window=kv.window),
-        mamba=MambaState(ssm=new_ssm, conv=new_conv, pos=new_pos))
+        kv=new_kv,
+        mamba=MambaState(ssm=new_ssm, conv=new_conv, pos=new_kv.pos))
 
 
 def init_cache(cfg, batch, max_len, *, window=0):
@@ -272,4 +267,4 @@ def init_cache(cfg, batch, max_len, *, window=0):
             ssm=jnp.zeros((cfg.num_layers, batch, nh, hd, N), jnp.float32),
             conv=jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv - 1, di + 2 * N),
                            jnp.dtype(cfg.dtype)),
-            pos=jnp.zeros((), jnp.int32)))
+            pos=jnp.zeros((batch,), jnp.int32)))

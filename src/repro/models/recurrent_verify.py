@@ -59,14 +59,20 @@ def path_verify(step_fn, x_nodes, state, paths, node_path, node_depth):
 
 
 def select_committed_state(per_depth_states, path_idx, n_accept, batch, P):
-    """State after accepting ``n_accept`` tokens along path ``path_idx``.
+    """State after accepting ``n_accept[b]`` tokens along path ``path_idx[b]``
+    for each sequence b.
 
-    per_depth_states leaves: (D, B*P, ...) -> (B, ...).
+    per_depth_states leaves: (D, B*P, ...); path_idx/n_accept: (B,).
+    Returns leaves (B, ...).
     """
     def sel(s):
-        d_state = jax.lax.dynamic_index_in_dim(
-            s, n_accept - 1, axis=0, keepdims=False)       # (B*P, ...)
-        d_state = d_state.reshape((batch, P) + s.shape[2:])
-        return jax.lax.dynamic_index_in_dim(
-            d_state, path_idx, axis=1, keepdims=False)     # (B, ...)
+        sbp = s.reshape((s.shape[0], batch, P) + s.shape[2:])  # (D, B, P, ...)
+
+        def one(sb, n, pi):
+            # sb: (D, P, ...) for one sequence
+            d_state = jax.lax.dynamic_index_in_dim(sb, n - 1, 0, False)
+            return jax.lax.dynamic_index_in_dim(d_state, pi, 0, False)
+
+        return jax.vmap(one, in_axes=(1, 0, 0), out_axes=0)(
+            sbp, n_accept, path_idx)
     return jax.tree_util.tree_map(sel, per_depth_states)

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from repro.models import common as cm
 from repro.models.attention import attn_decode, attn_init, attn_prefill, attn_verify
 from repro.models.mlp import mlp_apply, mlp_init, moe_apply, moe_init
-from repro.runtime.cache import Cache, KVCache, init_kv_cache
+from repro.runtime.cache import (Cache, KVCache, _ring_match, init_kv_cache,
+                                 kv_commit)
 
 
 def init_params(cfg, rng):
@@ -101,19 +102,49 @@ def prefill(cfg, params, tokens=None, embeds=None, *, cache=None, window=0,
 
 
 def _bulk_write(kv: KVCache, ks, vs, start):
-    """Write (L,B,S,Hkv,hd) prefill KVs.  Ring buffer keeps the tail."""
-    S = ks.shape[2]
+    """Write (L,B,S,Hkv,hd) KVs at [start_b, start_b + S) per sequence.
+
+    ``start`` is a scalar (prefill: uniform positions) or (B,) per-sequence
+    positions (decode after speculative steps, where positions diverge).
+    Ring buffer keeps the tail when S exceeds the cache size.
+    """
+    B, S = ks.shape[1], ks.shape[2]
     size = kv.max_len
+    off = 0
     if S >= size:                     # only the last `size` entries survive
         ks, vs = ks[:, :, -size:], vs[:, :, -size:]
-        abs_pos = start + S - size + jnp.arange(size, dtype=jnp.int32)
-    else:
-        abs_pos = start + jnp.arange(S, dtype=jnp.int32)
-    slots = abs_pos % size
-    return KVCache(k=kv.k.at[:, :, slots].set(ks.astype(kv.k.dtype)),
-                   v=kv.v.at[:, :, slots].set(vs.astype(kv.v.dtype)),
-                   key_pos=kv.key_pos.at[slots].set(abs_pos),
-                   pos=jnp.asarray(start + S, jnp.int32), window=kv.window)
+        off, S = S - size, size
+    start = jnp.asarray(start, jnp.int32)
+
+    if start.ndim == 0:
+        # uniform positions: one contiguous O(S_new) ring scatter shared by
+        # the whole batch (prefill can be long — the per-sequence
+        # gather+where path below would be O(S_cache * S_new))
+        abs_pos = start + off + jnp.arange(S, dtype=jnp.int32)
+        slots = abs_pos % size
+        return KVCache(
+            k=kv.k.at[:, :, slots].set(ks.astype(kv.k.dtype)),
+            v=kv.v.at[:, :, slots].set(vs.astype(kv.v.dtype)),
+            key_pos=kv.key_pos.at[:, slots].set(abs_pos),
+            pos=jnp.full((B,), start + off + S, jnp.int32),
+            window=kv.window)
+
+    # diverged per-sequence positions: one ring-match per sequence, applied
+    # to every layer's K and V and to key_pos (see cache._ring_match)
+    def one(ck, cv, kp, kn, vn, st):
+        # ck/cv: (L, S_cache, Hkv, hd); kn/vn: (L, S, Hkv, hd) one sequence
+        abs_pos = st + off + jnp.arange(S, dtype=jnp.int32)
+        written, src = _ring_match(abs_pos, jnp.ones((S,), bool), size)
+        m = written[None, :, None, None]
+        return (jnp.where(m, kn[:, src].astype(ck.dtype), ck),
+                jnp.where(m, vn[:, src].astype(cv.dtype), cv),
+                jnp.where(written, abs_pos[src], kp))
+
+    k2, v2, kp2 = jax.vmap(one, in_axes=(1, 1, 0, 1, 1, 0),
+                           out_axes=(1, 1, 0))(kv.k, kv.v, kv.key_pos,
+                                               ks, vs, start)
+    return KVCache(k=k2, v=v2, key_pos=kp2,
+                   pos=start + off + S, window=kv.window)
 
 
 # --------------------------------------------------------------------------
@@ -160,32 +191,14 @@ def decode(cfg, params, cache: Cache, tokens, *, backend="ref"):
 
 
 def commit(cfg, cache: Cache, extras, accept_nodes, n_accept, max_depth):
-    """Scatter the accepted tree path's KVs at positions [pos, pos+n).
+    """Scatter each sequence's accepted tree path at [pos_b, pos_b + n_b).
 
-    accept_nodes: (Dmax,) node indices of the accepted path (padded);
-    n_accept: () number of accepted tokens (1..Dmax).
-    Writes are masked: slots beyond n_accept keep their previous contents.
+    accept_nodes: (B, Dmax) node indices of the accepted paths (padded);
+    n_accept: (B,) accepted tokens per sequence (1..Dmax).
+    Writes are masked per sequence: slots beyond n_accept[b] keep their
+    previous contents (the vmapped ring scatter lives in cache.kv_commit).
     """
-    kv = cache.kv
     tree_kv = extras["tree_kv"] if isinstance(extras, dict) else extras
     k_new, v_new = tree_kv                                   # (L,B,W,Hkv,hd)
-    size = kv.max_len
-    idx = jnp.arange(max_depth, dtype=jnp.int32)
-    abs_pos = kv.pos + idx
-    slots = abs_pos % size
-    valid = idx < n_accept
-
-    sel_k = jnp.take(k_new, accept_nodes, axis=2)            # (L,B,Dmax,...)
-    sel_v = jnp.take(v_new, accept_nodes, axis=2)
-    old_k = kv.k[:, :, slots]
-    old_v = kv.v[:, :, slots]
-    mask = valid[None, None, :, None, None]
-    wk = jnp.where(mask, sel_k.astype(kv.k.dtype), old_k)
-    wv = jnp.where(mask, sel_v.astype(kv.v.dtype), old_v)
-    new_pos_vals = jnp.where(valid, abs_pos, kv.key_pos[slots])
-    return Cache(kv=KVCache(
-        k=kv.k.at[:, :, slots].set(wk),
-        v=kv.v.at[:, :, slots].set(wv),
-        key_pos=kv.key_pos.at[slots].set(new_pos_vals),
-        pos=kv.pos + n_accept.astype(jnp.int32),
-        window=kv.window))
+    return Cache(kv=kv_commit(cache.kv, k_new, v_new, accept_nodes,
+                              n_accept, max_depth))

@@ -44,7 +44,7 @@ def init_cache(cfg, batch, max_len=0, *, window=0) -> Cache:
         else:
             sts.append(xl.mlstm_init_state(cfg, batch))
     return Cache(xlstm=XLSTMState(layers=tuple(sts),
-                                  pos=jnp.zeros((), jnp.int32)))
+                                  pos=jnp.zeros((batch,), jnp.int32)))
 
 
 def prefill(cfg, params, tokens=None, embeds=None, *, cache=None, window=0,
@@ -90,6 +90,7 @@ def verify(cfg, params, cache: Cache, tree_tokens, tree_depth, tree_mask,
 
 
 def decode(cfg, params, cache: Cache, tokens, *, backend="ref"):
+    B = tokens.shape[0]
     logits, extras = verify(
         cfg, params, cache, tokens,
         tree_depth=jnp.zeros((1,), jnp.int32),
@@ -98,14 +99,15 @@ def decode(cfg, params, cache: Cache, tokens, *, backend="ref"):
         node_path=jnp.zeros((1,), jnp.int32),
         node_depth=jnp.zeros((1,), jnp.int32))
     cache = commit(cfg, cache, extras,
-                   accept_nodes=jnp.zeros((1,), jnp.int32),
-                   n_accept=jnp.asarray(1, jnp.int32),
-                   path_idx=jnp.asarray(0, jnp.int32), max_depth=1)
+                   accept_nodes=jnp.zeros((B, 1), jnp.int32),
+                   n_accept=jnp.ones((B,), jnp.int32),
+                   path_idx=jnp.zeros((B,), jnp.int32), max_depth=1)
     return logits, cache
 
 
 def commit(cfg, cache: Cache, extras, accept_nodes, n_accept, path_idx,
            max_depth):
+    """n_accept/path_idx: (B,) per-sequence acceptance and accepted path."""
     B, P = extras["B"], extras["P"]
     new_layers = tuple(
         rv.select_committed_state(sts, path_idx, n_accept, B, P)

@@ -5,12 +5,14 @@ Conventions
 -----------
 - KV arrays are stacked over layers: ``(L, B, S, Hkv, hd)`` so model stacks can
   ``lax.scan`` over the leading axis.
-- ``key_pos (S,)`` holds the absolute position stored in each cache slot
-  (-1 = empty).  With a sliding window the cache is a ring buffer: slot(p) =
-  p % S.  The attention mask is derived from ``key_pos`` (validity + causality
-  + window), so ring wraparound needs no special-casing.
-- ``pos ()`` is the number of tokens processed so far (uniform across the
-  batch; the serving engine schedules uniform-length batches and pads).
+- ``key_pos (B, S)`` holds the absolute position stored in each cache slot
+  (-1 = empty), **per sequence**.  With a sliding window the cache is a ring
+  buffer: slot(p) = p % S.  The attention mask is derived from ``key_pos``
+  (validity + causality + window), so ring wraparound needs no special-casing.
+- ``pos (B,)`` is the number of tokens processed so far **per sequence**.
+  Batched speculative decoding accepts a different number of draft tokens per
+  sequence each step, so positions diverge across the batch; every write and
+  mask below is therefore vmapped over the batch axis.
 - RoPE is applied to keys at *write* time with their absolute position.
 """
 from __future__ import annotations
@@ -29,8 +31,8 @@ import jax.numpy as jnp
 class KVCache:
     k: jax.Array          # (L, B, S, Hkv, hd)
     v: jax.Array          # (L, B, S, Hkv, hd)
-    key_pos: jax.Array    # (S,) int32 absolute position per slot; -1 empty
-    pos: jax.Array        # ()  int32 tokens processed so far
+    key_pos: jax.Array    # (B, S) int32 absolute position per slot; -1 empty
+    pos: jax.Array        # (B,) int32 tokens processed so far per sequence
     window: int = 0       # static: 0 = full attention; >0 = sliding window
 
     @property
@@ -44,7 +46,7 @@ class KVCache:
 class MambaState:
     ssm: jax.Array        # (L, B, nh, hd, N) float32
     conv: jax.Array       # (L, B, K-1, C)    conv tail (C = di + 2N)
-    pos: jax.Array        # () int32
+    pos: jax.Array        # (B,) int32
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -52,7 +54,7 @@ class MambaState:
 @dataclasses.dataclass
 class XLSTMState:
     layers: tuple         # per-layer dict of state arrays (unrolled stack)
-    pos: jax.Array
+    pos: jax.Array        # (B,) int32
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -82,37 +84,115 @@ def init_kv_cache(n_layers, batch, max_len, n_kv, head_dim, *, window=0,
     return KVCache(
         k=jnp.zeros((n_layers, batch, size, n_kv, head_dim), dtype),
         v=jnp.zeros((n_layers, batch, size, n_kv, head_dim), dtype),
-        key_pos=jnp.full((size,), -1, jnp.int32),
-        pos=jnp.zeros((), jnp.int32),
+        key_pos=jnp.full((batch, size), -1, jnp.int32),
+        pos=jnp.zeros((batch,), jnp.int32),
         window=window,
     )
 
 
+def _per_batch(start_pos, batch):
+    """Broadcast a scalar start position to (B,) int32."""
+    return jnp.broadcast_to(jnp.asarray(start_pos, jnp.int32), (batch,))
+
+
+def _ring_match(abs_pos, valid, size):
+    """Per-slot source index for a masked ring write.
+
+    abs_pos: (D,) absolute positions being written; valid: (D,) write mask.
+    Returns (written (S,), src (S,)): slot s takes entry src[s] iff
+    written[s].  Expressed as gather + where rather than scatter — XLA CPU
+    lowers batched dynamic scatters to a serialized loop, which dominated
+    the batched commit path (see engine_bench).  Duplicate slots (a write
+    run longer than the ring) resolve to the LAST write, matching scatter
+    semantics.
+    """
+    D = abs_pos.shape[0]
+    slots = abs_pos % size
+    match = (jnp.arange(size, dtype=jnp.int32)[:, None] == slots[None, :]) \
+        & valid[None, :]                                 # (S, D)
+    written = jnp.any(match, axis=1)
+    src = (D - 1) - jnp.argmax(match[:, ::-1], axis=1).astype(jnp.int32)
+    return written, src
+
+
 def kv_write(cache_k, cache_v, key_pos, k_new, v_new, start_pos):
-    """Write S_new entries at absolute positions [start, start+S_new).
+    """Write S_new entries per sequence at positions [start_b, start_b+S_new).
 
     cache_k/v: (B, S, Hkv, hd) — per-layer slices (inside scan).
-    k_new/v_new: (B, S_new, Hkv, hd).  Ring indexing: slot = pos % S.
+    key_pos: (B, S); k_new/v_new: (B, S_new, Hkv, hd).
+    start_pos: () or (B,) — per-sequence absolute start positions.
+    Ring indexing per sequence: slot = pos % S.
     Returns updated (cache_k, cache_v, key_pos).
     """
     S = cache_k.shape[1]
     s_new = k_new.shape[1]
-    abs_pos = start_pos + jnp.arange(s_new, dtype=jnp.int32)
-    slots = abs_pos % S
-    ck = cache_k.at[:, slots].set(k_new)
-    cv = cache_v.at[:, slots].set(v_new)
-    kp = key_pos.at[slots].set(abs_pos)
-    return ck, cv, kp
+    start = _per_batch(start_pos, cache_k.shape[0])
+
+    def one(ck, cv, kp, kn, vn, st):
+        abs_pos = st + jnp.arange(s_new, dtype=jnp.int32)
+        written, src = _ring_match(abs_pos, jnp.ones((s_new,), bool), S)
+        m = written[:, None, None]
+        return (jnp.where(m, kn[src].astype(ck.dtype), ck),
+                jnp.where(m, vn[src].astype(cv.dtype), cv),
+                jnp.where(written, abs_pos[src], kp))
+
+    return jax.vmap(one)(cache_k, cache_v, key_pos, k_new, v_new, start)
+
+
+def kv_commit(kv: KVCache, k_new, v_new, accept_nodes, n_accept,
+              max_depth) -> KVCache:
+    """Write each sequence's accepted tree path into its ring buffer.
+
+    k_new/v_new: (L, B, W, Hkv, hd) uncommitted tree KVs;
+    accept_nodes: (B, Dmax) node ids of the accepted chain (padded);
+    n_accept: (B,) accepted tokens per sequence (1..Dmax).
+    Writes are masked per sequence: slots beyond n_accept[b] keep their
+    previous contents, and ``pos`` advances by n_accept[b].
+    """
+    size = kv.max_len
+    idx = jnp.arange(max_depth, dtype=jnp.int32)
+
+    def one(ck, cv, kp, kn, vn, nodes, n, p):
+        # ck/cv: (L, S, Hkv, hd); kn/vn: (L, W, Hkv, hd); kp: (S,)
+        abs_pos = p + idx
+        written, src = _ring_match(abs_pos, idx < n, size)
+        sel_k = jnp.take(kn, nodes, axis=1)              # (L, Dmax, Hkv, hd)
+        sel_v = jnp.take(vn, nodes, axis=1)
+        m = written[None, :, None, None]
+        return (jnp.where(m, sel_k[:, src].astype(ck.dtype), ck),
+                jnp.where(m, sel_v[:, src].astype(cv.dtype), cv),
+                jnp.where(written, abs_pos[src], kp))
+
+    k2, v2, kp2 = jax.vmap(one, in_axes=(1, 1, 0, 1, 1, 0, 0, 0),
+                           out_axes=(1, 1, 0))(
+        kv.k, kv.v, kv.key_pos, k_new, v_new,
+        accept_nodes, n_accept, kv.pos)
+    return KVCache(k=k2, v=v2, key_pos=kp2,
+                   pos=kv.pos + n_accept.astype(jnp.int32), window=kv.window)
 
 
 def decode_mask(key_pos, q_pos, window):
     """Validity mask (T,) for one query at absolute position q_pos.
 
-    key_pos: (T,) absolute positions in cache (-1 empty).
+    key_pos: (T,) absolute positions in one sequence's cache (-1 empty).
     """
     ok = (key_pos >= 0) & (key_pos <= q_pos)
     if window:
         ok &= key_pos > q_pos - window
+    return ok
+
+
+def batched_decode_mask(key_pos, q_pos, window):
+    """Per-batch validity mask (B, W, S).
+
+    key_pos: (B, S) absolute positions per slot; q_pos: (B, W) absolute query
+    positions (they differ per sequence once acceptance lengths diverge).
+    """
+    kp = key_pos[:, None, :]                             # (B, 1, S)
+    qp = q_pos[:, :, None]                               # (B, W, 1)
+    ok = (kp >= 0) & (kp <= qp)
+    if window:
+        ok &= kp > qp - window
     return ok
 
 

@@ -1,102 +1,222 @@
-"""Serving engine: batched sequential decoding + single-sample Ghidorah
-speculative decoding, with jitted steps and (optional) profiling hooks that
-feed ARCA's measured-time search.
+"""Serving engines: batched sequential decoding and batched Ghidorah
+speculative decoding, with *device-resident chunked drivers*.
 
-The paper's setting is single-sample (end-user device); ``SpeculativeEngine``
-is B=1.  ``BatchEngine`` serves batched requests with plain decode (the
-Sequential baseline and the multi-request server example).
+Both engines run K decode/speculative steps inside a single jitted
+``lax.scan`` and transfer one fixed-size token chunk back to the host —
+one host sync per chunk instead of per token.  EOS is handled by a
+per-sequence done-mask carried through the scan: finished sequences stop
+emitting (their acceptance count drops to 0 / their token slot is padded
+with EOS) while the rest of the batch keeps decoding.
+
+``SpeculativeEngine`` accepts any batch size: each sequence accepts its own
+chain length per step and the cache commit is a per-sequence masked ring
+write (see runtime/cache.py), so positions diverge freely across the batch.
 """
 from __future__ import annotations
 
 import time
-from typing import List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.speculative.tree import Tree, TreeSpec
-from repro.core.speculative.verify import SpecState, spec_prefill, spec_step
+from repro.core.speculative.verify import spec_prefill, spec_step
 from repro.runtime.sampling import greedy
+
+_NO_EOS = -1          # sentinel: no real token id is negative
+
+
+def _eos_scalar(eos) -> jnp.ndarray:
+    return jnp.asarray(_NO_EOS if eos is None else int(eos), jnp.int32)
 
 
 class BatchEngine:
-    """Uniform-length batched prefill + decode (Sequential baseline)."""
+    """Uniform-length batched prefill + chunked decode (Sequential baseline).
+
+    ``chunk`` = K decode steps fused into one device call via ``lax.scan``;
+    K=1 degenerates to the per-step host-synced loop (the old behaviour).
+    """
 
     def __init__(self, model, params, *, max_len=512, window=0,
-                 backend="ref"):
+                 backend="ref", chunk=8):
         self.model, self.params = model, params
         self.max_len, self.window = max_len, window
-        self._decode = jax.jit(
-            lambda p, c, t: model.decode(p, c, t, backend=backend))
+        self.backend, self.chunk = backend, chunk
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len=max_len, window=window))
+        self._chunks = {}           # K -> jitted K-step scan
 
-    def generate(self, batch, n_tokens: int, *, eos: Optional[int] = None):
+    def _chunk_fn(self, K: int):
+        if K not in self._chunks:
+            model, backend = self.model, self.backend
+
+            def run(p, cache, cur, done, eos):
+                def body(carry, _):
+                    cache, cur, done = carry
+                    lg, cache = model.decode(p, cache, cur[:, None],
+                                             backend=backend)
+                    nxt = greedy(lg[:, 0])
+                    nxt = jnp.where(done, eos, nxt)     # pad finished seqs
+                    done = done | (nxt == eos)
+                    return (cache, nxt, done), nxt
+
+                (cache, cur, done), toks = jax.lax.scan(
+                    body, (cache, cur, done), None, length=K)
+                return cache, cur, done, toks           # toks: (K, B)
+
+            self._chunks[K] = jax.jit(run)
+        return self._chunks[K]
+
+    def generate(self, batch, n_tokens: int, *, eos: Optional[int] = None,
+                 chunk: Optional[int] = None):
+        K = chunk or self.chunk
+        eos_val = _eos_scalar(eos)
         logits, _, cache = self._prefill(self.params, batch)
         cur = greedy(logits[:, -1])
+        done = cur == eos_val
         out = [np.asarray(cur)]
         times = []
-        for _ in range(n_tokens - 1):
+        produced = 1
+        while produced < n_tokens and not bool(np.asarray(done).all()):
             t0 = time.perf_counter()
-            lg, cache = self._decode(self.params, cache, cur[:, None])
-            cur = greedy(lg[:, 0])
-            cur.block_until_ready()
+            cache, cur, done, toks = self._chunk_fn(K)(
+                self.params, cache, cur, done, eos_val)
+            toks = np.asarray(toks)              # ONE host sync per K tokens
             times.append(time.perf_counter() - t0)
-            out.append(np.asarray(cur))
-            if eos is not None and bool(np.all(np.stack(out[-1]) == eos)):
-                break
-        return np.stack(out, axis=1), {"step_times": times}
+            out.extend(toks[i] for i in range(toks.shape[0]))
+            produced += toks.shape[0]
+        return np.stack(out, axis=1)[:, :n_tokens], \
+            {"step_times": times, "chunk": K}
 
 
 class SpeculativeEngine:
-    """Ghidorah speculative serving (B=1): draft -> tree-verify -> accept."""
+    """Ghidorah speculative serving: draft -> tree-verify -> accept, batched
+    over sequences and chunked over steps (K speculative steps per device
+    call, one host transfer per chunk)."""
 
     def __init__(self, model, heads, params, tree_spec: TreeSpec, *,
-                 max_len=512, window=0, backend="ref"):
+                 max_len=512, window=0, backend="ref", chunk=8):
         self.model, self.heads, self.params = model, heads, params
         self.tree = Tree.from_spec(tree_spec)
+        self.max_depth = tree_spec.max_depth
         self.max_len, self.window = max_len, window
-        self._step = jax.jit(
-            lambda p, h, s: spec_step(model, p, h, self.tree, s,
-                                      backend=backend))
+        self.backend, self.chunk = backend, chunk
+        # the tree is a jit ARGUMENT of the chunk fns (registered pytree):
+        # same-shape trees share one compiled scan — ARCA sweeps many
+        # same-width candidates
         self._prefill = jax.jit(
             lambda p, h, b: spec_prefill(model, p, h, b,
                                          max_len=max_len, window=window))
+        self._chunks = {}           # K -> jitted K-step scan
 
-    def generate(self, batch, n_tokens: int, *, eos: Optional[int] = None):
+    def set_tree(self, tree_spec: TreeSpec) -> None:
+        """Swap the verification tree WITHOUT dropping compiled steps (used
+        by ``measure_acceptance`` across ARCA's candidate trees)."""
+        self.tree = Tree.from_spec(tree_spec)
+        self.max_depth = tree_spec.max_depth
+
+    def _chunk_fn(self, K: int):
+        if K not in self._chunks:
+            model, backend = self.model, self.backend
+
+            def run(p, h, t, state, done, eos):
+                def body(carry, _):
+                    state, done = carry
+                    state, emitted, n = spec_step(model, p, h, t, state,
+                                                  backend=backend)
+                    idx = jnp.arange(emitted.shape[1])[None, :]
+                    valid = idx < n[:, None]
+                    is_eos = valid & (emitted == eos)
+                    has_eos = jnp.any(is_eos, axis=1)
+                    # truncate each sequence's emission at its first EOS
+                    n_cut = jnp.where(has_eos,
+                                      jnp.argmax(is_eos, axis=1) + 1, n)
+                    n_eff = jnp.where(done, 0, n_cut)
+                    emitted = jnp.where(idx < n_eff[:, None], emitted, eos)
+                    done = done | has_eos
+                    return (state, done), (emitted, n_eff)
+
+                (state, done), (toks, ns) = jax.lax.scan(
+                    body, (state, done), None, length=K)
+                # toks: (K, B, Dmax) eos-padded; ns: (K, B) accepted counts
+                return state, done, toks, ns
+
+            self._chunks[K] = jax.jit(run)
+        return self._chunks[K]
+
+    def generate(self, batch, n_tokens: int, *, eos: Optional[int] = None,
+                 chunk: Optional[int] = None):
+        K = chunk or self.chunk
+        eos_val = _eos_scalar(eos)
         state = self._prefill(self.params, self.heads, batch)
-        out: List[int] = [int(state.cur_token[0])]
+        B = int(state.cur_token.shape[0])
+        first = np.asarray(state.cur_token)
+        outs = [[int(first[b])] for b in range(B)]
+        done = state.cur_token == eos_val
+        done_np = np.asarray(done)
         accepts, times = [], []
-        while len(out) < n_tokens:
+
+        def active(b):
+            return not done_np[b] and len(outs[b]) < n_tokens
+
+        while any(active(b) for b in range(B)):
             t0 = time.perf_counter()
-            state, emitted, n = self._step(self.params, self.heads, state)
-            n0 = int(n[0])
+            state, done, toks, ns = self._chunk_fn(K)(
+                self.params, self.heads, self.tree, state, done, eos_val)
+            toks_np = np.asarray(toks)           # ONE host sync per chunk
+            ns_np = np.asarray(ns)
+            done_np = np.asarray(done)
             times.append(time.perf_counter() - t0)
-            toks = np.asarray(emitted[0])[:n0]
-            accepts.append(n0)
-            for t in toks:
-                out.append(int(t))
-                if eos is not None and t == eos:
-                    return np.asarray(out), _stats(accepts, times)
-        return np.asarray(out[:n_tokens]), _stats(accepts, times)
+            for k in range(ns_np.shape[0]):
+                for b in range(B):
+                    m = int(ns_np[k, b])
+                    if m and len(outs[b]) < n_tokens:
+                        # count only steps whose tokens are (at least partly)
+                        # kept: overshoot steps past n_tokens would bias the
+                        # acceptance stats ARCA's evaluator consumes
+                        accepts.append(m)
+                        outs[b].extend(int(x) for x in toks_np[k, b, :m])
+
+        stats = _stats(accepts, times)
+        stats["chunk"] = K
+        if B == 1:
+            return np.asarray(outs[0][:n_tokens]), stats
+        out = np.full((B, n_tokens), int(eos_val), np.int32)
+        for b in range(B):
+            seq = np.asarray(outs[b][:n_tokens], np.int32)
+            out[b, :len(seq)] = seq
+        return out, stats
 
 
 def _stats(accepts, times):
+    accepts = np.asarray(accepts)
     return {
-        "acceptance_length": float(np.mean(accepts)) if accepts else 0.0,
-        "steps": len(accepts),
+        "acceptance_length": float(np.mean(accepts)) if accepts.size else 0.0,
+        "steps": int(accepts.size),
         "step_times": times,
     }
 
 
 def measure_acceptance(model, heads, params, tree_spec: TreeSpec, prompts,
-                       n_tokens=64, *, max_len=512) -> float:
+                       n_tokens=64, *, max_len=512,
+                       engine: Optional[SpeculativeEngine] = None) -> float:
     """Empirical acceptance length over a prompt set (ARCA's brute-force
-    refinement evaluator + Table-I measurement)."""
-    eng = SpeculativeEngine(model, heads, params, tree_spec, max_len=max_len)
+    refinement evaluator + Table-I measurement).
+
+    Pass ``engine`` to reuse a constructed ``SpeculativeEngine`` across
+    candidate trees: the tree is swapped via ``set_tree`` and the jitted
+    step is shared for same-shape trees, so ARCA's evaluator does not pay
+    compile time per candidate.
+    """
+    if engine is None:
+        engine = SpeculativeEngine(model, heads, params, tree_spec,
+                                   max_len=max_len)
+    else:
+        engine.set_tree(tree_spec)
     als = []
     for batch in prompts:
-        _, stats = eng.generate(batch, n_tokens)
+        _, stats = engine.generate(batch, n_tokens)
         als.append(stats["acceptance_length"])
     return float(np.mean(als))

@@ -3,6 +3,8 @@ import sys
 
 # allow running plain `pytest tests/` too
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# tests dir itself (for the _mini_hypothesis fallback import)
+sys.path.insert(0, os.path.dirname(__file__))
 
 # smoke tests must see the single real CPU device (the 512-device flag is
 # set ONLY inside launch/dryrun.py, per the dry-run contract)

@@ -1,37 +1,53 @@
 """Ring-buffer KV cache properties (hypothesis)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # container may not ship hypothesis
+    from _mini_hypothesis import given, settings, strategies as st
 
-from repro.runtime.cache import decode_mask, kv_write, prefill_mask
+from repro.runtime.cache import (batched_decode_mask, decode_mask, kv_write,
+                                 prefill_mask)
 
 
 @given(size=st.integers(2, 16), n_writes=st.integers(1, 40),
        window=st.sampled_from([0, 4, 8]))
 @settings(max_examples=40, deadline=None)
 def test_ring_buffer_semantics(size, n_writes, window):
-    B, H, hd = 1, 1, 4
+    # B=2 with DIVERGED per-sequence positions (as after a batched
+    # speculative commit): sequence b's write stream starts at offset[b]
+    B, H, hd = 2, 1, 4
+    offset = [0, 3]
     ck = jnp.zeros((B, size, H, hd))
     cv = jnp.zeros((B, size, H, hd))
-    kp = jnp.full((size,), -1, jnp.int32)
-    for pos in range(n_writes):
-        k = jnp.full((B, 1, H, hd), float(pos))
-        ck, cv, kp = kv_write(ck, cv, kp, k, k, jnp.asarray(pos, jnp.int32))
+    kp = jnp.full((B, size), -1, jnp.int32)
+    for i in range(n_writes):
+        vals = np.array([offset[b] + i for b in range(B)], np.float32)
+        k = jnp.asarray(vals[:, None, None, None]
+                        * np.ones((B, 1, H, hd), np.float32))
+        ck, cv, kp = kv_write(ck, cv, kp, k, k,
+                              jnp.asarray(vals, jnp.int32))
     kp_np = np.asarray(kp)
-    # slot s holds the latest absolute position congruent to s
-    for s in range(size):
-        expect = max((p for p in range(n_writes) if p % size == s),
-                     default=-1)
-        assert kp_np[s] == expect
-        if expect >= 0:
-            assert float(np.asarray(ck)[0, s, 0, 0]) == float(expect)
-    # decode mask at q_pos = n_writes: only valid, causal, in-window slots
-    ok = np.asarray(decode_mask(kp, jnp.asarray(n_writes), window))
-    for s in range(size):
-        valid = kp_np[s] >= 0 and kp_np[s] <= n_writes
-        if window:
-            valid = valid and kp_np[s] > n_writes - window
-        assert ok[s] == valid
+    # per sequence: slot s holds the latest written position congruent to s
+    for b in range(B):
+        positions = range(offset[b], offset[b] + n_writes)
+        for s in range(size):
+            expect = max((p for p in positions if p % size == s), default=-1)
+            assert kp_np[b, s] == expect, (b, s)
+            if expect >= 0:
+                assert float(np.asarray(ck)[b, s, 0, 0]) == float(expect)
+    # per-sequence decode masks at each sequence's own q_pos
+    q = [offset[b] + n_writes for b in range(B)]
+    ok = np.asarray(batched_decode_mask(
+        kp, jnp.asarray([[qb] for qb in q], jnp.int32), window))  # (B, 1, S)
+    for b in range(B):
+        ref = np.asarray(decode_mask(kp[b], jnp.asarray(q[b]), window))
+        np.testing.assert_array_equal(ok[b, 0], ref)
+        for s in range(size):
+            valid = kp_np[b, s] >= 0 and kp_np[b, s] <= q[b]
+            if window:
+                valid = valid and kp_np[b, s] > q[b] - window
+            assert ok[b, 0, s] == valid
 
 
 @given(S=st.integers(1, 24), window=st.sampled_from([0, 3, 7]))

@@ -1,0 +1,136 @@
+"""Batched + device-resident chunked engines.
+
+Invariants:
+  * B=4 batched speculative decode is token-for-token identical to four
+    independent B=1 runs (per-sequence acceptance lengths / positions), on
+    both the ref and Pallas-interpret backends.
+  * the chunked lax.scan driver (K=8) matches the per-step loop (K=1) for
+    both engines — the device-resident loop changes the host-sync cadence,
+    never the tokens.
+  * per-sequence EOS masks out everything after each sequence's first EOS.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.speculative import tree as T
+from repro.core.speculative.medusa import init_medusa
+from repro.models.api import get_model
+from repro.runtime.engine import BatchEngine, SpeculativeEngine, \
+    measure_acceptance
+
+
+def _setup(arch="qwen2-0.5b"):
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    heads = init_medusa(cfg, jax.random.PRNGKey(7))
+    spec = T.build_tree(T.default_accs(cfg.medusa_heads, cfg.medusa_top_k), 8)
+    return cfg, model, params, heads, spec
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_batched_spec_matches_independent_runs(backend):
+    cfg, model, params, heads, spec = _setup()
+    B, N = 4, 12
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, 8), 0,
+                              cfg.vocab_size)
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=64,
+                            backend=backend, chunk=4)
+    out, stats = eng.generate({"tokens": toks}, N)
+    assert out.shape == (B, N)
+    assert 1.0 <= stats["acceptance_length"] <= spec.max_depth
+    for b in range(B):
+        ob, _ = eng.generate({"tokens": toks[b:b + 1]}, N)
+        np.testing.assert_array_equal(out[b], ob[:N],
+                                      err_msg=f"seq {b} ({backend})")
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "zamba2-7b", "xlstm-125m"])
+def test_batched_spec_all_families(arch):
+    cfg, model, params, heads, spec = _setup(arch)
+    B, N = 3, 10
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, 8), 0,
+                              cfg.vocab_size)
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=64)
+    out, _ = eng.generate({"tokens": toks}, N)
+    for b in range(B):
+        ob, _ = eng.generate({"tokens": toks[b:b + 1]}, N)
+        np.testing.assert_array_equal(out[b], ob[:N], err_msg=f"{arch} b={b}")
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_chunked_loop_matches_per_step(backend):
+    cfg, model, params, heads, spec = _setup()
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0,
+                              cfg.vocab_size)
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=96,
+                            backend=backend)
+    out1, _ = eng.generate({"tokens": toks}, 20, chunk=1)   # per-step cadence
+    out8, _ = eng.generate({"tokens": toks}, 20, chunk=8)   # device-resident
+    np.testing.assert_array_equal(out1, out8)
+
+    seq = BatchEngine(model, params, max_len=96, backend=backend)
+    s1, _ = seq.generate({"tokens": toks}, 20, chunk=1)
+    s8, _ = seq.generate({"tokens": toks}, 20, chunk=8)
+    np.testing.assert_array_equal(s1, s8)
+    # speculative greedy == sequential greedy (losslessness, chunked)
+    np.testing.assert_array_equal(out8[:20], s8[0][:20])
+
+
+def test_batch_engine_eos_masks_tail():
+    cfg, model, params, _, _ = _setup()
+    B, N = 3, 14
+    toks = jax.random.randint(jax.random.PRNGKey(9), (B, 8), 0,
+                              cfg.vocab_size)
+    eng = BatchEngine(model, params, max_len=64)
+    free, _ = eng.generate({"tokens": toks}, N)
+    # pick an EOS that sequence 0 emits mid-stream: everything after it must
+    # be masked to EOS for that sequence, other sequences unaffected
+    eos = int(free[0, N // 2])
+    out, _ = eng.generate({"tokens": toks}, N, eos=eos)
+    for b in range(B):
+        hits = np.nonzero(out[b] == eos)[0]
+        if hits.size:
+            assert np.all(out[b, hits[0]:] == eos), out[b]
+        cut = hits[0] if hits.size else out.shape[1]
+        np.testing.assert_array_equal(out[b, :cut], free[b, :cut])
+
+
+def test_spec_engine_eos_stops_sequence():
+    cfg, model, params, heads, spec = _setup()
+    toks = jax.random.randint(jax.random.PRNGKey(11), (2, 8), 0,
+                              cfg.vocab_size)
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=96)
+    free, _ = eng.generate({"tokens": toks}, 16)
+    eos = int(free[0, 5])
+    out, _ = eng.generate({"tokens": toks}, 16, eos=eos)
+    for b in range(2):
+        hits = np.nonzero(out[b] == eos)[0]
+        if hits.size:
+            assert np.all(out[b, hits[0]:] == eos), out[b]
+        cut = hits[0] if hits.size else out.shape[1]
+        np.testing.assert_array_equal(out[b, :cut], free[b, :cut])
+
+
+def test_measure_acceptance_reuses_engine_and_compiled_step():
+    cfg, model, params, heads, _ = _setup()
+    toks = jax.random.randint(jax.random.PRNGKey(4), (1, 8), 0,
+                              cfg.vocab_size)
+    prompts = [{"tokens": toks}]
+    # two distinct trees with IDENTICAL shapes (width, depths, paths): the
+    # tree is a jit ARGUMENT, so the second must hit the compiled step cache
+    spec_a = T.spec_from_nodes([(-1, 0, 0), (0, 1, 0), (1, 2, 0)])
+    spec_b = T.spec_from_nodes([(-1, 0, 0), (0, 1, 1), (1, 2, 0)])
+    eng = SpeculativeEngine(model, heads, params, spec_a, max_len=64)
+    al0 = measure_acceptance(model, heads, params, spec_a, prompts,
+                             n_tokens=10, engine=eng)
+    sizes = {k: f._cache_size() for k, f in eng._chunks.items()}
+    al1 = measure_acceptance(model, heads, params, spec_b, prompts,
+                             n_tokens=10, engine=eng)
+    for k, f in eng._chunks.items():
+        assert f._cache_size() == sizes[k], "re-jitted for a same-shape tree"
+    assert 1.0 <= al0 <= spec_a.max_depth
+    assert 1.0 <= al1 <= spec_b.max_depth

@@ -28,6 +28,15 @@ def _rand_tree_mask(W, seed=0):
     return jnp.asarray(mask), jnp.asarray(depth)
 
 
+def _ring_key_pos(pos, S):
+    """Ring-buffer key positions: slots hold [pos-S, pos) when full else
+    [0, pos)."""
+    base = np.arange(S)
+    if pos >= S:
+        return pos - S + ((base - (pos % S)) % S)
+    return np.where(base < pos, base, -1)
+
+
 CASES = [
     # B, W, Hq, Hkv, hd, S, pos, window, block_s, dtype
     (1, 1, 4, 4, 64, 32, 17, 0, 16, jnp.float32),        # plain decode
@@ -36,6 +45,8 @@ CASES = [
     (2, 4, 4, 4, 32, 24, 24, 16, 8, jnp.float32),        # sliding window
     (1, 8, 4, 2, 64, 64, 64, 0, 64, jnp.bfloat16),       # bf16, full ring
     (1, 32, 2, 2, 16, 8, 6, 0, 8, jnp.float32),          # tiny cache, big tree
+    (4, 8, 4, 2, 32, 24, 20, 0, 8, jnp.float32),         # B=4 diverged pos
+    (3, 4, 4, 4, 32, 16, 14, 8, 8, jnp.float32),         # diverged + window
 ]
 
 
@@ -48,17 +59,14 @@ def test_tree_attention_vs_oracle(B, W, Hq, Hkv, hd, S, pos, window,
     cv = jax.random.normal(ks[2], (B, S, Hkv, hd), dtype)
     kn = jax.random.normal(ks[3], (B, W, Hkv, hd), dtype)
     vn = jax.random.normal(ks[4], (B, W, Hkv, hd), dtype)
-    # ring-buffer key positions: slots hold [pos-S, pos) when full else [0,pos)
-    base = np.arange(S)
-    if pos >= S:
-        kp = ((pos - S) // S) * S + base
-        kp = np.where(kp < pos - S, kp + S, kp)
-        kp = pos - S + ((base - (pos % S)) % S)
-    else:
-        kp = np.where(base < pos, base, -1)
-    key_pos = jnp.asarray(kp, jnp.int32)
+    # per-sequence positions diverge (batched speculative decoding): each
+    # sequence sits a little behind the previous one
+    pos_b = np.array([max(pos - 2 * b, 1) for b in range(B)], np.int32)
+    key_pos = jnp.asarray(np.stack([_ring_key_pos(p, S) for p in pos_b]),
+                          jnp.int32)                              # (B, S)
     mask, depth = _rand_tree_mask(W, seed=S)
-    q_pos = pos + depth
+    q_pos = pos_b[:, None] + np.asarray(depth)[None, :]           # (B, W)
+    q_pos = jnp.asarray(q_pos, jnp.int32)
     lo = q_pos - window if window else jnp.full_like(q_pos, -1)
 
     ref = tree_attention_ref(q, ck, cv, kn, vn, key_pos, q_pos, lo, mask)

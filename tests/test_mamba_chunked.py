@@ -5,7 +5,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # container may not ship hypothesis
+    from _mini_hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.models import mamba2 as mb

@@ -51,10 +51,13 @@ def test_verify_chain_matches_teacher_forcing(arch):
     err = float(jnp.max(jnp.abs(vlog - full[:, 8:12])))
     assert err < 5e-2, err
 
-    # commit 3 of 4, then decode the 12th token == teacher forcing
-    cache = model.commit(cache, extras, tr,
-                         jnp.arange(4, dtype=jnp.int32),
-                         jnp.asarray(3, jnp.int32), jnp.asarray(0, jnp.int32))
+    # commit 3 of 4 (per-sequence args), then decode the 12th token ==
+    # teacher forcing
+    B = toks.shape[0]
+    cache = model.commit(
+        cache, extras, tr,
+        jnp.broadcast_to(jnp.arange(4, dtype=jnp.int32), (B, 4)),
+        jnp.full((B,), 3, jnp.int32), jnp.zeros((B,), jnp.int32))
     lg, _ = model.decode(params, cache, toks[:, 11:12])
     err2 = float(jnp.max(jnp.abs(lg[:, 0] - full[:, 11])))
     assert err2 < 5e-2, err2

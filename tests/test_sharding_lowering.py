@@ -50,7 +50,10 @@ with mesh:
                 in_shardings=(ns(pspecs), ns(cspecs),
                               NamedSharding(mesh, P("data", None))))
     compiled = f.lower(params_struct, cache_struct, tok).compile()
-print(json.dumps({"ok": True, "flops": compiled.cost_analysis().get("flops", 0)}))
+ca = compiled.cost_analysis()
+if isinstance(ca, (list, tuple)):          # older jax: one dict per device
+    ca = ca[0] if ca else {}
+print(json.dumps({"ok": True, "flops": ca.get("flops", 0)}))
 """
 
 

@@ -39,7 +39,9 @@ def test_medusa_heads_learn():
     step = jax.jit(lambda h, o, b: medusa_step(cfg, model, params, h, o, b,
                                               lr=3e-3))
     losses = []
-    for batch in data.batches(8, 64, 25):
+    # 25 steps lands right at the 0.9 threshold (measured ratio 0.915 —
+    # flaky); 60 steps gives a comfortable margin (~0.887)
+    for batch in data.batches(8, 64, 60):
         b = {k: jnp.asarray(v) for k, v in batch.items()}
         heads, hopt, m = step(heads, hopt, b)
         losses.append(float(m["loss"]))

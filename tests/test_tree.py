@@ -1,7 +1,10 @@
 """Verification-tree properties (hypothesis) — paper §III-C1 machinery."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # container may not ship hypothesis
+    from _mini_hypothesis import given, settings, strategies as st
 
 from repro.core.speculative import tree as T
 

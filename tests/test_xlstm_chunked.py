@@ -4,7 +4,10 @@ ragged tails."""
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # container may not ship hypothesis
+    from _mini_hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.models import xlstm as xl
