@@ -37,6 +37,32 @@ _WORKER_ENV = {
 }
 
 
+def spawn_pinned_worker(script: str, argv: list) -> dict:
+    """Run ``script --worker *argv`` in the pinned measurement environment
+    (single-thread XLA CPU, src + repo root on PYTHONPATH) and return its
+    JSON record.  Shared by every bench that measures in a subprocess so
+    the environment contract cannot drift between them."""
+    env = dict(os.environ)
+    env.update(_WORKER_ENV)
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(script), "--worker"] + argv,
+        capture_output=True, text=True, env=env, timeout=1800)
+    if out.returncode != 0:
+        name = os.path.basename(script)
+        raise RuntimeError(f"{name} worker failed:\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def bootstrap_worker_path():
+    """sys.path setup for the subprocess side of a --worker entry point."""
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(root, "src"))
+    sys.path.insert(0, root)
+
+
 def _engine_smoke_cfg():
     import dataclasses
 
@@ -73,7 +99,10 @@ def _worker(n_tokens: int, reps: int) -> dict:
     params = model.init_params(jax.random.PRNGKey(0))
     heads = init_medusa(cfg, jax.random.PRNGKey(1))
     spec = T.build_tree(T.default_accs(cfg.medusa_heads, cfg.medusa_top_k), 4)
-    max_len = 32 + n_tokens + spec.max_depth * 8
+    # 16-token prompts + budget + one speculative step of overshoot (the
+    # budget-aware chunk driver stops each sequence within max_depth tokens
+    # of its budget, so this is the exact worst case, not a guess)
+    max_len = 16 + n_tokens + spec.max_depth
 
     record = {"arch": cfg.name, "n_tokens": n_tokens, "tree_width": 4,
               "grid": []}
@@ -133,17 +162,8 @@ def _worker(n_tokens: int, reps: int) -> dict:
 
 def run(n_tokens=64, reps=3) -> list:
     """Spawn the pinned-environment worker, persist + pretty-print results."""
-    env = dict(os.environ)
-    env.update(_WORKER_ENV)
-    src = os.path.join(os.path.dirname(__file__), "..", "src")
-    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    out = subprocess.run(
-        [sys.executable, os.path.abspath(__file__), "--worker",
-         "--tokens", str(n_tokens), "--reps", str(reps)],
-        capture_output=True, text=True, env=env, timeout=1800)
-    if out.returncode != 0:
-        raise RuntimeError(f"engine_bench worker failed:\n{out.stderr[-2000:]}")
-    record = json.loads(out.stdout.strip().splitlines()[-1])
+    record = spawn_pinned_worker(__file__, ["--tokens", str(n_tokens),
+                                            "--reps", str(reps)])
 
     rows = [("engine_legacy_seq_b1", 1e6 / record["legacy_seq_b1_tok_s"],
              f"{record['legacy_seq_b1_tok_s']:.1f} tok/s")]
@@ -178,8 +198,7 @@ if __name__ == "__main__":
     ap.add_argument("--worker", action="store_true")
     args = ap.parse_args()
     if args.worker:
-        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
-                                        "src"))
+        bootstrap_worker_path()
         print(json.dumps(_worker(args.tokens, args.reps)))
     else:
         run(args.tokens, args.reps)

@@ -39,6 +39,11 @@ def main() -> None:
                            "(batch x chunk, CPU smoke)")
     rows += engine_bench.run(n_tokens=32)
 
+    from benchmarks import sched_bench
+    print("=" * 70); print("## sched — continuous vs static batching "
+                           "(poisson arrivals, CPU smoke)")
+    rows += sched_bench.run()
+
     from benchmarks import ablations
     print("=" * 70); print("## ablations (beyond paper)")
     rows += ablations.run()

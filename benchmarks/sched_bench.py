@@ -1,0 +1,181 @@
+"""Measured continuous-batching gain: static batches vs per-sequence
+admission/eviction under staggered Poisson arrivals, on THIS machine.
+
+Workload: N requests with a mixed token budget (alternating short/long —
+the regime where static batching loses: a finished short request's row sits
+idle until the whole group drains, while the continuous scheduler refills
+it from the queue at the next chunk boundary).  Arrival times are a Poisson
+process whose rate is calibrated against a measured warm static makespan,
+so the stream is genuinely staggered (neither all-at-once nor fully idle)
+at any machine speed.
+
+Runs in a SUBPROCESS with XLA CPU intra-op threading pinned off, same
+measurement contract as engine_bench (see that module's docstring).
+
+  PYTHONPATH=src python benchmarks/sched_bench.py [--requests 32]
+
+Emits a JSON record to ``benchmarks/results/sched_bench.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                                "..")))
+from benchmarks.engine_bench import (RESULT_DIR, bootstrap_worker_path,
+                                     spawn_pinned_worker)
+
+BATCH = 8
+PROMPT_LEN = 16
+BUDGETS = (16, 192)           # alternating short/long generation budgets
+
+
+def _sched_smoke_cfg():
+    """Like engine_bench's smoke config but 2x wider: per-chunk device time
+    has to dominate the per-admission dispatch overhead (B=1 prefill +
+    row insert) or the bench measures Python, not scheduling."""
+    import dataclasses
+
+    from benchmarks.engine_bench import _engine_smoke_cfg
+    return dataclasses.replace(_engine_smoke_cfg(),
+                               name="qwen2-sched-smoke", d_model=256,
+                               num_heads=4, num_kv_heads=4, d_ff=512)
+
+
+def _requests(cfg, n, arrivals):
+    import jax
+    import numpy as np
+
+    from repro.runtime.scheduler import Request
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(2), (n, PROMPT_LEN), 0, cfg.vocab_size),
+        np.int32)
+    return [Request(req_id=i, tokens=prompts[i],
+                    n_tokens=BUDGETS[i % len(BUDGETS)],
+                    arrival=float(arrivals[i]))
+            for i in range(n)]
+
+
+def _best_of(fn, reps):
+    """Highest-throughput run of ``reps`` (same contract as engine_bench's
+    best-of-N timing: scheduling makespans on a busy 2-CPU container are
+    noisy in one direction only — slowdowns)."""
+    best = None
+    for _ in range(reps):
+        _, s = fn()
+        if best is None or s["tok_s"] > best["tok_s"]:
+            best = s
+    return best
+
+
+def _worker(n_requests: int, chunk: int, reps: int) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.core.speculative import tree as T
+    from repro.core.speculative.medusa import init_medusa
+    from repro.models.api import get_model
+    from repro.runtime.engine import BatchEngine, SpeculativeEngine
+    from repro.runtime.scheduler import (ContinuousScheduler,
+                                         poisson_arrivals, serve_static)
+
+    cfg = _sched_smoke_cfg()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    heads = init_medusa(cfg, jax.random.PRNGKey(1))
+    spec = T.build_tree(T.default_accs(cfg.medusa_heads, cfg.medusa_top_k), 4)
+    max_len = PROMPT_LEN + max(BUDGETS) + spec.max_depth
+
+    engines = {
+        "sequential": BatchEngine(model, params, max_len=max_len,
+                                  chunk=chunk),
+        "speculative": SpeculativeEngine(model, heads, params, spec,
+                                         max_len=max_len, chunk=chunk),
+    }
+    record = {"arch": cfg.name, "requests": n_requests, "batch": BATCH,
+              "chunk": chunk, "prompt_len": PROMPT_LEN,
+              "budgets": list(BUDGETS), "grid": []}
+
+    for name, eng in engines.items():
+        zero = np.zeros(n_requests)
+        # warm-up + compile both paths AND measure the warm static makespan
+        serve_static(eng, _requests(cfg, n_requests, zero), batch=BATCH)
+        ContinuousScheduler(eng, batch=BATCH, chunk=chunk).serve(
+            _requests(cfg, n_requests, zero))
+        _, warm = serve_static(eng, _requests(cfg, n_requests, zero),
+                               batch=BATCH)
+        # arrivals span ~35% of the warm static makespan: genuinely
+        # staggered (static pays batch-formation waits) while the
+        # continuous path stays decode-bound rather than arrival-starved
+        rate = n_requests / (0.35 * warm["makespan_s"])
+        arrivals = poisson_arrivals(n_requests, rate, seed=3)
+
+        st = _best_of(lambda: serve_static(
+            eng, _requests(cfg, n_requests, arrivals), batch=BATCH), reps)
+        ct = _best_of(lambda: ContinuousScheduler(
+            eng, batch=BATCH, chunk=chunk).serve(
+                _requests(cfg, n_requests, arrivals)), reps)
+        for sched, s in (("static", st), ("continuous", ct)):
+            record["grid"].append({
+                "engine": name, "sched": sched, "rate": rate,
+                "tok_s": s["tok_s"], "makespan_s": s["makespan_s"],
+                "emitted_total": s["emitted_total"],
+                "latency_mean_s": s["latency_mean_s"],
+                "latency_p90_s": s["latency_p90_s"],
+                "queue_wait_mean_s": s["queue_wait_mean_s"]})
+        record[f"speedup_continuous_vs_static_{name}"] = \
+            ct["tok_s"] / st["tok_s"]
+        record[f"latency_ratio_static_vs_continuous_{name}"] = \
+            st["latency_mean_s"] / max(ct["latency_mean_s"], 1e-9)
+
+    record["speedup_continuous_vs_static"] = min(
+        record["speedup_continuous_vs_static_sequential"],
+        record["speedup_continuous_vs_static_speculative"])
+    return record
+
+
+def run(n_requests=32, chunk=8, reps=2) -> list:
+    """Spawn the pinned-environment worker, persist + pretty-print results."""
+    record = spawn_pinned_worker(__file__, ["--requests", str(n_requests),
+                                           "--chunk", str(chunk),
+                                           "--reps", str(reps)])
+
+    rows = []
+    for g in record["grid"]:
+        name = f"sched_{g['sched'][:4]}_{g['engine'][:4]}_b{BATCH}"
+        rows.append((name, 1e6 / g["tok_s"],
+                     f"{g['tok_s']:.1f} tok/s agg, "
+                     f"lat p90 {g['latency_p90_s']:.2f}s"))
+    for eng in ("sequential", "speculative"):
+        rows.append((f"sched_speedup_cont_vs_static_{eng[:4]}",
+                     record[f"speedup_continuous_vs_static_{eng}"],
+                     "x aggregate tok/s"))
+        rows.append((f"sched_latencyx_static_vs_cont_{eng[:4]}",
+                     record[f"latency_ratio_static_vs_continuous_{eng}"],
+                     "x mean latency (higher = static worse)"))
+
+    os.makedirs(RESULT_DIR, exist_ok=True)
+    path = os.path.join(RESULT_DIR, "sched_bench.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    for name, val, derived in rows:
+        print(f"{name},{val:.1f},{derived}")
+    print(f"[sched_bench] wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--worker", action="store_true")
+    args = ap.parse_args()
+    if args.worker:
+        bootstrap_worker_path()
+        print(json.dumps(_worker(args.requests, args.chunk, args.reps)))
+    else:
+        run(args.requests, args.chunk, args.reps)

@@ -65,13 +65,21 @@ class SpecState:
     hidden: jax.Array        # (B, d) hidden at that token (drafting input)
 
 
-def spec_step(model, params, heads, tree, state: SpecState, *, backend="ref"):
+def spec_step(model, params, heads, tree, state: SpecState, *, backend="ref",
+              active=None):
     """One Ghidorah speculative decoding step, batched over sequences.
 
     Each sequence accepts its own chain length; the commit is a per-sequence
     masked ring write, so positions diverge across the batch.
     Returns (new_state, out_tokens (B, Dmax) emitted tokens padded with the
     bonus, n_out (B,) = acceptance length this step).
+
+    ``active (B,) bool`` freezes the rows where it is False: their
+    acceptance count is forced to 0 (nothing committed, ``pos`` does not
+    advance) and their carry (``cur_token``/``hidden``) is left untouched.
+    The chunk driver uses this to stop finished / capacity-exhausted / free
+    slots from writing into their cache rows while the rest of the batch
+    keeps decoding (runtime/scheduler.py evicts them at the chunk boundary).
     """
     cfg = model.cfg
     cands, _ = draft_candidates(cfg, heads, state.hidden, cfg.medusa_top_k)
@@ -81,14 +89,21 @@ def spec_step(model, params, heads, tree, state: SpecState, *, backend="ref"):
     acc = accept_walk(tree, tree_tokens, logits)
 
     # batched commit: per-sequence accepted chain / length / path
+    n_accept = acc["n_accept"]
+    if active is not None:
+        n_accept = jnp.where(active, n_accept, 0)
     path_idx = tree.node_path[acc["last_node"]]              # (B,)
     cache = model.commit(state.cache, extras, tree, acc["chain"],
-                         acc["n_accept"], path_idx)
+                         n_accept, path_idx)
 
     hidden = extras["hidden"]                       # (B, W, d)
     new_hidden = jnp.take_along_axis(
         hidden, acc["last_node"][:, None, None].astype(jnp.int32), axis=1)[:, 0]
-    new_state = SpecState(cache=cache, cur_token=acc["bonus"],
+    cur_token = acc["bonus"]
+    if active is not None:
+        cur_token = jnp.where(active, cur_token, state.cur_token)
+        new_hidden = jnp.where(active[:, None], new_hidden, state.hidden)
+    new_state = SpecState(cache=cache, cur_token=cur_token,
                           hidden=new_hidden)
 
     # emitted tokens: accepted children (chain[1:n]) then the bonus token.
@@ -100,7 +115,7 @@ def spec_step(model, params, heads, tree, state: SpecState, *, backend="ref"):
     emitted = jnp.where(idx < (acc["n_accept"] - 1)[:, None], child_shift, 0)
     emitted = jnp.where(idx == (acc["n_accept"] - 1)[:, None],
                         acc["bonus"][:, None], emitted)
-    return new_state, emitted, acc["n_accept"]
+    return new_state, emitted, n_accept
 
 
 def spec_prefill(model, params, heads, batch, *, max_len, window=0):

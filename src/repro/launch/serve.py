@@ -4,6 +4,24 @@ decode loop (one host sync per ``--chunk`` steps).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b-smoke \
       --mode ghidorah --width 8 --tokens 64 --batch 4 --chunk 8
+
+Two serving shapes:
+
+* default (``--arrivals none``): one fixed batch of ``--batch`` prompts is
+  prefilled together and decoded to the token budget.  Throughput counts
+  REAL emitted tokens (``stats["emitted_total"]``), not the EOS padding in
+  the output buffer.
+* replay (``--arrivals poisson --rate R --requests N``): N requests arrive
+  as a rate-R Poisson process and flow through ``runtime/scheduler.py`` —
+  ``--sched continuous`` admits/evicts per sequence at chunk boundaries
+  (a freed cache row is immediately refilled from the queue),
+  ``--sched static`` is the fixed-group baseline.  Reports aggregate
+  tokens/sec plus per-request latency percentiles.
+
+Capacity: the KV cache is sized so the full token budget fits
+(prompt + tokens + tree depth of speculative overshoot).  An undersized
+cache no longer wraps silently — the engines freeze a sequence at the
+capacity boundary and ``n_emitted`` reports the shortfall.
 """
 from __future__ import annotations
 
@@ -20,7 +38,31 @@ from repro.core.speculative.medusa import init_medusa
 from repro.data.pipeline import MarkovDataset
 from repro.models.api import get_model
 from repro.runtime.engine import BatchEngine, SpeculativeEngine
+from repro.runtime.scheduler import (ContinuousScheduler, Request,
+                                     poisson_arrivals, serve_static)
 from repro.training import checkpoint
+
+
+def _replay(eng, args, data, cfg):
+    """Arrival-replay mode: Poisson request stream through the scheduler."""
+    prompts = data.sample(args.requests, args.prompt_len, seed=11)[:, :-1]
+    arrivals = poisson_arrivals(args.requests, args.rate, seed=args.seed)
+    reqs = [Request(req_id=i, tokens=prompts[i].astype(np.int32),
+                    n_tokens=args.tokens, arrival=float(arrivals[i]))
+            for i in range(args.requests)]
+    if args.sched == "continuous":
+        results, stats = ContinuousScheduler(
+            eng, batch=args.batch, chunk=args.chunk).serve(reqs)
+    else:
+        results, stats = serve_static(eng, reqs, batch=args.batch)
+    print(f"[serve] {args.sched} x{args.requests} reqs "
+          f"(poisson rate {args.rate}/s, B={args.batch}): "
+          f"{stats['emitted_total']} tokens in {stats['makespan_s']:.2f}s "
+          f"({stats['tok_s']:.1f} tok/s aggregate), "
+          f"latency mean {stats['latency_mean_s']:.2f}s "
+          f"p90 {stats['latency_p90_s']:.2f}s, "
+          f"queue wait mean {stats['queue_wait_mean_s']:.2f}s")
+    return results, stats
 
 
 def main():
@@ -35,6 +77,16 @@ def main():
     ap.add_argument("--chunk", type=int, default=8,
                     help="device-resident steps per host sync")
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--arrivals", default="none", choices=["none", "poisson"],
+                    help="replay a request-arrival process instead of one "
+                         "fixed batch")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="poisson arrival rate, requests/sec")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of requests in the replayed stream")
+    ap.add_argument("--sched", default="continuous",
+                    choices=["continuous", "static"],
+                    help="scheduler for --arrivals replay")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--heads-ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -49,15 +101,22 @@ def main():
     data = MarkovDataset(cfg.vocab_size, seed=1)
     toks = data.sample(args.batch, args.prompt_len, seed=7)[:, :-1]
     batch = {"tokens": toks.astype(np.int32)}
-    max_len = args.prompt_len + args.tokens + 8
 
     if args.mode == "sequential":
+        # prompt + budget slots; the sequential driver writes at most
+        # prompt + (tokens - 1) entries before every row is done
+        max_len = args.prompt_len + args.tokens
         eng = BatchEngine(model, params, max_len=max_len, chunk=args.chunk)
+        if args.arrivals != "none":
+            _replay(eng, args, data, cfg)
+            return
         t0 = time.perf_counter()
         out, stats = eng.generate(batch, args.tokens)
         dt = time.perf_counter() - t0
-        print(f"[serve] sequential: {out.shape[1]} tokens/seq x {args.batch} "
-              f"in {dt:.2f}s ({out.size / dt:.1f} tok/s)")
+        n_out = stats["emitted_total"]       # real tokens, not EOS padding
+        print(f"[serve] sequential: {n_out} tokens "
+              f"({args.batch} seq x chunk {args.chunk}) in {dt:.2f}s "
+              f"({n_out / dt:.1f} tok/s)")
         return
 
     heads = init_medusa(cfg, jax.random.PRNGKey(args.seed + 1))
@@ -71,12 +130,19 @@ def main():
         spec = strat.tree
         print(f"[serve] ARCA chose width={strat.width} "
               f"(E[AL]={strat.acceptance:.2f})")
+    # one speculative step past the budget can commit up to max_depth
+    # tokens, so size the ring for the worst-case overshoot — the old
+    # ``+ 8`` slack was smaller than the overshoot and the ring wrapped
+    max_len = args.prompt_len + args.tokens + spec.max_depth
     eng = SpeculativeEngine(model, heads, params, spec, max_len=max_len,
                             chunk=args.chunk)
+    if args.arrivals != "none":
+        _replay(eng, args, data, cfg)
+        return
     t0 = time.perf_counter()
     out, stats = eng.generate(batch, args.tokens)        # full batch: B >= 1
     dt = time.perf_counter() - t0
-    n_out = out.size
+    n_out = stats["emitted_total"]           # real tokens, not EOS padding
     print(f"[serve] ghidorah: {n_out} tokens "
           f"({args.batch} seq x chunk {args.chunk}) in {dt:.2f}s "
           f"({n_out / dt:.1f} tok/s), "

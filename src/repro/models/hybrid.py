@@ -248,6 +248,12 @@ def commit(cfg, cache: Cache, extras, accept_nodes, n_accept, path_idx,
 
     new_ssm = sel(extras["depth_states"]["ssm"])
     new_conv = sel(extras["depth_states"]["conv"])
+    # n_accept == 0 (a frozen row, see spec_step's `active` mask) commits
+    # NOTHING: the depth select above would clamp n-1 = -1 to depth 0, so
+    # keep the previous recurrent state instead
+    keep = n_accept > 0
+    new_ssm = jnp.where(keep[None, :, None, None, None], new_ssm, ms.ssm)
+    new_conv = jnp.where(keep[None, :, None, None], new_conv, ms.conv)
 
     # shared-attn KV scatter (vmapped masked ring write, as transformer.commit)
     new_kv = kv_commit(kv, extras["tree_k"], extras["tree_v"],

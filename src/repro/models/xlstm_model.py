@@ -107,10 +107,23 @@ def decode(cfg, params, cache: Cache, tokens, *, backend="ref"):
 
 def commit(cfg, cache: Cache, extras, accept_nodes, n_accept, path_idx,
            max_depth):
-    """n_accept/path_idx: (B,) per-sequence acceptance and accepted path."""
+    """n_accept/path_idx: (B,) per-sequence acceptance and accepted path.
+
+    n_accept == 0 (a frozen row, see spec_step's ``active`` mask) commits
+    nothing: the depth select clamps n-1 = -1 to depth 0, so those rows
+    keep their previous state instead."""
     B, P = extras["B"], extras["P"]
+    keep = n_accept > 0
+
+    def _freeze(new, old):
+        return jax.tree_util.tree_map(
+            lambda n_, o_: jnp.where(
+                keep.reshape((B,) + (1,) * (n_.ndim - 1)), n_, o_),
+            new, old)
+
     new_layers = tuple(
-        rv.select_committed_state(sts, path_idx, n_accept, B, P)
-        for sts in extras["depth_states"])
+        _freeze(rv.select_committed_state(sts, path_idx, n_accept, B, P),
+                old)
+        for sts, old in zip(extras["depth_states"], cache.xlstm.layers))
     return Cache(xlstm=XLSTMState(layers=new_layers,
                                   pos=cache.xlstm.pos + n_accept))

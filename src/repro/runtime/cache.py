@@ -171,6 +171,105 @@ def kv_commit(kv: KVCache, k_new, v_new, accept_nodes, n_accept,
                    pos=kv.pos + n_accept.astype(jnp.int32), window=kv.window)
 
 
+# --------------------------------------------------------------------------
+# Per-row slot primitives (continuous batching, runtime/scheduler.py).
+#
+# A batched cache is a bank of B independent rows; the scheduler treats each
+# row as a slot that sequences are admitted into and evicted from at chunk
+# boundaries.  Every helper below maps a function over the batched leaves of
+# a ``Cache`` with the leaf's batch-axis position made explicit (KV k/v and
+# Mamba/cross arrays carry batch at axis 1, key_pos/pos/xLSTM leaves at
+# axis 0), so row surgery never touches the other rows.
+# --------------------------------------------------------------------------
+def _row_map(fn, *caches: "Cache") -> "Cache":
+    """Apply ``fn(batch_axis, *leaves)`` over the batched leaves of Cache(s).
+
+    All caches must share one structure (same model family + shapes apart
+    from the batch axis).  Returns a new Cache built from fn's outputs.
+    """
+    c = caches[0]
+
+    def go(axis, get):
+        return fn(axis, *(get(x) for x in caches))
+
+    kv = mamba = xl = ck = cv = None
+    if c.kv is not None:
+        kv = KVCache(k=go(1, lambda x: x.kv.k), v=go(1, lambda x: x.kv.v),
+                     key_pos=go(0, lambda x: x.kv.key_pos),
+                     pos=go(0, lambda x: x.kv.pos), window=c.kv.window)
+    if c.mamba is not None:
+        mamba = MambaState(ssm=go(1, lambda x: x.mamba.ssm),
+                           conv=go(1, lambda x: x.mamba.conv),
+                           pos=go(0, lambda x: x.mamba.pos))
+    if c.xlstm is not None:
+        layers = jax.tree_util.tree_map(
+            lambda *ls: fn(0, *ls), *(x.xlstm.layers for x in caches))
+        xl = XLSTMState(layers=layers, pos=go(0, lambda x: x.xlstm.pos))
+    if c.cross_k is not None:
+        ck = go(1, lambda x: x.cross_k)
+        cv = go(1, lambda x: x.cross_v)
+    return Cache(kv=kv, mamba=mamba, xlstm=xl, cross_k=ck, cross_v=cv)
+
+
+def tile_rows(cache: Cache, batch: int) -> Cache:
+    """Broadcast a batch-1 cache to ``batch`` identical rows (used once to
+    bootstrap the scheduler's resident state from the first admission)."""
+    return _row_map(lambda axis, a: jnp.repeat(a, batch, axis=axis), cache)
+
+
+def reset_rows(cache: Cache, rows) -> Cache:
+    """Clear the rows where ``rows (B,)`` is True: ``key_pos`` -> -1 (every
+    attention mask rejects the slot), ``pos`` -> 0, KV/recurrent state
+    zeroed.  A freed row is inert until ``insert_rows`` installs a freshly
+    prefilled sequence — reset guarantees no stale KV survives eviction, it
+    does not produce a decodable initial state (e.g. xLSTM stabilizer
+    offsets are re-established by the admission prefill)."""
+    rows = jnp.asarray(rows, bool)
+
+    def f(axis, a):
+        shape = [1] * a.ndim
+        shape[axis] = rows.shape[0]
+        return jnp.where(rows.reshape(shape), jnp.zeros_like(a), a)
+
+    out = _row_map(f, cache)
+    if out.kv is not None:
+        out.kv.key_pos = jnp.where(rows[:, None], jnp.int32(-1),
+                                   cache.kv.key_pos)
+    return out
+
+
+def insert_rows(cache: Cache, row, src: Cache) -> Cache:
+    """Copy row 0 of a batch-1 cache ``src`` into row ``row`` of ``cache``
+    (admission: the new request's B=1 prefilled state takes over the slot).
+    ``row`` may be a traced scalar, so one jitted insert serves every slot."""
+    row = jnp.asarray(row, jnp.int32)
+
+    def f(axis, big, small):
+        upd = jax.lax.index_in_dim(small, 0, axis, keepdims=False)
+        return jax.lax.dynamic_update_index_in_dim(
+            big, upd.astype(big.dtype), row, axis)
+
+    return _row_map(f, cache, src)
+
+
+_UNBOUNDED = 1 << 30
+
+
+def capacity_left(cache: Cache) -> jax.Array:
+    """(B,) decode slots left before a full (window=0) KV ring would wrap
+    past capacity and silently overwrite its oldest entries.
+
+    Sliding-window caches wrap by design and recurrent state is O(1) in
+    context, so those report an effectively unbounded budget.  The chunk
+    drivers fold this into the scan done-mask: a sequence freezes (stops
+    emitting/committing) instead of corrupting its own attention."""
+    pos = cache.pos
+    kv = cache.kv
+    if kv is None or kv.window:
+        return jnp.full(pos.shape, _UNBOUNDED, jnp.int32)
+    return jnp.int32(kv.max_len) - kv.pos
+
+
 def decode_mask(key_pos, q_pos, window):
     """Validity mask (T,) for one query at absolute position q_pos.
 

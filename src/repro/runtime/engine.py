@@ -3,10 +3,34 @@ speculative decoding, with *device-resident chunked drivers*.
 
 Both engines run K decode/speculative steps inside a single jitted
 ``lax.scan`` and transfer one fixed-size token chunk back to the host —
-one host sync per chunk instead of per token.  EOS is handled by a
-per-sequence done-mask carried through the scan: finished sequences stop
-emitting (their acceptance count drops to 0 / their token slot is padded
-with EOS) while the rest of the batch keeps decoding.
+one host sync per chunk instead of per token.
+
+Per-sequence liveness is a done-mask carried through the scan.  A row goes
+(and stays) done when any of three conditions hits:
+
+  * EOS — the sequence emitted its end token (its slot pads with EOS);
+  * budget — ``rem (B,)`` tokens-still-wanted reaches 0, so a sequence that
+    hit ``n_tokens`` without EOS stops burning decode steps while the rest
+    of the batch finishes;
+  * capacity — a full (window=0) KV cache would wrap its ring past
+    ``max_len`` (``cache.capacity_left``), so near-capacity decode freezes
+    instead of silently overwriting its oldest KV and corrupting attention.
+
+Done rows commit nothing in the speculative engine (``spec_step``'s
+``active`` mask zeroes their acceptance, so ``pos`` stays put); in the
+sequential engine they keep stepping but their emission is masked.  The
+host loop also clamps the chunk length to the largest remaining budget
+(rounded up to a power of two so the compiled-scan cache stays small), so
+no full K-step chunk is launched when every live sequence needs fewer.
+
+Slot lifecycle (continuous batching, see runtime/scheduler.py): each batch
+row is a *slot*.  The scheduler admits a request by prefilling it at B=1
+and inserting that row into the resident state (``sched_insert``), runs
+chunks over the whole bank, and at each chunk boundary evicts rows that
+went done — freeing the row (``sched_reset``) for the next queued request.
+Admission/eviction only ever happen between chunks, so the jitted K-step
+scan is reused unchanged; inside a chunk a freed row simply rides along
+fully masked.
 
 ``SpeculativeEngine`` accepts any batch size: each sequence accepts its own
 chain length per step and the cache commit is a per-sequence masked ring
@@ -23,6 +47,8 @@ import numpy as np
 
 from repro.core.speculative.tree import Tree, TreeSpec
 from repro.core.speculative.verify import spec_prefill, spec_step
+from repro.runtime.cache import (capacity_left, insert_rows, reset_rows,
+                                 tile_rows)
 from repro.runtime.sampling import greedy
 
 _NO_EOS = -1          # sentinel: no real token id is negative
@@ -30,6 +56,24 @@ _NO_EOS = -1          # sentinel: no real token id is negative
 
 def _eos_scalar(eos) -> jnp.ndarray:
     return jnp.asarray(_NO_EOS if eos is None else int(eos), jnp.int32)
+
+
+def _budget(n_tokens, batch) -> np.ndarray:
+    """Per-sequence token budgets: scalar broadcast or (B,) array."""
+    b = np.broadcast_to(np.asarray(n_tokens, np.int32), (batch,)).copy()
+    if np.any(b < 1):
+        raise ValueError("n_tokens must be >= 1 per sequence")
+    return b
+
+
+def _pow2_chunk(k_max: int, need: int) -> int:
+    """Smallest power-of-two chunk covering ``need`` steps, capped at
+    ``k_max``: bounds the tail-chunk overshoot AND the set of compiled scan
+    lengths to {1, 2, 4, ..., k_max}."""
+    k = 1
+    while k < need and k < k_max:
+        k *= 2
+    return min(k, k_max)
 
 
 class BatchEngine:
@@ -47,48 +91,146 @@ class BatchEngine:
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len=max_len, window=window))
         self._chunks = {}           # K -> jitted K-step scan
+        self._insert = jax.jit(_insert_seq_row)
+        self._reset = jax.jit(_reset_seq_rows)
+        # fused admission: B=1 prefill + row splice in ONE device call (a
+        # per-request dispatch on the scheduler's hot path)
+        self._admit = jax.jit(
+            lambda p, st, b, bt: _admit_seq_row(model, p, st, b, bt,
+                                                max_len=max_len,
+                                                window=window))
 
     def _chunk_fn(self, K: int):
         if K not in self._chunks:
             model, backend = self.model, self.backend
 
-            def run(p, cache, cur, done, eos):
+            def run(p, cache, cur, done, rem, eos):
                 def body(carry, _):
-                    cache, cur, done = carry
+                    cache, cur, done, rem = carry
+                    done = done | (rem <= 0) | (capacity_left(cache) < 1)
                     lg, cache = model.decode(p, cache, cur[:, None],
                                              backend=backend)
                     nxt = greedy(lg[:, 0])
                     nxt = jnp.where(done, eos, nxt)     # pad finished seqs
+                    emit = ~done
+                    rem = rem - emit.astype(jnp.int32)
                     done = done | (nxt == eos)
-                    return (cache, nxt, done), nxt
+                    return (cache, nxt, done, rem), (nxt, emit)
 
-                (cache, cur, done), toks = jax.lax.scan(
-                    body, (cache, cur, done), None, length=K)
-                return cache, cur, done, toks           # toks: (K, B)
+                (cache, cur, done, rem), (toks, emit) = jax.lax.scan(
+                    body, (cache, cur, done, rem), None, length=K)
+                return cache, cur, done, rem, toks, emit  # toks/emit: (K, B)
 
             self._chunks[K] = jax.jit(run)
         return self._chunks[K]
 
-    def generate(self, batch, n_tokens: int, *, eos: Optional[int] = None,
+    def generate(self, batch, n_tokens, *, eos: Optional[int] = None,
                  chunk: Optional[int] = None):
+        """``n_tokens``: int or (B,) per-sequence budgets.  Returns
+        ``(out (B, max_budget), stats)`` — rows past their own budget /
+        EOS / capacity freeze are padded with ``eos`` (-1 if None); real
+        per-sequence counts are in ``stats["n_emitted"]``."""
         K = chunk or self.chunk
         eos_val = _eos_scalar(eos)
         logits, _, cache = self._prefill(self.params, batch)
         cur = greedy(logits[:, -1])
+        B = int(cur.shape[0])
+        budget = _budget(n_tokens, B)
+        n_max = int(budget.max())
         done = cur == eos_val
+        rem = jnp.asarray(budget - 1)
+        done_np, rem_np = np.asarray(done), budget - 1
         out = [np.asarray(cur)]
+        emits = []
         times = []
-        produced = 1
-        while produced < n_tokens and not bool(np.asarray(done).all()):
+        while np.any(~done_np & (rem_np > 0)):
+            need = int(rem_np[~done_np & (rem_np > 0)].max())
             t0 = time.perf_counter()
-            cache, cur, done, toks = self._chunk_fn(K)(
-                self.params, cache, cur, done, eos_val)
-            toks = np.asarray(toks)              # ONE host sync per K tokens
+            cache, cur, done, rem, toks, emit = self._chunk_fn(
+                _pow2_chunk(K, need))(
+                self.params, cache, cur, done, rem, eos_val)
+            toks = np.asarray(toks)              # ONE host sync per chunk
+            emit_np = np.asarray(emit)
+            done_np, rem_np = np.asarray(done), np.asarray(rem)
             times.append(time.perf_counter() - t0)
             out.extend(toks[i] for i in range(toks.shape[0]))
-            produced += toks.shape[0]
-        return np.stack(out, axis=1)[:, :n_tokens], \
-            {"step_times": times, "chunk": K}
+            emits.extend(emit_np[i] for i in range(emit_np.shape[0]))
+        n_emitted = np.ones((B,), np.int64)      # prefill's first token
+        if emits:
+            n_emitted += np.stack(emits, axis=0).sum(axis=0)
+        res = np.full((B, n_max), int(eos_val), np.int32)
+        out = np.stack(out, axis=1)
+        w = min(out.shape[1], n_max)
+        res[:, :w] = out[:, :w]
+        stats = {"step_times": times, "chunk": K,
+                 "n_emitted": n_emitted.astype(np.int32),
+                 "emitted_total": int(n_emitted.sum())}
+        return res, stats
+
+    # ---- continuous-batching slot protocol (runtime/scheduler.py) --------
+    def sched_prefill(self, batch):
+        """B=1 prefill -> opaque row state (cache, cur)."""
+        logits, _, cache = self._prefill(self.params, batch)
+        return (cache, greedy(logits[:, -1]))
+
+    @staticmethod
+    def sched_first(row):
+        return int(np.asarray(row[1])[0])
+
+    @staticmethod
+    def sched_blank(row, batch):
+        cache, cur = row
+        return (tile_rows(cache, batch), jnp.repeat(cur, batch, axis=0))
+
+    def sched_insert(self, state, b, row):
+        return self._insert(state, jnp.asarray(b, jnp.int32), row)
+
+    def sched_admit(self, state, b, batch):
+        """Fused prefill+insert; returns (state, first-token device scalar —
+        unsynced, the caller materializes it lazily)."""
+        return self._admit(self.params, state, jnp.asarray(b, jnp.int32),
+                           batch)
+
+    def sched_reset(self, state, b):
+        mask = np.zeros((int(state[1].shape[0]),), bool)
+        mask[b] = True
+        return self._reset(state, mask)
+
+    def sched_step(self, state, done, rem, K, eos_val):
+        cache, cur = state
+        cache, cur, done, rem, toks, emit = self._chunk_fn(K)(
+            self.params, cache, cur, done, rem, eos_val)
+        return (cache, cur), done, rem, (toks, emit)
+
+    @staticmethod
+    def sched_emitted(raw):
+        toks, emit = (np.asarray(x) for x in raw)
+        K, B = toks.shape
+        return [[int(toks[k, b]) for k in range(K) if emit[k, b]]
+                for b in range(B)]
+
+
+def _insert_seq_row(state, b, row):
+    cache, cur = state
+    rcache, rcur = row
+    return (insert_rows(cache, b, rcache), cur.at[b].set(rcur[0]))
+
+
+def _admit_seq_row(model, params, state, b, batch, *, max_len, window):
+    logits, _, cache = model.prefill(params, batch, max_len=max_len,
+                                     window=window)
+    cur = greedy(logits[:, -1])
+    return _insert_seq_row(state, b, (cache, cur)), cur[0]
+
+
+def _reset_seq_rows(state, mask):
+    cache, cur = state
+    return (reset_rows(cache, mask), cur)
+
+
+def _reset_spec_rows(state, mask):
+    return type(state)(cache=reset_rows(state.cache, mask),
+                       cur_token=state.cur_token, hidden=state.hidden)
 
 
 class SpeculativeEngine:
@@ -110,6 +252,12 @@ class SpeculativeEngine:
             lambda p, h, b: spec_prefill(model, p, h, b,
                                          max_len=max_len, window=window))
         self._chunks = {}           # K -> jitted K-step scan
+        self._insert = jax.jit(_insert_spec_row)
+        self._reset = jax.jit(_reset_spec_rows)
+        self._admit = jax.jit(
+            lambda p, h, st, b, bt: _admit_spec_row(model, p, h, st, b, bt,
+                                                    max_len=max_len,
+                                                    window=window))
 
     def set_tree(self, tree_spec: TreeSpec) -> None:
         """Swap the verification tree WITHOUT dropping compiled steps (used
@@ -121,11 +269,18 @@ class SpeculativeEngine:
         if K not in self._chunks:
             model, backend = self.model, self.backend
 
-            def run(p, h, t, state, done, eos):
+            def run(p, h, t, state, done, rem, eos):
                 def body(carry, _):
-                    state, done = carry
+                    state, done, rem = carry
+                    # capacity guard BEFORE the step: a commit may write up
+                    # to max_depth tokens, so freeze once the ring cannot
+                    # take a worst-case chain without wrapping
+                    done = done | (rem <= 0) | \
+                        (capacity_left(state.cache) < t.max_depth)
+                    active = ~done
                     state, emitted, n = spec_step(model, p, h, t, state,
-                                                  backend=backend)
+                                                  backend=backend,
+                                                  active=active)
                     idx = jnp.arange(emitted.shape[1])[None, :]
                     valid = idx < n[:, None]
                     is_eos = valid & (emitted == eos)
@@ -133,61 +288,133 @@ class SpeculativeEngine:
                     # truncate each sequence's emission at its first EOS
                     n_cut = jnp.where(has_eos,
                                       jnp.argmax(is_eos, axis=1) + 1, n)
-                    n_eff = jnp.where(done, 0, n_cut)
+                    n_eff = jnp.where(active, n_cut, 0)
                     emitted = jnp.where(idx < n_eff[:, None], emitted, eos)
                     done = done | has_eos
-                    return (state, done), (emitted, n_eff)
+                    rem = rem - n_eff
+                    return (state, done, rem), (emitted, n_eff)
 
-                (state, done), (toks, ns) = jax.lax.scan(
-                    body, (state, done), None, length=K)
+                (state, done, rem), (toks, ns) = jax.lax.scan(
+                    body, (state, done, rem), None, length=K)
                 # toks: (K, B, Dmax) eos-padded; ns: (K, B) accepted counts
-                return state, done, toks, ns
+                return state, done, rem, toks, ns
 
             self._chunks[K] = jax.jit(run)
         return self._chunks[K]
 
-    def generate(self, batch, n_tokens: int, *, eos: Optional[int] = None,
+    def generate(self, batch, n_tokens, *, eos: Optional[int] = None,
                  chunk: Optional[int] = None):
+        """``n_tokens``: int or (B,) per-sequence budgets.  B=1 returns a
+        1-D token array, B>1 a (B, max_budget) array; rows past their
+        budget / EOS / capacity freeze pad with ``eos`` (-1 if None) and
+        ``stats["n_emitted"]`` has the real per-sequence counts."""
         K = chunk or self.chunk
         eos_val = _eos_scalar(eos)
         state = self._prefill(self.params, self.heads, batch)
         B = int(state.cur_token.shape[0])
+        budget = _budget(n_tokens, B)
+        n_max = int(budget.max())
         first = np.asarray(state.cur_token)
         outs = [[int(first[b])] for b in range(B)]
         done = state.cur_token == eos_val
-        done_np = np.asarray(done)
+        rem = jnp.asarray(budget - 1)
+        done_np, rem_np = np.asarray(done), budget - 1
         accepts, times = [], []
 
-        def active(b):
-            return not done_np[b] and len(outs[b]) < n_tokens
-
-        while any(active(b) for b in range(B)):
+        while np.any(~done_np & (rem_np > 0)):
+            # every live step emits >= 1 token, so the largest remaining
+            # budget bounds the steps still needed — no full-K tail chunks
+            need = int(rem_np[~done_np & (rem_np > 0)].max())
             t0 = time.perf_counter()
-            state, done, toks, ns = self._chunk_fn(K)(
-                self.params, self.heads, self.tree, state, done, eos_val)
+            state, done, rem, toks, ns = self._chunk_fn(
+                _pow2_chunk(K, need))(
+                self.params, self.heads, self.tree, state, done, rem, eos_val)
             toks_np = np.asarray(toks)           # ONE host sync per chunk
             ns_np = np.asarray(ns)
-            done_np = np.asarray(done)
+            done_np, rem_np = np.asarray(done), np.asarray(rem)
             times.append(time.perf_counter() - t0)
             for k in range(ns_np.shape[0]):
                 for b in range(B):
                     m = int(ns_np[k, b])
-                    if m and len(outs[b]) < n_tokens:
+                    if m and len(outs[b]) < budget[b]:
                         # count only steps whose tokens are (at least partly)
                         # kept: overshoot steps past n_tokens would bias the
                         # acceptance stats ARCA's evaluator consumes
                         accepts.append(m)
                         outs[b].extend(int(x) for x in toks_np[k, b, :m])
 
+        n_emitted = np.asarray(
+            [min(len(outs[b]), int(budget[b])) for b in range(B)], np.int32)
         stats = _stats(accepts, times)
         stats["chunk"] = K
-        if B == 1:
-            return np.asarray(outs[0][:n_tokens]), stats
-        out = np.full((B, n_tokens), int(eos_val), np.int32)
+        stats["n_emitted"] = n_emitted
+        stats["emitted_total"] = int(n_emitted.sum())
+        out = np.full((B, n_max), int(eos_val), np.int32)
         for b in range(B):
-            seq = np.asarray(outs[b][:n_tokens], np.int32)
+            seq = np.asarray(outs[b][:budget[b]], np.int32)
             out[b, :len(seq)] = seq
+        if B == 1:
+            return out[0], stats
         return out, stats
+
+    # ---- continuous-batching slot protocol (runtime/scheduler.py) --------
+    def sched_prefill(self, batch):
+        """B=1 prefill -> opaque row state (a SpecState)."""
+        return self._prefill(self.params, self.heads, batch)
+
+    @staticmethod
+    def sched_first(row):
+        return int(np.asarray(row.cur_token)[0])
+
+    @staticmethod
+    def sched_blank(row, batch):
+        return type(row)(cache=tile_rows(row.cache, batch),
+                         cur_token=jnp.repeat(row.cur_token, batch, axis=0),
+                         hidden=jnp.repeat(row.hidden, batch, axis=0))
+
+    def sched_insert(self, state, b, row):
+        return self._insert(state, jnp.asarray(b, jnp.int32), row)
+
+    def sched_admit(self, state, b, batch):
+        """Fused prefill+insert; returns (state, first-token device scalar —
+        unsynced, the caller materializes it lazily)."""
+        return self._admit(self.params, self.heads, state,
+                           jnp.asarray(b, jnp.int32), batch)
+
+    def sched_reset(self, state, b):
+        mask = np.zeros((int(state.cur_token.shape[0]),), bool)
+        mask[b] = True
+        return self._reset(state, mask)
+
+    def sched_step(self, state, done, rem, K, eos_val):
+        state, done, rem, toks, ns = self._chunk_fn(K)(
+            self.params, self.heads, self.tree, state, done, rem, eos_val)
+        return state, done, rem, (toks, ns)
+
+    @staticmethod
+    def sched_emitted(raw):
+        toks, ns = (np.asarray(x) for x in raw)
+        K, B = ns.shape
+        out = [[] for _ in range(B)]
+        for k in range(K):
+            for b in range(B):
+                m = int(ns[k, b])
+                if m:
+                    out[b].extend(int(x) for x in toks[k, b, :m])
+        return out
+
+
+def _insert_spec_row(state, b, row):
+    return type(state)(cache=insert_rows(state.cache, b, row.cache),
+                       cur_token=state.cur_token.at[b].set(row.cur_token[0]),
+                       hidden=state.hidden.at[b].set(row.hidden[0]))
+
+
+def _admit_spec_row(model, params, heads, state, b, batch, *, max_len,
+                    window):
+    row = spec_prefill(model, params, heads, batch, max_len=max_len,
+                       window=window)
+    return _insert_spec_row(state, b, row), row.cur_token[0]
 
 
 def _stats(accepts, times):

@@ -1,0 +1,266 @@
+"""Continuous-batching scheduler: iteration-level admission/eviction on top
+of the chunked engines (Orca-style scheduling, vLLM-style slot reuse).
+
+The engines decode a fixed bank of B rows device-resident, K steps per host
+sync.  This module turns those rows into *slots* a request stream flows
+through:
+
+  queue --admit--> slot b --chunks--> done --evict--> slot b free --admit-->
+
+Slot lifecycle
+--------------
+* **admit** (chunk boundary, row free, request arrived): the prompt is
+  prefilled at B=1 and the row is spliced into the resident state with the
+  engine's jitted ``sched_insert`` (``cache.insert_rows``: per-row KV /
+  recurrent-state write, ``pos[b]`` and ``key_pos[b]`` taken from the fresh
+  prefill, done-mask cleared).  The compiled K-step scan never changes —
+  admission is pure data movement, so the chunk driver is reused across the
+  whole request stream.
+* **decode**: every chunk runs the full bank; free/finished rows ride along
+  masked by the scan's done-mask (no emission, no commit) and cost no extra
+  compilation.  Chunk length is clamped to the largest remaining budget
+  (power-of-two schedule, bounded compile cache).
+* **evict** (chunk boundary, row done): EOS, per-request token budget, or
+  KV-capacity freeze ends a sequence; its outputs are finalized and the row
+  is freed.  If a queued request takes the slot at the same boundary the
+  admission insert overwrites the whole row (it copies every slot of the
+  fresh B=1 prefill, ``key_pos`` included); rows that stay empty are
+  cleared in one batched ``sched_reset`` (``cache.reset_rows``:
+  ``key_pos`` -> -1, ``pos`` -> 0, state zeroed).  With the speculative
+  engine the reset is durable — masked rows commit nothing, so no stale
+  KV/state outlives its request.  ``BatchEngine``'s chunk body decodes
+  every row unconditionally, so a freed row re-accumulates masked scratch
+  (derived from the dead request's last token) until the next admission
+  overwrites it; its emission stays masked throughout.
+
+Capacity semantics: a request whose prompt+budget exceed the engine's
+``max_len`` is not rejected — the chunk driver freezes it at the capacity
+boundary (see runtime/engine.py) and it returns fewer tokens, reported via
+``RequestResult.n_emitted``.
+
+Arrivals are wall-clock: a request is admissible once ``arrival`` seconds
+(relative to ``serve()`` entry) have elapsed, which is how ``serve.py
+--arrivals poisson`` and ``benchmarks/sched_bench.py`` replay traces.
+``serve_static`` is the baseline the bench compares against: requests are
+grouped into fixed batches in arrival order, each batch runs to completion
+(its rows cannot be refilled) before the next one starts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.runtime.engine import _eos_scalar, _pow2_chunk
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request in the replayed stream."""
+    req_id: int
+    tokens: np.ndarray           # (S,) int32 prompt
+    n_tokens: int                # generation budget (includes first token)
+    arrival: float = 0.0         # seconds after serve() start
+
+
+@dataclasses.dataclass
+class RequestResult:
+    req_id: int
+    tokens: np.ndarray           # real emitted tokens (length n_emitted)
+    n_emitted: int
+    arrival: float
+    t_admit: float               # when the request got a slot
+    t_finish: float              # when its outputs were finalized
+
+    @property
+    def latency(self) -> float:
+        return self.t_finish - self.arrival
+
+    @property
+    def queue_wait(self) -> float:
+        return self.t_admit - self.arrival
+
+
+def _aggregate(results: Sequence[RequestResult], makespan: float) -> dict:
+    lats = np.asarray([r.latency for r in results])
+    total = int(sum(r.n_emitted for r in results))
+    return {
+        "requests": len(results),
+        "makespan_s": makespan,
+        "emitted_total": total,
+        "tok_s": total / makespan if makespan > 0 else float("inf"),
+        "latency_mean_s": float(lats.mean()) if lats.size else 0.0,
+        "latency_p50_s": float(np.percentile(lats, 50)) if lats.size else 0.0,
+        "latency_p90_s": float(np.percentile(lats, 90)) if lats.size else 0.0,
+        "queue_wait_mean_s": float(np.mean([r.queue_wait for r in results]))
+        if results else 0.0,
+    }
+
+
+class ContinuousScheduler:
+    """Per-sequence admission/eviction over an engine's B-row slot bank.
+
+    Works with any engine implementing the slot protocol
+    (``sched_prefill`` / ``sched_blank`` / ``sched_insert`` /
+    ``sched_reset`` / ``sched_step`` / ``sched_emitted`` — both
+    ``BatchEngine`` and ``SpeculativeEngine`` do).
+    """
+
+    def __init__(self, engine, *, batch: int = 8,
+                 chunk: Optional[int] = None):
+        self.engine = engine
+        self.batch = batch
+        self.chunk = chunk or engine.chunk
+        # introspection for tests / debugging, populated by serve()
+        self.last_state = None
+        self.events: List[tuple] = []
+
+    def serve(self, requests: Sequence[Request], *, eos: Optional[int] = None
+              ) -> tuple:
+        """Replay ``requests`` (admitting each no earlier than its arrival)
+        and return ``(results, stats)`` with results in request order."""
+        eng, B = self.engine, self.batch
+        eos_val = int(_eos_scalar(eos))
+        queue = deque(sorted(requests, key=lambda r: (r.arrival, r.req_id)))
+        slots: list = [None] * B          # per-row {req, out, t_admit}
+        done_np = np.ones((B,), bool)     # free rows are masked done
+        rem_np = np.zeros((B,), np.int32)
+        state = None
+        results = {}
+        self.events = []
+        max_resident = 0
+        chunks = 0
+        dirty = set()                     # evicted rows not yet reset
+        t0 = time.perf_counter()
+
+        def now():
+            return time.perf_counter() - t0
+
+        while queue or any(s is not None for s in slots):
+            # ---- admit arrived requests into free rows (FIFO) ------------
+            for b in range(B):
+                if slots[b] is not None or not queue:
+                    continue
+                if queue[0].arrival > now():
+                    break
+                req = queue.popleft()
+                prompt = np.asarray(req.tokens, np.int32)[None]
+                if state is None:         # bootstrap the bank once
+                    row = eng.sched_prefill({"tokens": prompt})
+                    state = eng.sched_blank(row, B)
+                    state = eng.sched_insert(state, b, row)
+                    first = eng.sched_first(row)
+                else:                     # ONE fused prefill+insert dispatch
+                    state, first = eng.sched_admit(state, b,
+                                                   {"tokens": prompt})
+                dirty.discard(b)          # insert overwrote the whole row
+                # `first` may be an unsynced device scalar — only force it
+                # when EOS filtering needs the value now
+                slots[b] = {"req": req, "out": [first], "t": now()}
+                done_np[b] = eos is not None and int(first) == eos_val
+                rem_np[b] = max(req.n_tokens - 1, 0)
+                self.events.append(("admit", req.req_id, b))
+            if dirty:                     # rows left empty: one batched reset
+                state = eng.sched_reset(state, sorted(dirty))
+                dirty.clear()
+            occupied = [b for b in range(B) if slots[b] is not None]
+            max_resident = max(max_resident, len(occupied))
+            if not occupied:
+                if not queue:
+                    break
+                wait = queue[0].arrival - now()
+                if wait > 0:
+                    time.sleep(wait)
+                continue
+
+            # ---- run one chunk over the whole bank -----------------------
+            live = [b for b in occupied if not done_np[b] and rem_np[b] > 0]
+            if live:
+                K = _pow2_chunk(self.chunk, int(rem_np[live].max()))
+                state, done, rem, raw = eng.sched_step(
+                    state, done_np, rem_np, K, eos_val)
+                done_np = np.asarray(done).copy()
+                rem_np = np.asarray(rem).copy()
+                per_row = eng.sched_emitted(raw)
+                chunks += 1
+                for b in occupied:
+                    slots[b]["out"].extend(per_row[b])
+
+            # ---- evict finished rows (EOS / budget / capacity freeze) ----
+            for b in occupied:
+                s = slots[b]
+                budget = s["req"].n_tokens
+                if not (done_np[b] or rem_np[b] <= 0
+                        or len(s["out"]) >= budget):
+                    continue
+                kept = s["out"][:budget]
+                results[s["req"].req_id] = RequestResult(
+                    req_id=s["req"].req_id,
+                    tokens=np.asarray(kept, np.int32),
+                    n_emitted=len(kept),
+                    arrival=s["req"].arrival,
+                    t_admit=s["t"], t_finish=now())
+                dirty.add(b)              # reset lazily unless re-admitted
+                slots[b] = None
+                done_np[b] = True
+                rem_np[b] = 0
+                self.events.append(("evict", s["req"].req_id, b))
+
+        if dirty and state is not None:   # final evictions: leave rows clean
+            state = eng.sched_reset(state, sorted(dirty))
+            dirty.clear()
+        makespan = now()
+        self.last_state = state
+        ordered = [results[r.req_id] for r in requests]
+        stats = _aggregate(ordered, makespan)
+        stats.update(admitted=len(ordered), chunks=chunks,
+                     max_resident=max_resident, batch=B, chunk=self.chunk)
+        return ordered, stats
+
+
+def serve_static(engine, requests: Sequence[Request], *, batch: int = 8,
+                 eos: Optional[int] = None) -> tuple:
+    """Static-batching baseline: fixed groups of ``batch`` requests in
+    arrival order; a group prefills only after ALL its members have arrived
+    (batch formation) and runs until EVERY member finishes (per-sequence
+    budgets mask early finishers, but their rows cannot be reused), then the
+    next group starts.  Prompts within a group must share one length."""
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.req_id))
+    results = {}
+    t0 = time.perf_counter()
+
+    def now():
+        return time.perf_counter() - t0
+
+    for i in range(0, len(reqs), batch):
+        group = reqs[i:i + batch]
+        wait = max(r.arrival for r in group) - now()
+        if wait > 0:
+            time.sleep(wait)
+        prompts = np.stack([np.asarray(r.tokens, np.int32) for r in group])
+        budgets = np.asarray([r.n_tokens for r in group], np.int32)
+        t_admit = now()
+        out, stats = engine.generate({"tokens": prompts}, budgets, eos=eos)
+        if out.ndim == 1:                     # B=1 tail group
+            out = out[None]
+        t_fin = now()
+        for j, r in enumerate(group):
+            n = int(stats["n_emitted"][j])
+            results[r.req_id] = RequestResult(
+                req_id=r.req_id, tokens=out[j, :n].copy(), n_emitted=n,
+                arrival=r.arrival, t_admit=t_admit, t_finish=t_fin)
+
+    makespan = now()
+    ordered = [results[r.req_id] for r in requests]
+    stats = _aggregate(ordered, makespan)
+    stats.update(batch=batch)
+    return ordered, stats
+
+
+def poisson_arrivals(n: int, rate: float, *, seed: int = 0) -> np.ndarray:
+    """Cumulative Poisson-process arrival times (rate = requests/second)."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))

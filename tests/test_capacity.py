@@ -1,0 +1,112 @@
+"""Capacity and token-budget regressions in the chunked engines.
+
+Pre-fix behaviour this guards against (PR 2):
+  * a full (window=0) KV cache wrapped writes via ``abs_pos % size`` once
+    ``pos`` passed ``max_len``, silently overwriting the oldest KV and
+    corrupting attention — the engine kept emitting *diverged* tokens;
+  * chunk drivers launched full K-step chunks past every sequence's token
+    budget and kept decoding sequences that had hit ``n_tokens``.
+
+Post-fix: capacity folds into the scan done-mask — a near-capacity
+sequence FREEZES (stops emitting; the speculative engine also stops
+committing) and its emitted prefix is identical to a run with a larger
+cache; ``stats["n_emitted"]`` reports the shortfall.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.speculative import tree as T
+from repro.core.speculative.medusa import init_medusa
+from repro.models.api import get_model
+from repro.runtime.engine import BatchEngine, SpeculativeEngine
+
+
+def _setup(arch="qwen2-0.5b"):
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    heads = init_medusa(cfg, jax.random.PRNGKey(7))
+    spec = T.build_tree(T.default_accs(cfg.medusa_heads, cfg.medusa_top_k), 8)
+    return cfg, model, params, heads, spec
+
+
+def test_spec_engine_near_capacity_freezes_instead_of_wrapping():
+    cfg, model, params, heads, spec = _setup()
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0,
+                              cfg.vocab_size)
+    big = SpeculativeEngine(model, heads, params, spec, max_len=256, chunk=4)
+    out_big, _ = big.generate({"tokens": toks}, 40)
+    small = SpeculativeEngine(model, heads, params, spec, max_len=24,
+                              chunk=4)
+    out_small, st = small.generate({"tokens": toks}, 40)
+    n = int(st["n_emitted"][0])
+    # froze before the budget, after a meaningful prefix
+    assert 4 <= n < 40, n
+    # the emitted prefix is EXACTLY what the larger cache produces — the
+    # ring never wrapped into the attended history
+    np.testing.assert_array_equal(out_small[:n], out_big[:n])
+    # everything past the freeze is padding, not corrupted decode output
+    assert np.all(out_small[n:] == -1)
+
+
+def test_batch_engine_near_capacity_freezes_instead_of_wrapping():
+    cfg, model, params, _, _ = _setup()
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 8), 0,
+                              cfg.vocab_size)
+    big = BatchEngine(model, params, max_len=256, chunk=4)
+    out_big, _ = big.generate({"tokens": toks}, 40)
+    small = BatchEngine(model, params, max_len=20, chunk=4)
+    out_small, st = small.generate({"tokens": toks}, 40)
+    for b in range(2):
+        n = int(st["n_emitted"][b])
+        assert 4 <= n < 40, (b, n)
+        np.testing.assert_array_equal(out_small[b, :n], out_big[b, :n])
+        assert np.all(out_small[b, n:] == -1)
+
+
+def test_sliding_window_still_wraps_by_design():
+    cfg, model, params, _, _ = _setup()
+    toks = jax.random.randint(jax.random.PRNGKey(4), (1, 8), 0,
+                              cfg.vocab_size)
+    eng = BatchEngine(model, params, max_len=64, window=16, chunk=4)
+    out, st = eng.generate({"tokens": toks}, 30)
+    # a windowed ring is SUPPOSED to wrap: no capacity freeze
+    assert int(st["n_emitted"][0]) == 30
+
+
+def test_budget_stops_chunks_and_counts_real_tokens():
+    cfg, model, params, heads, spec = _setup()
+    toks = jax.random.randint(jax.random.PRNGKey(6), (2, 8), 0,
+                              cfg.vocab_size)
+    eng = BatchEngine(model, params, max_len=96, chunk=8)
+    # n_tokens NOT a multiple of chunk: the driver clamps the tail chunk
+    # instead of launching a full 8-step scan for 2 remaining tokens
+    out, st = eng.generate({"tokens": toks}, 11)
+    assert out.shape == (2, 11)
+    np.testing.assert_array_equal(st["n_emitted"], [11, 11])
+    assert st["emitted_total"] == 22
+    # 10 decode steps = chunks of 8 + 2, never 8 + 8
+    assert len(st["step_times"]) == 2
+
+    # per-sequence budgets: each row stops at ITS budget, output padded
+    out2, st2 = eng.generate({"tokens": toks}, np.asarray([4, 11]))
+    assert out2.shape == (2, 11)
+    np.testing.assert_array_equal(st2["n_emitted"], [4, 11])
+    np.testing.assert_array_equal(out2[0, :4], out[0, :4])
+    np.testing.assert_array_equal(out2[1], out[1])
+    assert np.all(out2[0, 4:] == -1)
+
+
+def test_spec_budget_per_sequence():
+    cfg, model, params, heads, spec = _setup()
+    toks = jax.random.randint(jax.random.PRNGKey(8), (2, 8), 0,
+                              cfg.vocab_size)
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=96, chunk=4)
+    out, st = eng.generate({"tokens": toks}, 14)
+    out2, st2 = eng.generate({"tokens": toks}, np.asarray([5, 14]))
+    np.testing.assert_array_equal(st2["n_emitted"], [5, 14])
+    np.testing.assert_array_equal(out2[0, :5], out[0, :5])
+    np.testing.assert_array_equal(out2[1], out[1])
+    assert np.all(out2[0, 5:] == -1)

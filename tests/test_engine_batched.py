@@ -130,7 +130,11 @@ def test_measure_acceptance_reuses_engine_and_compiled_step():
     sizes = {k: f._cache_size() for k, f in eng._chunks.items()}
     al1 = measure_acceptance(model, heads, params, spec_b, prompts,
                              n_tokens=10, engine=eng)
-    for k, f in eng._chunks.items():
-        assert f._cache_size() == sizes[k], "re-jitted for a same-shape tree"
+    # the budget-aware driver may compile NEW tail-chunk lengths (different
+    # acceptance -> different remaining-budget schedule); what must not
+    # happen is a re-jit of an existing chunk length for a same-shape tree
+    for k, size in sizes.items():
+        assert eng._chunks[k]._cache_size() == size, \
+            "re-jitted for a same-shape tree"
     assert 1.0 <= al0 <= spec_a.max_depth
     assert 1.0 <= al1 <= spec_b.max_depth

@@ -1,0 +1,198 @@
+"""Continuous-batching scheduler (runtime/scheduler.py).
+
+Invariants:
+  * every request served through the continuous scheduler gets EXACTLY the
+    tokens it would get running alone at B=1 (ref + Pallas backends, all
+    architecture families) — admission into a busy bank, sharing chunks
+    with other residents, and slot reuse never perturb a sequence;
+  * eviction frees cache rows (key_pos cleared, pos reset) and freed rows
+    are re-used for later admissions (more requests than slots);
+  * mid-run admission does not perturb already-resident sequences;
+  * the static baseline (``serve_static``) also matches solo runs and
+    honours per-request budgets;
+  * the per-row cache primitives (reset/insert/tile) do row surgery without
+    touching other rows.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.speculative import tree as T
+from repro.core.speculative.medusa import init_medusa
+from repro.models.api import get_model
+from repro.runtime import cache as C
+from repro.runtime.engine import BatchEngine, SpeculativeEngine
+from repro.runtime.scheduler import (ContinuousScheduler, Request,
+                                     serve_static)
+
+
+def _setup(arch="qwen2-0.5b"):
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    heads = init_medusa(cfg, jax.random.PRNGKey(7))
+    spec = T.build_tree(T.default_accs(cfg.medusa_heads, cfg.medusa_top_k), 8)
+    return cfg, model, params, heads, spec
+
+
+def _requests(cfg, n, budgets, prompt_len=8, seed=3):
+    toks = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n, prompt_len), 0, cfg.vocab_size),
+        np.int32)
+    return [Request(req_id=i, tokens=toks[i],
+                    n_tokens=budgets[i % len(budgets)]) for i in range(n)]
+
+
+def _assert_matches_solo(engine, results, requests):
+    for r, req in zip(results, requests):
+        solo, _ = engine.generate({"tokens": req.tokens[None]}, req.n_tokens)
+        solo = np.atleast_2d(solo)[0]
+        assert r.n_emitted == req.n_tokens, (r.req_id, r.n_emitted)
+        np.testing.assert_array_equal(r.tokens, solo[:req.n_tokens],
+                                      err_msg=f"req {r.req_id}")
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_continuous_spec_matches_solo_runs(backend):
+    cfg, model, params, heads, spec = _setup()
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=64,
+                            backend=backend, chunk=4)
+    # 5 requests through 2 slots with mixed budgets: admissions land
+    # mid-run next to resident sequences, rows get reused
+    reqs = _requests(cfg, 5, budgets=[6, 12, 9])
+    sched = ContinuousScheduler(eng, batch=2)
+    results, stats = sched.serve(reqs)
+    assert stats["admitted"] == 5
+    assert stats["max_resident"] <= 2
+    _assert_matches_solo(eng, results, reqs)
+    # slot reuse actually happened (5 requests, 2 rows)
+    rows_used = {b for ev, _, b in sched.events if ev == "admit"}
+    assert rows_used == {0, 1}
+
+
+def test_continuous_batch_engine_matches_solo_runs():
+    cfg, model, params, _, _ = _setup()
+    eng = BatchEngine(model, params, max_len=64, chunk=4)
+    reqs = _requests(cfg, 4, budgets=[6, 11])
+    results, stats = ContinuousScheduler(eng, batch=2).serve(reqs)
+    assert stats["admitted"] == 4
+    _assert_matches_solo(eng, results, reqs)
+
+
+@pytest.mark.parametrize("arch", ["zamba2-7b", "xlstm-125m"])
+def test_continuous_all_families(arch):
+    cfg, model, params, heads, spec = _setup(arch)
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=64, chunk=4)
+    reqs = _requests(cfg, 4, budgets=[5, 10])
+    results, _ = ContinuousScheduler(eng, batch=2).serve(reqs)
+    _assert_matches_solo(eng, results, reqs)
+
+
+def test_eviction_frees_rows():
+    cfg, model, params, heads, spec = _setup()
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=64, chunk=4)
+    reqs = _requests(cfg, 3, budgets=[5])
+    sched = ContinuousScheduler(eng, batch=2)
+    results, _ = sched.serve(reqs)
+    assert all(r.n_emitted == 5 for r in results)
+    # after the stream drains every slot was evicted: freed rows hold no
+    # KV (key_pos cleared to -1, pos back to 0) — done rows never commit,
+    # so the reset state survives the trailing chunks
+    kv = sched.last_state.cache.kv
+    assert np.all(np.asarray(kv.key_pos) == -1)
+    assert np.all(np.asarray(kv.pos) == 0)
+    evicted = [r for ev, r, _ in sched.events if ev == "evict"]
+    assert sorted(evicted) == [0, 1, 2]
+
+
+@pytest.mark.parametrize("arch", ["zamba2-7b", "xlstm-125m"])
+def test_eviction_frees_recurrent_state(arch):
+    """Frozen rows commit NOTHING — a reset recurrent row stays zeroed
+    through trailing chunks (n_accept=0 must not clamp-select depth-0
+    state back into it)."""
+    cfg, model, params, heads, spec = _setup(arch)
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=64, chunk=4)
+    # budgets differ so one row drains chunks after the other was evicted
+    reqs = _requests(cfg, 2, budgets=[4, 16])
+    sched = ContinuousScheduler(eng, batch=2)
+    results, _ = sched.serve(reqs)
+    _assert_matches_solo(eng, results, reqs)
+    cache = sched.last_state.cache
+    if cache.mamba is not None:
+        assert np.all(np.asarray(cache.mamba.ssm) == 0)
+        assert np.all(np.asarray(cache.mamba.conv) == 0)
+    if cache.xlstm is not None:
+        for leaf in jax.tree_util.tree_leaves(cache.xlstm.layers):
+            assert np.all(np.asarray(leaf) == 0)
+    if cache.kv is not None:
+        assert np.all(np.asarray(cache.kv.key_pos) == -1)
+
+
+def test_admission_does_not_perturb_resident_sequences():
+    cfg, model, params, heads, spec = _setup()
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=96, chunk=4)
+    # request 0 holds its row for the whole run; 1..3 churn through the
+    # second slot while 0 decodes
+    reqs = _requests(cfg, 4, budgets=[24, 4, 4, 4])
+    sched = ContinuousScheduler(eng, batch=2)
+    results, _ = sched.serve(reqs)
+    _assert_matches_solo(eng, results, reqs)
+    # the churn really happened while request 0 was resident: its eviction
+    # comes after every other admission
+    order = [(ev, r) for ev, r, _ in sched.events]
+    assert order.index(("evict", 0)) > order.index(("admit", 3))
+
+
+def test_static_baseline_matches_solo_and_budgets():
+    cfg, model, params, heads, spec = _setup()
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=64, chunk=4)
+    reqs = _requests(cfg, 4, budgets=[5, 12])
+    results, stats = serve_static(eng, reqs, batch=2)
+    _assert_matches_solo(eng, results, reqs)
+    assert stats["emitted_total"] == 5 + 12 + 5 + 12
+
+
+def test_row_primitives_unit():
+    kv = C.init_kv_cache(2, 3, 8, 2, 4)
+    cache = C.Cache(kv=kv)
+    cache = C.Cache(kv=C.KVCache(
+        k=jnp.ones_like(kv.k), v=jnp.ones_like(kv.v),
+        key_pos=jnp.zeros_like(kv.key_pos), pos=kv.pos + 5, window=0))
+    # reset row 1 only
+    out = C.reset_rows(cache, np.asarray([False, True, False]))
+    assert np.all(np.asarray(out.kv.key_pos[1]) == -1)
+    assert int(out.kv.pos[1]) == 0
+    assert np.all(np.asarray(out.kv.k[:, 1]) == 0)
+    # other rows untouched
+    assert np.all(np.asarray(out.kv.k[:, 0]) == 1)
+    assert int(out.kv.pos[0]) == 5
+    # insert a B=1 cache into row 2
+    src = C.Cache(kv=C.KVCache(
+        k=jnp.full((2, 1, 8, 2, 4), 7.0, kv.k.dtype),
+        v=jnp.full((2, 1, 8, 2, 4), 7.0, kv.v.dtype),
+        key_pos=jnp.full((1, 8), 3, jnp.int32),
+        pos=jnp.full((1,), 9, jnp.int32), window=0))
+    out2 = C.insert_rows(out, 2, src)
+    assert np.all(np.asarray(out2.kv.k[:, 2]) == 7)
+    assert int(out2.kv.pos[2]) == 9
+    assert np.all(np.asarray(out2.kv.key_pos[2]) == 3)
+    assert np.all(np.asarray(out2.kv.k[:, 0]) == 1)      # row 0 untouched
+    # tile a B=1 cache to 4 rows
+    tiled = C.tile_rows(src, 4)
+    assert tiled.kv.k.shape[1] == 4
+    assert np.all(np.asarray(tiled.kv.pos) == 9)
+
+
+def test_capacity_left():
+    kv = C.init_kv_cache(1, 2, 16, 2, 4)
+    cache = C.Cache(kv=C.KVCache(k=kv.k, v=kv.v, key_pos=kv.key_pos,
+                                 pos=jnp.asarray([4, 16], jnp.int32),
+                                 window=0))
+    np.testing.assert_array_equal(np.asarray(C.capacity_left(cache)),
+                                  [12, 0])
+    # sliding-window rings wrap by design: unbounded
+    wkv = C.init_kv_cache(1, 2, 16, 2, 4, window=16)
+    left = C.capacity_left(C.Cache(kv=wkv))
+    assert np.all(np.asarray(left) > 1 << 20)
