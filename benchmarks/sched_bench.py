@@ -9,10 +9,21 @@ process whose rate is calibrated against a measured warm static makespan,
 so the stream is genuinely staggered (neither all-at-once nor fully idle)
 at any machine speed.
 
+Paged KV comparison (``record["paged"]``): at FIXED pool memory — the
+paged pool's reservable slots round DOWN from what the dense B-row bank
+holds, so the paged side never gets extra KV memory — a
+double-width bank over the shared pool sustains a strictly larger resident
+batch on the same mixed 16/192-budget burst, because short requests
+reserve ~3 pages while only long ones reserve the dense row's worth.  The
+section also asserts the donation wiring: after a chunk step the input
+pool buffer must be DELETED (aliased in place) and exactly one pool-sized
+buffer may be live — a ~2x pool-size peak fails the bench.
+``--paged`` runs ONLY this comparison (the CI smoke).
+
 Runs in a SUBPROCESS with XLA CPU intra-op threading pinned off, same
 measurement contract as engine_bench (see that module's docstring).
 
-  PYTHONPATH=src python benchmarks/sched_bench.py [--requests 32]
+  PYTHONPATH=src python benchmarks/sched_bench.py [--requests 32] [--paged]
 
 Emits a JSON record to ``benchmarks/results/sched_bench.json``.
 """
@@ -71,7 +82,96 @@ def _best_of(fn, reps):
     return best
 
 
-def _worker(n_requests: int, chunk: int, reps: int) -> dict:
+PAGE_SIZE = 16
+
+
+def _paged_compare(cfg, model, params, heads, spec, max_len, n_requests,
+                   chunk, reps) -> dict:
+    """Fixed-memory paged-vs-dense resident-batch comparison + the
+    in-place-update (donation) buffer check."""
+    import jax
+    import numpy as np
+
+    from repro.runtime.engine import SpeculativeEngine, _eos_scalar
+    from repro.runtime.scheduler import ContinuousScheduler
+
+    # FIXED MEMORY: the pool's reservable slots round DOWN from the dense
+    # BATCH-row bank's (never more KV memory than the baseline; the +1
+    # trash page is bookkeeping, not reservable capacity); the paged bank
+    # is twice as wide and lives off reservations
+    pool_pages = (BATCH * max_len) // PAGE_SIZE
+    paged_batch = 2 * BATCH
+    dense = SpeculativeEngine(model, heads, params, spec, max_len=max_len,
+                              chunk=chunk)
+    paged = SpeculativeEngine(model, heads, params, spec, max_len=max_len,
+                              chunk=chunk, paged=True, page_size=PAGE_SIZE,
+                              pool_pages=pool_pages)
+
+    # ---- donation buffer check: chunk updates the pool IN PLACE ----------
+    row = paged.sched_prefill(
+        {"tokens": np.zeros((1, PROMPT_LEN), np.int32)})
+    state = paged.sched_blank(row, paged_batch)
+    state = paged.sched_insert(state, 0, row, prompt_len=PROMPT_LEN,
+                               n_tokens=BUDGETS[0])
+    pool_before = state.cache.kv.pool_k
+    pool_nbytes = pool_before.nbytes
+
+    def n_pool_sized():
+        return sum(1 for a in jax.live_arrays() if a.nbytes == pool_nbytes)
+
+    jax.block_until_ready(pool_before)
+    baseline = n_pool_sized()                    # the state's pool (+ any
+    done = np.ones((paged_batch,), bool)         # coincidental constants)
+    done[0] = False
+    rem = np.zeros((paged_batch,), np.int32)
+    rem[0] = BUDGETS[0]
+    state, _, _, _ = paged.sched_step(state, done, rem, chunk,
+                                      int(_eos_scalar(None)))
+    jax.block_until_ready(state.cache.kv.pool_k)
+    if not pool_before.is_deleted():
+        raise AssertionError("chunk scan did not donate the KV pool "
+                             "(per-chunk pool copy)")
+    if n_pool_sized() > baseline:
+        raise AssertionError(
+            "extra pool-sized buffer live after a chunk (~2x pool peak) — "
+            "donation/aliasing regressed")
+    paged.sched_release(0)
+    del state, row, pool_before
+
+    # ---- resident-batch + throughput on the mixed-budget burst -----------
+    zero = np.zeros(n_requests)
+    for eng, b in ((dense, BATCH), (paged, paged_batch)):   # warm/compile
+        ContinuousScheduler(eng, batch=b, chunk=chunk).serve(
+            _requests(cfg, n_requests, zero))
+    dn = _best_of(lambda: ContinuousScheduler(
+        dense, batch=BATCH, chunk=chunk).serve(
+            _requests(cfg, n_requests, zero)), reps)
+    pg = _best_of(lambda: ContinuousScheduler(
+        paged, batch=paged_batch, chunk=chunk).serve(
+            _requests(cfg, n_requests, zero)), reps)
+    if n_requests > BATCH and pg["max_resident"] <= dn["max_resident"]:
+        raise AssertionError(
+            f"paged resident batch {pg['max_resident']} not larger than "
+            f"dense {dn['max_resident']} at fixed pool memory")
+    return {
+        "page_size": PAGE_SIZE, "pool_pages": pool_pages,
+        "pool_slots": pool_pages * PAGE_SIZE,
+        "dense_batch": BATCH, "paged_batch": paged_batch,
+        "dense_max_resident": dn["max_resident"],
+        "paged_max_resident": pg["max_resident"],
+        "dense_tok_s": dn["tok_s"], "paged_tok_s": pg["tok_s"],
+        "dense_makespan_s": dn["makespan_s"],
+        "paged_makespan_s": pg["makespan_s"],
+        "dense_latency_mean_s": dn["latency_mean_s"],
+        "paged_latency_mean_s": pg["latency_mean_s"],
+        "resident_gain": pg["max_resident"] / max(dn["max_resident"], 1),
+        "speedup_paged_vs_dense": pg["tok_s"] / dn["tok_s"],
+        "donation_in_place": True,
+    }
+
+
+def _worker(n_requests: int, chunk: int, reps: int,
+            paged_only: bool = False) -> dict:
     import jax
     import numpy as np
 
@@ -88,6 +188,11 @@ def _worker(n_requests: int, chunk: int, reps: int) -> dict:
     heads = init_medusa(cfg, jax.random.PRNGKey(1))
     spec = T.build_tree(T.default_accs(cfg.medusa_heads, cfg.medusa_top_k), 4)
     max_len = PROMPT_LEN + max(BUDGETS) + spec.max_depth
+
+    if paged_only:
+        return {"arch": cfg.name, "requests": n_requests, "chunk": chunk,
+                "paged": _paged_compare(cfg, model, params, heads, spec,
+                                        max_len, n_requests, chunk, reps)}
 
     engines = {
         "sequential": BatchEngine(model, params, max_len=max_len,
@@ -134,31 +239,50 @@ def _worker(n_requests: int, chunk: int, reps: int) -> dict:
     record["speedup_continuous_vs_static"] = min(
         record["speedup_continuous_vs_static_sequential"],
         record["speedup_continuous_vs_static_speculative"])
+    record["paged"] = _paged_compare(cfg, model, params, heads, spec,
+                                     max_len, n_requests, chunk, reps)
     return record
 
 
-def run(n_requests=32, chunk=8, reps=2) -> list:
+def run(n_requests=32, chunk=8, reps=2, paged_only=False) -> list:
     """Spawn the pinned-environment worker, persist + pretty-print results."""
-    record = spawn_pinned_worker(__file__, ["--requests", str(n_requests),
-                                           "--chunk", str(chunk),
-                                           "--reps", str(reps)])
+    argv = ["--requests", str(n_requests), "--chunk", str(chunk),
+            "--reps", str(reps)]
+    if paged_only:
+        argv.append("--paged")
+    record = spawn_pinned_worker(__file__, argv)
 
     rows = []
-    for g in record["grid"]:
+    for g in record.get("grid", ()):
         name = f"sched_{g['sched'][:4]}_{g['engine'][:4]}_b{BATCH}"
         rows.append((name, 1e6 / g["tok_s"],
                      f"{g['tok_s']:.1f} tok/s agg, "
                      f"lat p90 {g['latency_p90_s']:.2f}s"))
-    for eng in ("sequential", "speculative"):
-        rows.append((f"sched_speedup_cont_vs_static_{eng[:4]}",
-                     record[f"speedup_continuous_vs_static_{eng}"],
-                     "x aggregate tok/s"))
-        rows.append((f"sched_latencyx_static_vs_cont_{eng[:4]}",
-                     record[f"latency_ratio_static_vs_continuous_{eng}"],
-                     "x mean latency (higher = static worse)"))
+    if "grid" in record:
+        for eng in ("sequential", "speculative"):
+            rows.append((f"sched_speedup_cont_vs_static_{eng[:4]}",
+                         record[f"speedup_continuous_vs_static_{eng}"],
+                         "x aggregate tok/s"))
+            rows.append((f"sched_latencyx_static_vs_cont_{eng[:4]}",
+                         record[f"latency_ratio_static_vs_continuous_{eng}"],
+                         "x mean latency (higher = static worse)"))
+    pg = record["paged"]
+    rows.append(("sched_paged_resident_gain", pg["resident_gain"],
+                 f"{pg['paged_max_resident']} vs "
+                 f"{pg['dense_max_resident']} resident at "
+                 f"{pg['pool_slots']} pool slots"))
+    rows.append(("sched_paged_vs_dense_tok_s", pg["speedup_paged_vs_dense"],
+                 f"{pg['paged_tok_s']:.1f} vs {pg['dense_tok_s']:.1f} "
+                 "tok/s agg at fixed pool memory"))
 
     os.makedirs(RESULT_DIR, exist_ok=True)
     path = os.path.join(RESULT_DIR, "sched_bench.json")
+    if paged_only and os.path.exists(path):
+        # CI smoke: refresh only the paged section of the checked-in record
+        with open(path) as f:
+            full = json.load(f)
+        full["paged"] = record["paged"]
+        record = full
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
     for name, val, derived in rows:
@@ -172,10 +296,14 @@ if __name__ == "__main__":
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--paged", action="store_true",
+                    help="run ONLY the fixed-memory paged-vs-dense "
+                         "comparison (CI smoke)")
     ap.add_argument("--worker", action="store_true")
     args = ap.parse_args()
     if args.worker:
         bootstrap_worker_path()
-        print(json.dumps(_worker(args.requests, args.chunk, args.reps)))
+        print(json.dumps(_worker(args.requests, args.chunk, args.reps,
+                                 paged_only=args.paged)))
     else:
-        run(args.requests, args.chunk, args.reps)
+        run(args.requests, args.chunk, args.reps, paged_only=args.paged)

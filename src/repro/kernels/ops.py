@@ -36,6 +36,24 @@ def tree_attention(q, ck, cv, k_new, v_new, key_pos, pos, tree_depth,
                                 lo, tree_mask, **kwargs)
 
 
+def paged_tree_attention(q, pool_k, pool_v, k_new, v_new, block_table,
+                         key_pos, pos, tree_depth, tree_mask):
+    """Paged-cache verification path (models/attention.py, paged engines).
+
+    pool_k/pool_v are ONE layer's shared page pool ``(n_pages + 1, ps,
+    Hkv, hd)`` (trash page last); block_table/key_pos/pos are the
+    per-sequence rows.  Windowed attention is dense-only (the ring IS the
+    window), so there is no ``window`` here.
+    """
+    B = q.shape[0]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    q_pos = pos_b[:, None] + tree_depth[None, :].astype(jnp.int32)  # (B, W)
+    lo = jnp.full_like(q_pos, -1)
+    return _tree.paged_tree_attention(q, pool_k, pool_v, k_new, v_new,
+                                      block_table, key_pos, q_pos, lo,
+                                      tree_mask, interpret=INTERPRET)
+
+
 def decode_attention(q, ck, cv, k_new, v_new, key_pos, pos, *, window=0):
     """Plain decode = W=1 tree."""
     return tree_attention(q, ck, cv, k_new, v_new, key_pos, pos,

@@ -41,6 +41,23 @@ def tree_attention_ref(q, ck, cv, k_new, v_new, key_pos, q_pos, lo,
     return cm.merge_partials([dense, sparse]).astype(q.dtype)
 
 
+def paged_tree_attention_ref(q, pool_k, pool_v, k_new, v_new, block_table,
+                             key_pos, q_pos, lo, tree_mask):
+    """Paged oracle: gather each sequence's pages into the logical
+    (B, S_logical, Hkv, hd) view, then run the dense oracle.
+
+    pool_k/pool_v: (n_pages + 1, ps, Hkv, hd) ONE layer's pool (trash page
+    last); block_table: (B, max_pages) with -1 = unreserved (reads the
+    trash page; those slots carry key_pos == -1 so every mask rejects
+    them); key_pos: (B, max_pages * ps).
+    """
+    from repro.runtime.cache import gather_pages
+    ck = gather_pages(pool_k, block_table)
+    cv = gather_pages(pool_v, block_table)
+    return tree_attention_ref(q, ck, cv, k_new, v_new, key_pos, q_pos, lo,
+                              tree_mask)
+
+
 def decode_attention_ref(q, ck, cv, k_new, v_new, key_pos, q_pos, lo):
     """W=1 special case (plain decode)."""
     W = q.shape[1]

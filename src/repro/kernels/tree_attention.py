@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused tree-verification attention.
+"""Pallas TPU kernel: fused tree-verification attention (dense and paged).
 
 The Ghidorah dense/sparse split, TPU-native (DESIGN.md §2): W draft queries
 attend to the KV cache (dense part, tiled over KV blocks in VMEM) and to the
@@ -13,6 +13,15 @@ MXU-aligned when BS and hd are multiples of 128 and G*W of 8.
 Grid: (B, Hkv, nblocks+1); the last block handles the tree part and the
 normalization + writeback.  Scratch (o, m, l) persists across the KV-block
 axis (sequential minor-most grid dimension on TPU).
+
+Paged variant (``paged_tree_attention``): the KV blocks live in a SHARED
+page pool ``(n_pages + 1, page_size, Hkv, hd)`` instead of per-sequence
+rows.  The grid's KV axis loops over a sequence's *logical* pages and the
+block table rides in as a scalar-prefetch argument, so the index map DMAs
+physical page ``table[b, i]`` for grid step ``i`` — unreserved entries are
+pre-clamped to the trailing trash page, whose slots carry ``key_pos == -1``
+and mask to zero weight.  The kernel body is byte-for-byte the dense one;
+only the BlockSpec index maps change.
 """
 from __future__ import annotations
 
@@ -130,5 +139,72 @@ def tree_attention(q, ck, cv, k_new, v_new, key_pos, q_pos, lo, tree_mask,
         interpret=interpret,
     )(qg, ck, cv, kn, v_new, key_pos, q_pos, lo, tree_mask)
     # regroup back: (B, W, Hq, hd)
+    return out.reshape(B, Hkv, G, W, hd).transpose(0, 3, 1, 2, 4).reshape(
+        B, W, Hq, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_tree_attention(q, pool_k, pool_v, k_new, v_new, block_table,
+                         key_pos, q_pos, lo, tree_mask, *, interpret=True):
+    """Paged tree-verification attention: the KV-block grid axis walks a
+    sequence's block table instead of a dense row.
+
+    q: (B, W, Hq, hd); pool_k/pool_v: (n_pages + 1, ps, Hkv, hd) one
+    layer's shared pool, trash page last; block_table: (B, max_pages) int32
+    (-1 = unreserved); key_pos: (B, max_pages * ps); q_pos/lo: (B, W).
+    One KV "block" is one page (block_s == page_size): grid step i of row b
+    fetches physical page ``table[b, i]`` via scalar prefetch.
+    """
+    B, W, Hq, hd = q.shape
+    P, ps, Hkv = pool_k.shape[0], pool_k.shape[1], pool_k.shape[2]
+    maxp = block_table.shape[1]
+    G = Hq // Hkv
+    # unreserved logical pages fetch the trash page; their slots are
+    # key_pos == -1, so the validity mask zeroes them
+    tbl = jnp.where(block_table < 0, P - 1, block_table).astype(jnp.int32)
+
+    qg = q.reshape(B, W, Hkv, G, hd).transpose(0, 2, 3, 1, 4).reshape(
+        B, Hkv, G * W, hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, maxp + 1),
+        in_specs=[
+            pl.BlockSpec((1, 1, G * W, hd), lambda b, h, i, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, i, t, _n=maxp:
+                         (t[b, jnp.minimum(i, _n - 1)], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, i, t, _n=maxp:
+                         (t[b, jnp.minimum(i, _n - 1)], 0, h, 0)),
+            pl.BlockSpec((1, W, 1, hd), lambda b, h, i, t: (b, 0, h, 0)),
+            pl.BlockSpec((1, W, 1, hd), lambda b, h, i, t: (b, 0, h, 0)),
+            pl.BlockSpec((1, ps),
+                         lambda b, h, i, t, _n=maxp:
+                         (b, jnp.minimum(i, _n - 1))),
+            pl.BlockSpec((1, W), lambda b, h, i, t: (b, 0)),
+            pl.BlockSpec((1, W), lambda b, h, i, t: (b, 0)),
+            pl.BlockSpec((W, W), lambda b, h, i, t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G * W, hd),
+                               lambda b, h, i, t: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G * W, hd), jnp.float32),
+            pltpu.VMEM((G * W, 1), jnp.float32),
+            pltpu.VMEM((G * W, 1), jnp.float32),
+        ],
+    )
+
+    def kernel(tbl_ref, *refs):
+        # table only drives the index maps; the body is the dense kernel
+        _kernel(*refs, nblocks=maxp, scale=hd ** -0.5)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G * W, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, qg, pool_k, pool_v, k_new, v_new, key_pos, q_pos,
+      lo, tree_mask)
     return out.reshape(B, Hkv, G, W, hd).transpose(0, 3, 1, 2, 4).reshape(
         B, W, Hq, hd)

@@ -22,6 +22,13 @@ Capacity: the KV cache is sized so the full token budget fits
 (prompt + tokens + tree depth of speculative overshoot).  An undersized
 cache no longer wraps silently — the engines freeze a sequence at the
 capacity boundary and ``n_emitted`` reports the shortfall.
+
+``--paged`` swaps the dense per-row KV for the shared page pool
+(runtime/cache.py): each sequence reserves only the pages its
+prompt+budget needs, so ``--pool-pages`` bounds total KV memory instead of
+``batch * max_len`` — shrink it below the dense equivalent to serve a
+larger ``--batch`` at fixed memory (the sched_bench paged record measures
+exactly this trade).
 """
 from __future__ import annotations
 
@@ -87,10 +94,22 @@ def main():
     ap.add_argument("--sched", default="continuous",
                     choices=["continuous", "static"],
                     help="scheduler for --arrivals replay")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV: sequences share one page pool and "
+                         "reserve pages for prompt+budget instead of a "
+                         "dense max_len row each")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="slots per KV page (--paged)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="total reservable pages in the shared pool "
+                         "(0 = dense-equivalent: batch * pages(max_len)); "
+                         "shrink to serve a larger --batch at fixed memory")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--heads-ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    paged_kw = dict(paged=args.paged, page_size=args.page_size,
+                    pool_pages=args.pool_pages or None)
 
     cfg = get_config(args.arch)
     model = get_model(cfg)
@@ -106,7 +125,8 @@ def main():
         # prompt + budget slots; the sequential driver writes at most
         # prompt + (tokens - 1) entries before every row is done
         max_len = args.prompt_len + args.tokens
-        eng = BatchEngine(model, params, max_len=max_len, chunk=args.chunk)
+        eng = BatchEngine(model, params, max_len=max_len, chunk=args.chunk,
+                          **paged_kw)
         if args.arrivals != "none":
             _replay(eng, args, data, cfg)
             return
@@ -135,7 +155,7 @@ def main():
     # ``+ 8`` slack was smaller than the overshoot and the ring wrapped
     max_len = args.prompt_len + args.tokens + spec.max_depth
     eng = SpeculativeEngine(model, heads, params, spec, max_len=max_len,
-                            chunk=args.chunk)
+                            chunk=args.chunk, **paged_kw)
     if args.arrivals != "none":
         _replay(eng, args, data, cfg)
         return

@@ -161,35 +161,52 @@ def cross_kv_init(cfg, p, enc_out):
 
 
 def attn_verify(cfg, p, x, *, ck, cv, key_pos, pos, tree_depth, tree_mask,
-                window=0, backend="ref"):
+                window=0, backend="ref", block_table=None):
     """Tree-verification attention over W draft tokens (decode = W=1 case).
 
-    x: (B, W, d); ck/cv: (B, S, Hkv, hd) cache; tree_depth: (W,) node depth
-    (0 = first new token); tree_mask: (W, W) ancestor-or-self mask.
+    x: (B, W, d); tree_depth: (W,) node depth (0 = first new token);
+    tree_mask: (W, W) ancestor-or-self mask.
     ``pos`` and ``key_pos`` are per-sequence — () or (B,), and (S,) or (B, S)
     — because batched speculative decoding leaves each sequence at its own
     absolute position after a commit.
+
+    Cache layout: dense (``block_table=None``) reads ck/cv as per-sequence
+    rows (B, S, Hkv, hd); paged passes ONE layer's shared page pool
+    ``(n_pages + 1, ps, Hkv, hd)`` plus ``block_table (B, max_pages)`` —
+    the ref path gathers the logical view through the table, the Pallas
+    path walks the table inside the kernel (scalar prefetch).  The mask
+    math is layout-agnostic: ``key_pos`` is already logical.
     Returns (out (B, W, d), (k_new, v_new)) — fresh KVs NOT yet committed.
     """
     B, W, _ = x.shape
     pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
-    key_pos_b = jnp.broadcast_to(key_pos, (B, ck.shape[1]))
     positions = pos_b[:, None] + tree_depth[None, :]           # (B, W)
     q, k_new, v_new = _qkv(cfg, p, x, positions)
     scale = cfg.head_dim ** -0.5
 
-    if backend == "pallas":
+    if block_table is not None and backend == "pallas":
         from repro.kernels import ops as kops
-        o = kops.tree_attention(q, ck, cv, k_new, v_new, key_pos_b,
-                                pos_b, tree_depth, tree_mask, window=window)
+        o = kops.paged_tree_attention(q, ck, cv, k_new, v_new, block_table,
+                                      key_pos, pos_b, tree_depth, tree_mask)
     else:
-        # dense part: W queries vs the KV cache (per-batch, per-query mask)
-        cache_ok = batched_decode_mask(key_pos_b, positions, window)  # (B,W,S)
-        dense = cm.gqa_attend_partial(q, ck, cv, cache_ok[:, None], scale)
-        # sparse part: W queries vs W fresh tree KVs under the ancestor mask
-        sparse = cm.gqa_attend_partial(q, k_new, v_new,
-                                       tree_mask[None, None], scale)
-        o = cm.merge_partials([dense, sparse]).astype(x.dtype)
+        if block_table is not None:
+            from repro.runtime.cache import gather_pages
+            ck = gather_pages(ck, block_table)      # (B, S_logical, Hkv, hd)
+            cv = gather_pages(cv, block_table)
+        key_pos_b = jnp.broadcast_to(key_pos, (B, ck.shape[1]))
+        if backend == "pallas":
+            from repro.kernels import ops as kops
+            o = kops.tree_attention(q, ck, cv, k_new, v_new, key_pos_b,
+                                    pos_b, tree_depth, tree_mask,
+                                    window=window)
+        else:
+            # dense part: W queries vs the KV cache (per-batch/query mask)
+            cache_ok = batched_decode_mask(key_pos_b, positions, window)
+            dense = cm.gqa_attend_partial(q, ck, cv, cache_ok[:, None], scale)
+            # sparse part: W queries vs W fresh tree KVs, ancestor mask
+            sparse = cm.gqa_attend_partial(q, k_new, v_new,
+                                           tree_mask[None, None], scale)
+            o = cm.merge_partials([dense, sparse]).astype(x.dtype)
 
     out = o.reshape(B, W, -1) @ p["wo"]
     return out, (k_new, v_new)

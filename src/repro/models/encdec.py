@@ -14,7 +14,7 @@ from repro.models import common as cm
 from repro.models.attention import (attn_cross, attn_init, attn_prefill,
                                     attn_verify, cross_kv_init)
 from repro.models.mlp import mlp_apply, mlp_init
-from repro.runtime.cache import Cache, KVCache, init_kv_cache
+from repro.runtime.cache import Cache, KVCache, PagedKVCache, init_kv_cache
 
 
 def init_params(cfg, rng):
@@ -118,6 +118,8 @@ def verify(cfg, params, cache: Cache, tree_tokens, tree_depth, tree_mask,
            *, backend="ref", **_):
     x = params["embed"][tree_tokens]
     kv = cache.kv
+    paged = isinstance(kv, PagedKVCache)
+    table = kv.block_table if paged else None
 
     def body(xc, xs):
         lp, ck, cv, xk, xv = xs
@@ -125,7 +127,7 @@ def verify(cfg, params, cache: Cache, tree_tokens, tree_depth, tree_mask,
             cfg, lp["attn"], cm.rmsnorm(xc, lp["ln1"], cfg.rmsnorm_eps),
             ck=ck, cv=cv, key_pos=kv.key_pos, pos=kv.pos,
             tree_depth=tree_depth, tree_mask=tree_mask, window=kv.window,
-            backend=backend)
+            backend=backend, block_table=table)
         xc = xc + a
         xc = xc + attn_cross(cfg, lp["cross"],
                              cm.rmsnorm(xc, lp["ln_c"], cfg.rmsnorm_eps), xk, xv)
@@ -133,9 +135,10 @@ def verify(cfg, params, cache: Cache, tree_tokens, tree_depth, tree_mask,
                             cm.rmsnorm(xc, lp["ln2"], cfg.rmsnorm_eps))
         return xc, (k1, v1)
 
+    kv_scan = (kv.pool_k, kv.pool_v) if paged else (kv.k, kv.v)
     x, (k_new, v_new) = cm.layer_scan(
         cfg, body, x,
-        (params["decoder"], kv.k, kv.v, cache.cross_k, cache.cross_v))
+        (params["decoder"],) + kv_scan + (cache.cross_k, cache.cross_v))
     return _logits(cfg, params, x), {"tree_kv": (k_new, v_new), "hidden": x}
 
 

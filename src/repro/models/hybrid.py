@@ -15,8 +15,8 @@ from repro.models import mamba2 as mb
 from repro.models import recurrent_verify as rv
 from repro.models.attention import attn_init, attn_prefill, attn_verify
 from repro.models.mlp import mlp_apply, mlp_init
-from repro.runtime.cache import (Cache, KVCache, MambaState, init_kv_cache,
-                                 kv_commit)
+from repro.runtime.cache import (Cache, KVCache, MambaState, PagedKVCache,
+                                 init_kv_cache, kv_commit)
 
 
 def n_sites(cfg):
@@ -59,12 +59,13 @@ def _site_pred(cfg, idx):
 
 
 def _shared_attn_tree(cfg, sp, x, ak, av, key_pos, pos, tree_depth, tree_mask,
-                      window, backend="ref"):
+                      window, backend="ref", block_table=None):
     """Shared attn + MLP on node-form hiddens.  Returns (x', (k_new, v_new))."""
     h = cm.rmsnorm(x, sp["ln1"], cfg.rmsnorm_eps)
     a, (k1, v1) = attn_verify(cfg, sp["attn"], h, ck=ak, cv=av,
                               key_pos=key_pos, pos=pos, tree_depth=tree_depth,
-                              tree_mask=tree_mask, window=window, backend=backend)
+                              tree_mask=tree_mask, window=window,
+                              backend=backend, block_table=block_table)
     x = x + a
     x = x + mlp_apply(cfg, sp["mlp"], cm.rmsnorm(x, sp["ln2"], cfg.rmsnorm_eps))
     return x, (k1, v1)
@@ -181,15 +182,18 @@ def verify(cfg, params, cache: Cache, tree_tokens, tree_depth, tree_mask,
         return cm.layer_scan(cfg, body, x, (seg, ssm_seg, conv_seg))
 
     ns, grouped, tail, tail_len = _group_params(cfg, params["layers"])
+    paged = isinstance(kv, PagedKVCache)
+    table = kv.block_table if paged else None
     seg_states, site_k, site_v = [], [], []
     for g in range(ns):
         lo, hi = g * every, (g + 1) * every
         x, dst = mamba_seg(x, _tslice(grouped, g),
                            ms.ssm[lo:hi], ms.conv[lo:hi])
         seg_states.append(dst)
+        ak, av = (kv.pool_k[g], kv.pool_v[g]) if paged else (kv.k[g], kv.v[g])
         x, (k1, v1) = _shared_attn_tree(
-            cfg, sp, x, kv.k[g], kv.v[g], kv.key_pos, kv.pos,
-            tree_depth, tree_mask, kv.window, backend)
+            cfg, sp, x, ak, av, kv.key_pos, kv.pos,
+            tree_depth, tree_mask, kv.window, backend, block_table=table)
         site_k.append(k1)
         site_v.append(v1)
     if tail_len:
@@ -231,7 +235,7 @@ def commit(cfg, cache: Cache, extras, accept_nodes, n_accept, path_idx,
     (path, depth) and scatter its accepted tree KVs into the shared-attn
     cache sites.  accept_nodes (B, Dmax); n_accept/path_idx (B,)."""
     kv, ms = cache.kv, cache.mamba
-    B = kv.k.shape[1]
+    B = kv.pos.shape[0]
     P = extras["P"]
 
     # recurrent states: (L, D, B*P, ...) -> (L, B, ...), per-sequence indices

@@ -18,8 +18,8 @@ import jax.numpy as jnp
 from repro.models import common as cm
 from repro.models.attention import attn_decode, attn_init, attn_prefill, attn_verify
 from repro.models.mlp import mlp_apply, mlp_init, moe_apply, moe_init
-from repro.runtime.cache import (Cache, KVCache, _ring_match, init_kv_cache,
-                                 kv_commit)
+from repro.runtime.cache import (Cache, KVCache, PagedKVCache, _ring_match,
+                                 init_kv_cache, kv_commit, paged_kv_write)
 
 
 def init_params(cfg, rng):
@@ -101,13 +101,16 @@ def prefill(cfg, params, tokens=None, embeds=None, *, cache=None, window=0,
     return logits, extras, Cache(kv=kv)
 
 
-def _bulk_write(kv: KVCache, ks, vs, start):
+def _bulk_write(kv, ks, vs, start):
     """Write (L,B,S,Hkv,hd) KVs at [start_b, start_b + S) per sequence.
 
     ``start`` is a scalar (prefill: uniform positions) or (B,) per-sequence
     positions (decode after speculative steps, where positions diverge).
-    Ring buffer keeps the tail when S exceeds the cache size.
+    Ring buffer keeps the tail when S exceeds the cache size.  Paged caches
+    route through the block table (cache.paged_kv_write).
     """
+    if isinstance(kv, PagedKVCache):
+        return paged_kv_write(kv, ks, vs, start)
     B, S = ks.shape[1], ks.shape[2]
     size = kv.max_len
     off = 0
@@ -157,6 +160,8 @@ def verify(cfg, params, cache: Cache, tree_tokens, tree_depth, tree_mask,
     """
     x = embed_tokens(cfg, params, tree_tokens)
     kv = cache.kv
+    paged = isinstance(kv, PagedKVCache)
+    table = kv.block_table if paged else None
 
     def body(xc, xs):
         lp, ck, cv = xs
@@ -164,13 +169,14 @@ def verify(cfg, params, cache: Cache, tree_tokens, tree_depth, tree_mask,
             cfg, lp["attn"], cm.rmsnorm(xc, lp["ln1"], cfg.rmsnorm_eps),
             ck=ck, cv=cv, key_pos=kv.key_pos, pos=kv.pos,
             tree_depth=tree_depth, tree_mask=tree_mask,
-            window=kv.window, backend=backend)
+            window=kv.window, backend=backend, block_table=table)
         xc = xc + a
         m, _ = _mix(cfg, lp, cm.rmsnorm(xc, lp["ln2"], cfg.rmsnorm_eps))
         return xc + m, (k1, v1)
 
+    kv_scan = (kv.pool_k, kv.pool_v) if paged else (kv.k, kv.v)
     x, (k_new, v_new) = cm.layer_scan(cfg, body, x,
-                                  (params["layers"], kv.k, kv.v))
+                                  (params["layers"],) + kv_scan)
     extras = {"tree_kv": (k_new, v_new), "hidden": x}
     return _logits(cfg, params, x), extras
 

@@ -1,18 +1,46 @@
-"""Decode-state caches: KV cache (full or sliding-window ring buffer),
-Mamba2 SSM state, xLSTM states, and encoder cross-attention memory.
+"""Decode-state caches: dense and paged KV caches, Mamba2 SSM state, xLSTM
+states, and encoder cross-attention memory.
 
-Conventions
------------
-- KV arrays are stacked over layers: ``(L, B, S, Hkv, hd)`` so model stacks can
-  ``lax.scan`` over the leading axis.
-- ``key_pos (B, S)`` holds the absolute position stored in each cache slot
-  (-1 = empty), **per sequence**.  With a sliding window the cache is a ring
-  buffer: slot(p) = p % S.  The attention mask is derived from ``key_pos``
-  (validity + causality + window), so ring wraparound needs no special-casing.
+Two KV layouts share one logical addressing convention:
+
+Dense (``KVCache``)
+-------------------
+- KV arrays are stacked over layers: ``(L, B, S, Hkv, hd)`` so model stacks
+  can ``lax.scan`` over the leading axis.  Every sequence owns a full
+  ``S = max_len`` row; with a sliding window the row is a ring buffer:
+  slot(p) = p % S.
+- Still the layout for sliding-window caches (the ring IS the window) and
+  the parity baseline for the paged path (``paged=False`` engines).
+
+Paged (``PagedKVCache``)
+------------------------
+- One shared pool of fixed-size pages ``(L, n_pages + 1, page_size, Hkv,
+  hd)``; **page ``n_pages`` is a trash page** — every masked, unreserved, or
+  overflowing write is redirected there, so a row can never scribble on a
+  page another row owns.
+- A per-sequence ``block_table (B, max_pages)`` maps *logical* page
+  ``s // page_size`` to a physical pool page (-1 = unreserved).  Logical
+  slot ``s = pos % (max_pages * page_size)`` — the same ring arithmetic as
+  the dense path, so masks/kernels are layout-agnostic.
+- Reservation is page-grained: admission allocates
+  ``ceil((prompt + budget + overshoot) / page_size)`` pages from a host-side
+  free list (``PageAllocator``), eviction frees them.  ``capacity_left`` =
+  reserved slots minus ``pos``; a row that outgrows its reservation freezes
+  (shortfall reported in ``n_emitted``) instead of corrupting a neighbor.
+- Diverged-length sequences therefore share one slot pool: a short request
+  reserves 2-3 pages while a long one reserves dozens, and resident batch at
+  fixed pool memory is bounded by actual context, not ``B * max_len``.
+
+Shared conventions
+------------------
+- ``key_pos (B, S_logical)`` holds the absolute position stored in each
+  logical slot (-1 = empty), **per sequence**.  The attention mask is
+  derived from ``key_pos`` (validity + causality + window), so ring
+  wraparound and unreserved paged slots need no special-casing.
 - ``pos (B,)`` is the number of tokens processed so far **per sequence**.
-  Batched speculative decoding accepts a different number of draft tokens per
-  sequence each step, so positions diverge across the batch; every write and
-  mask below is therefore vmapped over the batch axis.
+  Batched speculative decoding accepts a different number of draft tokens
+  per sequence each step, so positions diverge across the batch; every
+  write and mask below is per-sequence.
 - RoPE is applied to keys at *write* time with their absolute position.
 """
 from __future__ import annotations
@@ -38,6 +66,43 @@ class KVCache:
     @property
     def max_len(self) -> int:
         return self.k.shape[2]
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["pool_k", "pool_v", "block_table", "key_pos", "pos"],
+         meta_fields=["page_size", "window"])
+@dataclasses.dataclass
+class PagedKVCache:
+    """Block-table KV cache: one shared page pool + per-sequence tables.
+
+    ``pool_k/pool_v`` carry ``n_pages`` real pages plus one trailing *trash*
+    page; writes whose logical slot is masked or falls on an unreserved
+    table entry land in the trash page (see ``_pool_scatter``), never in a
+    page another sequence reserved.  ``window`` is kept for interface parity
+    with ``KVCache`` but must be 0 — sliding-window caches stay dense (the
+    ring IS the window).
+    """
+    pool_k: jax.Array       # (L, n_pages + 1, page_size, Hkv, hd)
+    pool_v: jax.Array       # (L, n_pages + 1, page_size, Hkv, hd)
+    block_table: jax.Array  # (B, max_pages) int32 physical page id; -1 free
+    key_pos: jax.Array      # (B, max_pages * page_size) int32; -1 empty
+    pos: jax.Array          # (B,) int32 tokens processed so far per sequence
+    page_size: int = 16     # static: slots per page
+    window: int = 0         # static: always 0 (full attention only)
+
+    @property
+    def max_len(self) -> int:
+        """Logical row length (ring size) — max_pages * page_size."""
+        return self.key_pos.shape[1]
+
+    @property
+    def n_pages(self) -> int:
+        """Real (reservable) pages — excludes the trash page."""
+        return self.pool_k.shape[1] - 1
+
+    @property
+    def max_pages(self) -> int:
+        return self.block_table.shape[1]
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -90,6 +155,197 @@ def init_kv_cache(n_layers, batch, max_len, n_kv, head_dim, *, window=0,
     )
 
 
+def init_paged_kv_cache(n_layers, batch, max_len, n_kv, head_dim, *,
+                        page_size, n_pages,
+                        dtype=jnp.bfloat16) -> PagedKVCache:
+    """Empty paged bank: zeroed pool (+1 trash page), all tables unreserved.
+
+    ``max_len`` is the *logical* per-row capacity (rounded up to whole
+    pages); the physical pool holds ``n_pages`` reservable pages shared by
+    all ``batch`` rows.
+    """
+    max_pages = pages_for(max_len, page_size)
+    return PagedKVCache(
+        pool_k=jnp.zeros((n_layers, n_pages + 1, page_size, n_kv, head_dim),
+                         dtype),
+        pool_v=jnp.zeros((n_layers, n_pages + 1, page_size, n_kv, head_dim),
+                         dtype),
+        block_table=jnp.full((batch, max_pages), -1, jnp.int32),
+        key_pos=jnp.full((batch, max_pages * page_size), -1, jnp.int32),
+        pos=jnp.zeros((batch,), jnp.int32),
+        page_size=page_size,
+    )
+
+
+def pages_for(n_tokens, page_size) -> int:
+    """Pages needed to hold ``n_tokens`` slots."""
+    return -(-int(n_tokens) // int(page_size))
+
+
+class PageAllocator:
+    """Host-side free list over the pool's reservable page ids.
+
+    Alloc/free happen only at admission/eviction boundaries (and once per
+    ``generate`` call), so this never syncs the device.  Pages are handed
+    out lowest-id-first so runs are deterministic and reuse after
+    fragmented frees is exercised by the unit tests.
+    """
+
+    def __init__(self, n_pages: int):
+        self.n_pages = int(n_pages)
+        self._free = list(range(self.n_pages))   # kept sorted
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list:
+        """Take exactly ``n`` pages; raises if the pool cannot supply them
+        (callers gate on ``available`` / ``alloc_upto`` for partial)."""
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: want {n}, have {len(self._free)}")
+        pages, self._free = self._free[:n], self._free[n:]
+        return pages
+
+    def alloc_upto(self, n: int) -> list:
+        """Take ``min(n, available)`` pages (partial reservations freeze at
+        ``capacity_left`` instead of failing)."""
+        return self.alloc(min(n, len(self._free)))
+
+    def free(self, pages) -> None:
+        for p in pages:
+            p = int(p)
+            if p < 0:
+                continue
+            if p >= self.n_pages or p in self._free:
+                raise RuntimeError(f"bad page free: {p}")
+            self._free.append(p)
+        self._free.sort()
+
+
+def _pool_scatter(pool_k, pool_v, tables, k_src, v_src, abs_pos, valid):
+    """Scatter per-sequence writes through block tables into the shared pool.
+
+    pool_k/pool_v: (L, P, ps, Hkv, hd) with P = n_pages + 1 (trash last);
+    tables: (B, max_pages); k_src/v_src: (L, B, W, Hkv, hd);
+    abs_pos/valid: (B, W) absolute positions and write mask.
+
+    Masked writes, and writes whose logical page is unreserved (table entry
+    -1 — e.g. a partially-reserved row that outgrew its pages), are
+    redirected to the trash page: a row can NEVER overwrite a page it does
+    not own.  Returns (pool_k, pool_v, ok (B, W)) where ``ok`` marks the
+    writes that landed in real pages (callers mark only those in key_pos).
+    """
+    L, P, ps, Hkv, hd = pool_k.shape
+    s_log = tables.shape[1] * ps
+    logical = abs_pos % s_log                                # (B, W)
+    page = jnp.take_along_axis(tables, logical // ps, axis=1)
+    ok = valid & (page >= 0)
+    phys = jnp.where(ok, page * ps + logical % ps, P * ps - 1)
+    flat = phys.reshape(-1)                                  # (B*W,)
+    pk = pool_k.reshape(L, P * ps, Hkv, hd)
+    pv = pool_v.reshape(L, P * ps, Hkv, hd)
+    pk = pk.at[:, flat].set(k_src.reshape(L, -1, Hkv, hd).astype(pk.dtype))
+    pv = pv.at[:, flat].set(v_src.reshape(L, -1, Hkv, hd).astype(pv.dtype))
+    return pk.reshape(pool_k.shape), pv.reshape(pool_v.shape), ok
+
+
+def _keypos_scatter(key_pos, abs_pos, ok):
+    """Mark ``abs_pos`` at its logical slot where ``ok``; rejected writes go
+    to a shed column past the row (key_pos: (B, S_logical))."""
+    B, s_log = key_pos.shape
+    col = jnp.where(ok, abs_pos % s_log, s_log)
+    kp = jnp.pad(key_pos, ((0, 0), (0, 1)), constant_values=-1)
+    kp = kp.at[jnp.arange(B)[:, None], col].set(
+        jnp.where(ok, abs_pos, -1))
+    return kp[:, :s_log]
+
+
+def paged_kv_write(kv: PagedKVCache, ks, vs, start) -> PagedKVCache:
+    """Write S_new entries per sequence at [start_b, start_b + S_new)
+    through the block table (the paged analog of ``_bulk_write``/
+    ``kv_write``).  ks/vs: (L, B, S_new, Hkv, hd).  A write run longer than
+    one logical ring keeps only the tail (matching the dense ring), so
+    scatter targets stay duplicate-free."""
+    B, s_new = ks.shape[1], ks.shape[2]
+    start = _per_batch(start, B)
+    s_log = kv.max_len
+    if s_new >= s_log:
+        ks, vs = ks[:, :, -s_log:], vs[:, :, -s_log:]
+        start = start + (s_new - s_log)
+        s_new = s_log
+    abs_pos = start[:, None] + jnp.arange(s_new, dtype=jnp.int32)[None, :]
+    valid = jnp.ones(abs_pos.shape, bool)
+    pool_k, pool_v, ok = _pool_scatter(kv.pool_k, kv.pool_v, kv.block_table,
+                                       ks, vs, abs_pos, valid)
+    return dataclasses.replace(
+        kv, pool_k=pool_k, pool_v=pool_v,
+        key_pos=_keypos_scatter(kv.key_pos, abs_pos, ok),
+        pos=start + s_new)
+
+
+def paged_kv_commit(kv: PagedKVCache, k_new, v_new, accept_nodes, n_accept,
+                    max_depth) -> PagedKVCache:
+    """Paged analog of ``kv_commit``: write each sequence's accepted tree
+    path through its block table.  Writes past ``n_accept[b]`` (and any
+    write a frozen row would make past its reservation) hit the trash page."""
+    idx = jnp.arange(max_depth, dtype=jnp.int32)
+    sel = jax.vmap(lambda kn, nd: jnp.take(kn, nd, axis=1),
+                   in_axes=(1, 0), out_axes=1)
+    sel_k = sel(k_new, accept_nodes)                 # (L, B, Dmax, Hkv, hd)
+    sel_v = sel(v_new, accept_nodes)
+    abs_pos = kv.pos[:, None] + idx[None, :]
+    valid = idx[None, :] < n_accept[:, None]
+    pool_k, pool_v, ok = _pool_scatter(kv.pool_k, kv.pool_v, kv.block_table,
+                                       sel_k, sel_v, abs_pos, valid)
+    return dataclasses.replace(
+        kv, pool_k=pool_k, pool_v=pool_v,
+        key_pos=_keypos_scatter(kv.key_pos, abs_pos, ok),
+        pos=kv.pos + n_accept.astype(jnp.int32))
+
+
+def gather_pages(pool_layer, block_table):
+    """Materialize one layer's logical (B, S_logical, Hkv, hd) view through
+    the block table (the ref-backend read path; the Pallas kernel instead
+    DMAs pages via scalar-prefetch).  Unreserved entries read the trash
+    page — their slots are key_pos == -1, so every mask rejects them."""
+    P, ps = pool_layer.shape[0], pool_layer.shape[1]
+    t = jnp.where(block_table < 0, P - 1, block_table)
+    ck = jnp.take(pool_layer, t, axis=0)      # (B, max_pages, ps, Hkv, hd)
+    B, maxp = block_table.shape
+    return ck.reshape((B, maxp * ps) + pool_layer.shape[2:])
+
+
+def paginate_cache(cache: "Cache", tables, *, page_size, n_pages) -> "Cache":
+    """Convert a freshly-prefilled DENSE cache into the paged layout.
+
+    ``tables (B, max_pages)`` comes from the host-side allocator.  Runs
+    inside the engines' fused prefill jit; the dense cache is a transient
+    (sized to the prompt, not max_len).  Entries older than one logical
+    ring (an over-long prompt on a small reservation) are dropped — the
+    row then freezes at its first capacity check, same as the dense path.
+    """
+    kv = cache.kv
+    if kv is None or isinstance(kv, PagedKVCache):
+        return cache
+    if kv.window:
+        raise ValueError("paged KV supports full attention only (window=0)")
+    L, B, S, Hkv, hd = kv.k.shape
+    s_log = tables.shape[1] * page_size
+    pool_k = jnp.zeros((L, n_pages + 1, page_size, Hkv, hd), kv.k.dtype)
+    pool_v = jnp.zeros_like(pool_k)
+    abs_pos = kv.key_pos                                     # (B, S)
+    valid = (abs_pos >= 0) & (abs_pos >= kv.pos[:, None] - s_log)
+    pool_k, pool_v, ok = _pool_scatter(pool_k, pool_v, tables,
+                                       kv.k, kv.v, abs_pos, valid)
+    key_pos = _keypos_scatter(jnp.full((B, s_log), -1, jnp.int32),
+                              abs_pos, ok)
+    return dataclasses.replace(cache, kv=PagedKVCache(
+        pool_k=pool_k, pool_v=pool_v, block_table=tables,
+        key_pos=key_pos, pos=kv.pos, page_size=page_size))
+
+
 def _per_batch(start_pos, batch):
     """Broadcast a scalar start position to (B,) int32."""
     return jnp.broadcast_to(jnp.asarray(start_pos, jnp.int32), (batch,))
@@ -139,9 +395,10 @@ def kv_write(cache_k, cache_v, key_pos, k_new, v_new, start_pos):
     return jax.vmap(one)(cache_k, cache_v, key_pos, k_new, v_new, start)
 
 
-def kv_commit(kv: KVCache, k_new, v_new, accept_nodes, n_accept,
-              max_depth) -> KVCache:
-    """Write each sequence's accepted tree path into its ring buffer.
+def kv_commit(kv, k_new, v_new, accept_nodes, n_accept,
+              max_depth):
+    """Write each sequence's accepted tree path into its ring buffer (dense)
+    or through its block table (paged).
 
     k_new/v_new: (L, B, W, Hkv, hd) uncommitted tree KVs;
     accept_nodes: (B, Dmax) node ids of the accepted chain (padded);
@@ -149,6 +406,9 @@ def kv_commit(kv: KVCache, k_new, v_new, accept_nodes, n_accept,
     Writes are masked per sequence: slots beyond n_accept[b] keep their
     previous contents, and ``pos`` advances by n_accept[b].
     """
+    if isinstance(kv, PagedKVCache):
+        return paged_kv_commit(kv, k_new, v_new, accept_nodes, n_accept,
+                               max_depth)
     size = kv.max_len
     idx = jnp.arange(max_depth, dtype=jnp.int32)
 
@@ -211,10 +471,32 @@ def _row_map(fn, *caches: "Cache") -> "Cache":
     return Cache(kv=kv, mamba=mamba, xlstm=xl, cross_k=ck, cross_v=cv)
 
 
+def _without_kv(cache: Cache) -> Cache:
+    return dataclasses.replace(cache, kv=None)
+
+
 def tile_rows(cache: Cache, batch: int) -> Cache:
     """Broadcast a batch-1 cache to ``batch`` identical rows (used once to
     bootstrap the scheduler's resident state from the first admission)."""
     return _row_map(lambda axis, a: jnp.repeat(a, batch, axis=axis), cache)
+
+
+def blank_paged_rows(row: Cache, batch: int, *, page_size, n_pages,
+                     max_len) -> Cache:
+    """Paged bootstrap of the scheduler's resident bank from the first B=1
+    dense-prefilled admission: non-KV leaves are tiled (masked rows never
+    read them), the KV field becomes an EMPTY shared pool — blank rows hold
+    no reservation, so unlike the dense ``tile_rows`` bootstrap no slot
+    memory is spent on rows that are still free."""
+    dkv = row.kv
+    if dkv is None:                       # recurrent-only family (xLSTM)
+        return tile_rows(row, batch)
+    out = _row_map(lambda axis, a: jnp.repeat(a, batch, axis=axis),
+                   _without_kv(row))
+    L, _, _, Hkv, hd = dkv.k.shape
+    return dataclasses.replace(out, kv=init_paged_kv_cache(
+        L, batch, max_len, Hkv, hd, page_size=page_size, n_pages=n_pages,
+        dtype=dkv.k.dtype))
 
 
 def reset_rows(cache: Cache, rows) -> Cache:
@@ -223,13 +505,28 @@ def reset_rows(cache: Cache, rows) -> Cache:
     zeroed.  A freed row is inert until ``insert_rows`` installs a freshly
     prefilled sequence — reset guarantees no stale KV survives eviction, it
     does not produce a decodable initial state (e.g. xLSTM stabilizer
-    offsets are re-established by the admission prefill)."""
+    offsets are re-established by the admission prefill).
+
+    Paged KV: the row's ``block_table`` entries drop to -1 (its pool pages
+    go back to the allocator host-side; their contents are unreachable once
+    no table references them) and any write the dead row still issues from
+    inside a chunk redirects to the trash page."""
     rows = jnp.asarray(rows, bool)
 
     def f(axis, a):
         shape = [1] * a.ndim
         shape[axis] = rows.shape[0]
         return jnp.where(rows.reshape(shape), jnp.zeros_like(a), a)
+
+    if isinstance(cache.kv, PagedKVCache):
+        kv = cache.kv
+        out = _row_map(f, _without_kv(cache))
+        return dataclasses.replace(out, kv=dataclasses.replace(
+            kv,
+            block_table=jnp.where(rows[:, None], jnp.int32(-1),
+                                  kv.block_table),
+            key_pos=jnp.where(rows[:, None], jnp.int32(-1), kv.key_pos),
+            pos=jnp.where(rows, jnp.int32(0), kv.pos)))
 
     out = _row_map(f, cache)
     if out.kv is not None:
@@ -238,10 +535,15 @@ def reset_rows(cache: Cache, rows) -> Cache:
     return out
 
 
-def insert_rows(cache: Cache, row, src: Cache) -> Cache:
+def insert_rows(cache: Cache, row, src: Cache, *, pages=None) -> Cache:
     """Copy row 0 of a batch-1 cache ``src`` into row ``row`` of ``cache``
     (admission: the new request's B=1 prefilled state takes over the slot).
-    ``row`` may be a traced scalar, so one jitted insert serves every slot."""
+    ``row`` may be a traced scalar, so one jitted insert serves every slot.
+
+    When ``cache`` is paged, ``src`` is still DENSE (admission prefills at
+    B=1 in the dense layout) and ``pages (max_pages,)`` — the row's fresh
+    reservation, -1-padded — must be supplied; the prompt KV is scattered
+    through it into the shared pool."""
     row = jnp.asarray(row, jnp.int32)
 
     def f(axis, big, small):
@@ -249,7 +551,32 @@ def insert_rows(cache: Cache, row, src: Cache) -> Cache:
         return jax.lax.dynamic_update_index_in_dim(
             big, upd.astype(big.dtype), row, axis)
 
+    if isinstance(cache.kv, PagedKVCache):
+        if pages is None:
+            raise ValueError("paged insert_rows needs the row's pages")
+        out = _row_map(f, _without_kv(cache), _without_kv(src))
+        return dataclasses.replace(
+            out, kv=_paged_insert_row(cache.kv, row, src.kv, pages))
     return _row_map(f, cache, src)
+
+
+def _paged_insert_row(kv: PagedKVCache, row, dkv: KVCache, pages
+                      ) -> PagedKVCache:
+    """Scatter a dense B=1 prefill into ``row``'s fresh page reservation."""
+    pages = jnp.asarray(pages, jnp.int32)
+    s_log = kv.max_len
+    abs_pos = dkv.key_pos[0]                              # (S_dense,)
+    valid = (abs_pos >= 0) & (abs_pos >= dkv.pos[0] - s_log)
+    pool_k, pool_v, ok = _pool_scatter(
+        kv.pool_k, kv.pool_v, pages[None, :], dkv.k, dkv.v,
+        abs_pos[None, :], valid[None, :])
+    kp_row = _keypos_scatter(jnp.full((1, s_log), -1, jnp.int32),
+                             abs_pos[None, :], ok)[0]
+    return dataclasses.replace(
+        kv, pool_k=pool_k, pool_v=pool_v,
+        block_table=kv.block_table.at[row].set(pages),
+        key_pos=kv.key_pos.at[row].set(kp_row),
+        pos=kv.pos.at[row].set(dkv.pos[0]))
 
 
 _UNBOUNDED = 1 << 30
@@ -262,9 +589,17 @@ def capacity_left(cache: Cache) -> jax.Array:
     Sliding-window caches wrap by design and recurrent state is O(1) in
     context, so those report an effectively unbounded budget.  The chunk
     drivers fold this into the scan done-mask: a sequence freezes (stops
-    emitting/committing) instead of corrupting its own attention."""
+    emitting/committing) instead of corrupting its own attention.
+
+    Paged caches count slots inside the row's page RESERVATION — a
+    partially-reserved row (pool was short at admission) freezes when its
+    last reserved page fills, exactly like a dense row hitting ``max_len``;
+    the trash-page redirect below it is defense in depth, not the contract."""
     pos = cache.pos
     kv = cache.kv
+    if isinstance(kv, PagedKVCache):
+        n_alloc = jnp.sum(kv.block_table >= 0, axis=1).astype(jnp.int32)
+        return n_alloc * jnp.int32(kv.page_size) - kv.pos
     if kv is None or kv.window:
         return jnp.full(pos.shape, _UNBOUNDED, jnp.int32)
     return jnp.int32(kv.max_len) - kv.pos

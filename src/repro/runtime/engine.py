@@ -32,6 +32,24 @@ Admission/eviction only ever happen between chunks, so the jitted K-step
 scan is reused unchanged; inside a chunk a freed row simply rides along
 fully masked.
 
+Paged KV (``paged=True``): the bank's KV lives in one shared page pool
+(runtime/cache.py ``PagedKVCache``) instead of B dense ``max_len`` rows.
+Admission reserves ``ceil((prompt + budget + overshoot) / page_size)``
+pages from a host-side free list, eviction returns them
+(``sched_release``), and ``sched_can_admit`` lets the scheduler DEFER a
+request while the pool is exhausted instead of failing it.  A row that
+somehow outgrows its reservation (e.g. ``generate`` on a pool smaller than
+the batch's total need — reservations are then partial) freezes exactly
+like a dense row hitting ``max_len``, with the shortfall in
+``stats["n_emitted"]``; its overflow writes land in the pool's trash page,
+never in a neighbor's reservation.  Recurrent/cross state keeps the dense
+per-row layout — only KV pages.
+
+All state-threading jits (the K-step chunk scans, ``sched_admit``,
+``sched_insert``, ``sched_reset``) DONATE the carried state, so the cache
+— one large pool when paged — is updated in place instead of copied every
+chunk.
+
 ``SpeculativeEngine`` accepts any batch size: each sequence accepts its own
 chain length per step and the cache commit is a per-sequence masked ring
 write (see runtime/cache.py), so positions diverge freely across the batch.
@@ -46,9 +64,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.speculative.tree import Tree, TreeSpec
-from repro.core.speculative.verify import spec_prefill, spec_step
-from repro.runtime.cache import (capacity_left, insert_rows, reset_rows,
-                                 tile_rows)
+from repro.core.speculative.verify import SpecState, spec_prefill, spec_step
+from repro.runtime.cache import (PageAllocator, blank_paged_rows,
+                                 capacity_left, insert_rows, pages_for,
+                                 paginate_cache, reset_rows, tile_rows)
 from repro.runtime.sampling import greedy
 
 _NO_EOS = -1          # sentinel: no real token id is negative
@@ -76,29 +95,146 @@ def _pow2_chunk(k_max: int, need: int) -> int:
     return min(k, k_max)
 
 
-class BatchEngine:
+def _prompt_len(batch) -> int:
+    """Decoder-sequence length of a prefill batch: tokens plus any VLM
+    patch embeds that join the decoder sequence (encoder frames do not)."""
+    n = int(batch["tokens"].shape[1])
+    if "patch_embeds" in batch:
+        n += int(batch["patch_embeds"].shape[1])
+    return n
+
+
+class _PagedPoolMixin:
+    """Shared page-reservation bookkeeping for paged engines.
+
+    The allocator is HOST state: pages move between the free list and rows
+    only at admission/eviction boundaries (and once per ``generate``), so
+    reservation never syncs the device.  ``_overshoot`` is the engine's
+    worst-case slots written past the budget (speculative: one full
+    accepted chain of ``max_depth``)."""
+
+    def _paged_init(self, *, paged, page_size, pool_pages):
+        if paged and self.window:
+            raise ValueError("paged KV supports full attention only "
+                             "(sliding windows stay dense: the ring IS the "
+                             "window)")
+        self.paged, self.page_size = paged, page_size
+        self.pool_pages = pool_pages
+        self.max_pages = pages_for(self.max_len, page_size) if paged else 0
+        self._alloc: Optional[PageAllocator] = None      # sched-bank state
+        self._row_pages = {}
+
+    def _need_pages(self, prompt_len: int, budget: int, n_total: int) -> int:
+        return min(pages_for(prompt_len + budget + self._overshoot,
+                             self.page_size),
+                   self.max_pages, n_total)
+
+    def _reserve_tables(self, batch, budget):
+        """Per-row page reservations for a ``generate`` call.  When the
+        pool cannot cover a row's need the reservation is PARTIAL — the row
+        then freezes at ``capacity_left`` with its shortfall reported in
+        ``n_emitted``, it never borrows a neighbor's pages."""
+        B = int(batch["tokens"].shape[0])
+        n_total = self.pool_pages or B * self.max_pages
+        alloc = PageAllocator(n_total)
+        prompt = _prompt_len(batch)
+        tables = np.full((B, self.max_pages), -1, np.int32)
+        for b in range(B):
+            pages = alloc.alloc_upto(
+                self._need_pages(prompt, int(budget[b]), n_total))
+            tables[b, :len(pages)] = pages
+        return jnp.asarray(tables), n_total
+
+    # ---- scheduler-facing reservation hooks ------------------------------
+    def sched_can_admit(self, prompt_len: int, n_tokens: int) -> bool:
+        """False while the pool cannot fund the request's reservation — the
+        scheduler then DEFERS admission until evictions free pages.  A
+        request bigger than the whole pool caps at the pool (admitted once
+        fully free; it freezes with a shortfall, it is not rejected)."""
+        if not self.paged or self._alloc is None:
+            return True
+        return self._alloc.available >= self._need_pages(
+            prompt_len, n_tokens, self._alloc.n_pages)
+
+    def sched_release(self, b: int) -> None:
+        """Return an evicted row's pages to the pool (host-side; the row's
+        device-side table is cleared by the boundary's reset/insert before
+        the next chunk runs)."""
+        if self.paged and self._alloc is not None:
+            self._alloc.free(self._row_pages.pop(b, ()))
+
+    def _sched_pages(self, b: int, prompt_len: int, n_tokens: int):
+        """Allocate row ``b``'s reservation (gated by ``sched_can_admit``),
+        -1-padded to the static ``max_pages`` table width."""
+        pages = self._alloc.alloc(self._need_pages(prompt_len, n_tokens,
+                                                   self._alloc.n_pages))
+        self._row_pages[b] = pages
+        out = np.full((self.max_pages,), -1, np.int32)
+        out[:len(pages)] = pages
+        return jnp.asarray(out)
+
+
+class BatchEngine(_PagedPoolMixin):
     """Uniform-length batched prefill + chunked decode (Sequential baseline).
 
     ``chunk`` = K decode steps fused into one device call via ``lax.scan``;
     K=1 degenerates to the per-step host-synced loop (the old behaviour).
+
+    ``paged=True`` swaps the bank's dense per-row KV for the shared page
+    pool (``pool_pages`` total; default ``B * ceil(max_len / page_size)``,
+    the dense-equivalent capacity — shrink it to serve a larger bank at
+    fixed memory).
     """
 
+    _overshoot = 1        # decode writes 1 slot past the last emitted token
+
     def __init__(self, model, params, *, max_len=512, window=0,
-                 backend="ref", chunk=8):
+                 backend="ref", chunk=8, paged=False, page_size=16,
+                 pool_pages=None):
         self.model, self.params = model, params
         self.max_len, self.window = max_len, window
         self.backend, self.chunk = backend, chunk
+        self._paged_init(paged=paged, page_size=page_size,
+                         pool_pages=pool_pages)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len=max_len, window=window))
         self._chunks = {}           # K -> jitted K-step scan
-        self._insert = jax.jit(_insert_seq_row)
-        self._reset = jax.jit(_reset_seq_rows)
+        # state-threading jits donate their carried state: the cache (one
+        # large pool when paged) is aliased in place, never copied
+        self._insert = jax.jit(_insert_seq_row, donate_argnums=(0,))
+        self._reset = jax.jit(_reset_seq_rows, donate_argnums=(0,))
         # fused admission: B=1 prefill + row splice in ONE device call (a
         # per-request dispatch on the scheduler's hot path)
         self._admit = jax.jit(
             lambda p, st, b, bt: _admit_seq_row(model, p, st, b, bt,
                                                 max_len=max_len,
-                                                window=window))
+                                                window=window),
+            donate_argnums=(1,))
+        if paged:
+            # prompt-sized dense prefill: paginated right after (generate)
+            # or spliced into the paged bank (admission) — never a full
+            # (B, max_len) dense transient
+            self._prefill_prompt = jax.jit(
+                lambda p, b: model.prefill(p, b, max_len=1, window=0))
+            self._prefills_paged = {}    # n_pages -> fused prefill+paginate
+            self._admit_paged = jax.jit(
+                lambda p, st, b, bt, pages: _admit_seq_row_paged(
+                    model, p, st, b, bt, pages),
+                donate_argnums=(1,))
+            self._insert_paged = jax.jit(_insert_seq_row_paged,
+                                         donate_argnums=(0,))
+
+    def _prefill_paged_fn(self, n_total: int):
+        if n_total not in self._prefills_paged:
+            model, ps = self.model, self.page_size
+
+            def run(p, b, tables):
+                logits, _, cache = model.prefill(p, b, max_len=1, window=0)
+                return logits, paginate_cache(cache, tables, page_size=ps,
+                                              n_pages=n_total)
+
+            self._prefills_paged[n_total] = jax.jit(run)
+        return self._prefills_paged[n_total]
 
     def _chunk_fn(self, K: int):
         if K not in self._chunks:
@@ -121,7 +257,10 @@ class BatchEngine:
                     body, (cache, cur, done, rem), None, length=K)
                 return cache, cur, done, rem, toks, emit  # toks/emit: (K, B)
 
-            self._chunks[K] = jax.jit(run)
+            # donate the scan carry (cache/cur/done/rem): the cache — ONE
+            # pool-sized buffer in paged mode — is updated in place every
+            # chunk instead of being copied (ROADMAP donation item)
+            self._chunks[K] = jax.jit(run, donate_argnums=(1, 2, 3, 4))
         return self._chunks[K]
 
     def generate(self, batch, n_tokens, *, eos: Optional[int] = None,
@@ -132,10 +271,15 @@ class BatchEngine:
         per-sequence counts are in ``stats["n_emitted"]``."""
         K = chunk or self.chunk
         eos_val = _eos_scalar(eos)
-        logits, _, cache = self._prefill(self.params, batch)
-        cur = greedy(logits[:, -1])
-        B = int(cur.shape[0])
+        B = int(batch["tokens"].shape[0])
         budget = _budget(n_tokens, B)
+        if self.paged:
+            tables, n_total = self._reserve_tables(batch, budget)
+            logits, cache = self._prefill_paged_fn(n_total)(
+                self.params, batch, tables)
+        else:
+            logits, _, cache = self._prefill(self.params, batch)
+        cur = greedy(logits[:, -1])
         n_max = int(budget.max())
         done = cur == eos_val
         rem = jnp.asarray(budget - 1)
@@ -169,25 +313,44 @@ class BatchEngine:
 
     # ---- continuous-batching slot protocol (runtime/scheduler.py) --------
     def sched_prefill(self, batch):
-        """B=1 prefill -> opaque row state (cache, cur)."""
-        logits, _, cache = self._prefill(self.params, batch)
+        """B=1 prefill -> opaque row state (cache, cur).  Paged engines
+        prefill at prompt size (the dense row is a splice source, not a
+        resident)."""
+        if self.paged:
+            logits, _, cache = self._prefill_prompt(self.params, batch)
+        else:
+            logits, _, cache = self._prefill(self.params, batch)
         return (cache, greedy(logits[:, -1]))
 
     @staticmethod
     def sched_first(row):
         return int(np.asarray(row[1])[0])
 
-    @staticmethod
-    def sched_blank(row, batch):
+    def sched_blank(self, row, batch):
         cache, cur = row
+        if self.paged:
+            n_total = self.pool_pages or batch * self.max_pages
+            self._alloc = PageAllocator(n_total)
+            self._row_pages = {}
+            bank = blank_paged_rows(cache, batch, page_size=self.page_size,
+                                    n_pages=n_total, max_len=self.max_len)
+            return (bank, jnp.repeat(cur, batch, axis=0))
         return (tile_rows(cache, batch), jnp.repeat(cur, batch, axis=0))
 
-    def sched_insert(self, state, b, row):
+    def sched_insert(self, state, b, row, *, prompt_len=None, n_tokens=None):
+        if self.paged:
+            pages = self._sched_pages(b, prompt_len, n_tokens)
+            return self._insert_paged(state, jnp.asarray(b, jnp.int32), row,
+                                      pages)
         return self._insert(state, jnp.asarray(b, jnp.int32), row)
 
-    def sched_admit(self, state, b, batch):
+    def sched_admit(self, state, b, batch, *, n_tokens=None):
         """Fused prefill+insert; returns (state, first-token device scalar —
         unsynced, the caller materializes it lazily)."""
+        if self.paged:
+            pages = self._sched_pages(b, _prompt_len(batch), n_tokens)
+            return self._admit_paged(self.params, state,
+                                     jnp.asarray(b, jnp.int32), batch, pages)
         return self._admit(self.params, state, jnp.asarray(b, jnp.int32),
                            batch)
 
@@ -216,6 +379,13 @@ def _insert_seq_row(state, b, row):
     return (insert_rows(cache, b, rcache), cur.at[b].set(rcur[0]))
 
 
+def _insert_seq_row_paged(state, b, row, pages):
+    cache, cur = state
+    rcache, rcur = row
+    return (insert_rows(cache, b, rcache, pages=pages),
+            cur.at[b].set(rcur[0]))
+
+
 def _admit_seq_row(model, params, state, b, batch, *, max_len, window):
     logits, _, cache = model.prefill(params, batch, max_len=max_len,
                                      window=window)
@@ -223,28 +393,57 @@ def _admit_seq_row(model, params, state, b, batch, *, max_len, window):
     return _insert_seq_row(state, b, (cache, cur)), cur[0]
 
 
+def _admit_seq_row_paged(model, params, state, b, batch, pages):
+    logits, _, cache = model.prefill(params, batch, max_len=1, window=0)
+    cur = greedy(logits[:, -1])
+    return _insert_seq_row_paged(state, b, (cache, cur), pages), cur[0]
+
+
 def _reset_seq_rows(state, mask):
     cache, cur = state
-    return (reset_rows(cache, mask), cur)
+    # a freed slot must be fully inert, carry included: ``cur`` seeds the
+    # next chunk's decode input, so a stale token would feed the dead
+    # request's suffix back through the (masked) row until re-admission
+    return (reset_rows(cache, mask),
+            jnp.where(mask, jnp.zeros_like(cur), cur))
 
 
 def _reset_spec_rows(state, mask):
+    # cache reset alone is NOT enough: a freed speculative slot used to
+    # keep its stale ``cur_token``/``hidden``, so the evicted request's
+    # last state kept driving (masked) drafts — and once freed pages are
+    # recycled immediately, a stale carry is one masking bug away from
+    # leaking into a neighbor.  Clear the whole row.
+    mask = jnp.asarray(mask)
     return type(state)(cache=reset_rows(state.cache, mask),
-                       cur_token=state.cur_token, hidden=state.hidden)
+                       cur_token=jnp.where(mask,
+                                           jnp.zeros_like(state.cur_token),
+                                           state.cur_token),
+                       hidden=jnp.where(mask[:, None],
+                                        jnp.zeros_like(state.hidden),
+                                        state.hidden))
 
 
-class SpeculativeEngine:
+class SpeculativeEngine(_PagedPoolMixin):
     """Ghidorah speculative serving: draft -> tree-verify -> accept, batched
     over sequences and chunked over steps (K speculative steps per device
-    call, one host transfer per chunk)."""
+    call, one host transfer per chunk).
+
+    ``paged=True`` as in ``BatchEngine``; the per-row reservation carries a
+    ``max_depth`` overshoot because one speculative step can commit a full
+    accepted chain past the budget.
+    """
 
     def __init__(self, model, heads, params, tree_spec: TreeSpec, *,
-                 max_len=512, window=0, backend="ref", chunk=8):
+                 max_len=512, window=0, backend="ref", chunk=8, paged=False,
+                 page_size=16, pool_pages=None):
         self.model, self.heads, self.params = model, heads, params
         self.tree = Tree.from_spec(tree_spec)
         self.max_depth = tree_spec.max_depth
         self.max_len, self.window = max_len, window
         self.backend, self.chunk = backend, chunk
+        self._paged_init(paged=paged, page_size=page_size,
+                         pool_pages=pool_pages)
         # the tree is a jit ARGUMENT of the chunk fns (registered pytree):
         # same-shape trees share one compiled scan — ARCA sweeps many
         # same-width candidates
@@ -252,12 +451,43 @@ class SpeculativeEngine:
             lambda p, h, b: spec_prefill(model, p, h, b,
                                          max_len=max_len, window=window))
         self._chunks = {}           # K -> jitted K-step scan
-        self._insert = jax.jit(_insert_spec_row)
-        self._reset = jax.jit(_reset_spec_rows)
+        self._insert = jax.jit(_insert_spec_row, donate_argnums=(0,))
+        self._reset = jax.jit(_reset_spec_rows, donate_argnums=(0,))
         self._admit = jax.jit(
             lambda p, h, st, b, bt: _admit_spec_row(model, p, h, st, b, bt,
                                                     max_len=max_len,
-                                                    window=window))
+                                                    window=window),
+            donate_argnums=(2,))
+        if paged:
+            self._prefill_prompt = jax.jit(
+                lambda p, h, b: spec_prefill(model, p, h, b, max_len=1,
+                                             window=0))
+            self._prefills_paged = {}    # n_pages -> fused prefill+paginate
+            self._admit_paged = jax.jit(
+                lambda p, h, st, b, bt, pages: _admit_spec_row_paged(
+                    model, p, h, st, b, bt, pages),
+                donate_argnums=(2,))
+            self._insert_paged = jax.jit(_insert_spec_row_paged,
+                                         donate_argnums=(0,))
+
+    @property
+    def _overshoot(self):
+        # worst case slots written past the budget: one full accepted chain
+        return self.max_depth
+
+    def _prefill_paged_fn(self, n_total: int):
+        if n_total not in self._prefills_paged:
+            model, ps = self.model, self.page_size
+
+            def run(p, h, b, tables):
+                st = spec_prefill(model, p, h, b, max_len=1, window=0)
+                return SpecState(
+                    cache=paginate_cache(st.cache, tables, page_size=ps,
+                                         n_pages=n_total),
+                    cur_token=st.cur_token, hidden=st.hidden)
+
+            self._prefills_paged[n_total] = jax.jit(run)
+        return self._prefills_paged[n_total]
 
     def set_tree(self, tree_spec: TreeSpec) -> None:
         """Swap the verification tree WITHOUT dropping compiled steps (used
@@ -299,7 +529,9 @@ class SpeculativeEngine:
                 # toks: (K, B, Dmax) eos-padded; ns: (K, B) accepted counts
                 return state, done, rem, toks, ns
 
-            self._chunks[K] = jax.jit(run)
+            # donate the scan carry (state incl. the KV pool, done, rem):
+            # in-place chunk updates, no per-chunk cache copy
+            self._chunks[K] = jax.jit(run, donate_argnums=(3, 4, 5))
         return self._chunks[K]
 
     def generate(self, batch, n_tokens, *, eos: Optional[int] = None,
@@ -310,9 +542,14 @@ class SpeculativeEngine:
         ``stats["n_emitted"]`` has the real per-sequence counts."""
         K = chunk or self.chunk
         eos_val = _eos_scalar(eos)
-        state = self._prefill(self.params, self.heads, batch)
-        B = int(state.cur_token.shape[0])
+        B = int(batch["tokens"].shape[0])
         budget = _budget(n_tokens, B)
+        if self.paged:
+            tables, n_total = self._reserve_tables(batch, budget)
+            state = self._prefill_paged_fn(n_total)(
+                self.params, self.heads, batch, tables)
+        else:
+            state = self._prefill(self.params, self.heads, batch)
         n_max = int(budget.max())
         first = np.asarray(state.cur_token)
         outs = [[int(first[b])] for b in range(B)]
@@ -359,25 +596,44 @@ class SpeculativeEngine:
 
     # ---- continuous-batching slot protocol (runtime/scheduler.py) --------
     def sched_prefill(self, batch):
-        """B=1 prefill -> opaque row state (a SpecState)."""
+        """B=1 prefill -> opaque row state (a SpecState).  Paged engines
+        prefill at prompt size (the dense row is a splice source)."""
+        if self.paged:
+            return self._prefill_prompt(self.params, self.heads, batch)
         return self._prefill(self.params, self.heads, batch)
 
     @staticmethod
     def sched_first(row):
         return int(np.asarray(row.cur_token)[0])
 
-    @staticmethod
-    def sched_blank(row, batch):
-        return type(row)(cache=tile_rows(row.cache, batch),
+    def sched_blank(self, row, batch):
+        if self.paged:
+            n_total = self.pool_pages or batch * self.max_pages
+            self._alloc = PageAllocator(n_total)
+            self._row_pages = {}
+            bank = blank_paged_rows(row.cache, batch,
+                                    page_size=self.page_size,
+                                    n_pages=n_total, max_len=self.max_len)
+        else:
+            bank = tile_rows(row.cache, batch)
+        return type(row)(cache=bank,
                          cur_token=jnp.repeat(row.cur_token, batch, axis=0),
                          hidden=jnp.repeat(row.hidden, batch, axis=0))
 
-    def sched_insert(self, state, b, row):
+    def sched_insert(self, state, b, row, *, prompt_len=None, n_tokens=None):
+        if self.paged:
+            pages = self._sched_pages(b, prompt_len, n_tokens)
+            return self._insert_paged(state, jnp.asarray(b, jnp.int32), row,
+                                      pages)
         return self._insert(state, jnp.asarray(b, jnp.int32), row)
 
-    def sched_admit(self, state, b, batch):
+    def sched_admit(self, state, b, batch, *, n_tokens=None):
         """Fused prefill+insert; returns (state, first-token device scalar —
         unsynced, the caller materializes it lazily)."""
+        if self.paged:
+            pages = self._sched_pages(b, _prompt_len(batch), n_tokens)
+            return self._admit_paged(self.params, self.heads, state,
+                                     jnp.asarray(b, jnp.int32), batch, pages)
         return self._admit(self.params, self.heads, state,
                            jnp.asarray(b, jnp.int32), batch)
 
@@ -410,11 +666,23 @@ def _insert_spec_row(state, b, row):
                        hidden=state.hidden.at[b].set(row.hidden[0]))
 
 
+def _insert_spec_row_paged(state, b, row, pages):
+    return type(state)(cache=insert_rows(state.cache, b, row.cache,
+                                         pages=pages),
+                       cur_token=state.cur_token.at[b].set(row.cur_token[0]),
+                       hidden=state.hidden.at[b].set(row.hidden[0]))
+
+
 def _admit_spec_row(model, params, heads, state, b, batch, *, max_len,
                     window):
     row = spec_prefill(model, params, heads, batch, max_len=max_len,
                        window=window)
     return _insert_spec_row(state, b, row), row.cur_token[0]
+
+
+def _admit_spec_row_paged(model, params, heads, state, b, batch, pages):
+    row = spec_prefill(model, params, heads, batch, max_len=1, window=0)
+    return _insert_spec_row_paged(state, b, row, pages), row.cur_token[0]
 
 
 def _stats(accepts, times):

@@ -38,6 +38,14 @@ Capacity semantics: a request whose prompt+budget exceed the engine's
 boundary (see runtime/engine.py) and it returns fewer tokens, reported via
 ``RequestResult.n_emitted``.
 
+Paged engines add a reservation step: admission asks ``sched_can_admit``
+whether the page pool can fund ``ceil((prompt + budget + overshoot) /
+page_size)`` pages and DEFERS the request (FIFO head-of-line) while it
+cannot; eviction returns the row's pages via ``sched_release`` before the
+device-side reset, so a freed reservation funds the same boundary's
+admissions.  Pool exhaustion therefore shows up as queueing delay, never
+as a failed or corrupted request.
+
 Arrivals are wall-clock: a request is admissible once ``arrival`` seconds
 (relative to ``serve()`` entry) have elapsed, which is how ``serve.py
 --arrivals poisson`` and ``benchmarks/sched_bench.py`` replay traces.
@@ -105,7 +113,8 @@ class ContinuousScheduler:
 
     Works with any engine implementing the slot protocol
     (``sched_prefill`` / ``sched_blank`` / ``sched_insert`` /
-    ``sched_reset`` / ``sched_step`` / ``sched_emitted`` — both
+    ``sched_reset`` / ``sched_step`` / ``sched_emitted`` plus the paged
+    reservation hooks ``sched_can_admit`` / ``sched_release`` — both
     ``BatchEngine`` and ``SpeculativeEngine`` do).
     """
 
@@ -146,16 +155,29 @@ class ContinuousScheduler:
                     continue
                 if queue[0].arrival > now():
                     break
+                if state is not None and not eng.sched_can_admit(
+                        len(queue[0].tokens), queue[0].n_tokens):
+                    # page pool exhausted: DEFER (FIFO head-of-line) until
+                    # evictions return pages; an empty bank always admits
+                    # (a request larger than the whole pool gets the whole
+                    # pool and freezes with a shortfall, it is never lost).
+                    # The bootstrap admission is NOT gated: sched_blank
+                    # rebuilds the allocator, so a depleted allocator left
+                    # by an aborted earlier run cannot wedge a fresh serve
+                    break
                 req = queue.popleft()
                 prompt = np.asarray(req.tokens, np.int32)[None]
                 if state is None:         # bootstrap the bank once
                     row = eng.sched_prefill({"tokens": prompt})
                     state = eng.sched_blank(row, B)
-                    state = eng.sched_insert(state, b, row)
+                    state = eng.sched_insert(state, b, row,
+                                             prompt_len=prompt.shape[1],
+                                             n_tokens=req.n_tokens)
                     first = eng.sched_first(row)
                 else:                     # ONE fused prefill+insert dispatch
                     state, first = eng.sched_admit(state, b,
-                                                   {"tokens": prompt})
+                                                   {"tokens": prompt},
+                                                   n_tokens=req.n_tokens)
                 dirty.discard(b)          # insert overwrote the whole row
                 # `first` may be an unsynced device scalar — only force it
                 # when EOS filtering needs the value now
@@ -203,6 +225,7 @@ class ContinuousScheduler:
                     n_emitted=len(kept),
                     arrival=s["req"].arrival,
                     t_admit=s["t"], t_finish=now())
+                eng.sched_release(b)      # paged: pages back to the pool NOW
                 dirty.add(b)              # reset lazily unless re-admitted
                 slots[b] = None
                 done_np[b] = True
