@@ -131,6 +131,17 @@ def spec_from_nodes(nodes: Sequence[Tuple[int, int, int]]) -> TreeSpec:
                     node_depth=depth, n_paths=len(leaves))
 
 
+def chain_spec(length: int) -> TreeSpec:
+    """Degenerate single-path tree: node i at depth i under node i-1, so
+    ``depth = arange(length)`` and the ancestor mask is lower-triangular.
+    ``verify`` over it is plain causal attention at the cache's offset —
+    the chunked-prefill pieces (runtime/engine.py ``sched_extend``) reuse
+    the tree-verification path with this spec instead of growing a second
+    multi-token forward."""
+    return spec_from_nodes([(-1, 0, 0)]
+                           + [(i - 1, i, 0) for i in range(1, length)])
+
+
 # --------------------------------------------------------------------------
 # expected acceptance length (the paper's estimator)
 # --------------------------------------------------------------------------

@@ -16,7 +16,12 @@ Two serving shapes:
   ``--sched continuous`` admits/evicts per sequence at chunk boundaries
   (a freed cache row is immediately refilled from the queue),
   ``--sched static`` is the fixed-group baseline.  Reports aggregate
-  tokens/sec plus per-request latency percentiles.
+  tokens/sec plus per-request latency mean/p50/p95 (the tail is what the
+  admission policies move — mean alone hides it).  ``--policy
+  fifo|sjf|lpt`` picks the admission order (sjf/lpt may admit a small
+  fundable request past a page-deferred head-of-line one) and
+  ``--prefill-chunk N`` admits prompts longer than N piecewise so one
+  long prompt cannot stall the resident bank (attention families).
 
 Capacity: the KV cache is sized so the full token budget fits
 (prompt + tokens + tree depth of speculative overshoot).  An undersized
@@ -59,16 +64,23 @@ def _replay(eng, args, data, cfg):
             for i in range(args.requests)]
     if args.sched == "continuous":
         results, stats = ContinuousScheduler(
-            eng, batch=args.batch, chunk=args.chunk).serve(reqs)
+            eng, batch=args.batch, chunk=args.chunk, policy=args.policy,
+            prefill_chunk=args.prefill_chunk).serve(reqs)
+        label = f"{args.sched}/{stats['policy']}"
+        if stats["prefill_chunk"]:
+            label += f"+pc{stats['prefill_chunk']}"
     else:
         results, stats = serve_static(eng, reqs, batch=args.batch)
-    print(f"[serve] {args.sched} x{args.requests} reqs "
+        label = args.sched
+    print(f"[serve] {label} x{args.requests} reqs "
           f"(poisson rate {args.rate}/s, B={args.batch}): "
           f"{stats['emitted_total']} tokens in {stats['makespan_s']:.2f}s "
           f"({stats['tok_s']:.1f} tok/s aggregate), "
           f"latency mean {stats['latency_mean_s']:.2f}s "
-          f"p90 {stats['latency_p90_s']:.2f}s, "
-          f"queue wait mean {stats['queue_wait_mean_s']:.2f}s")
+          f"p50 {stats['latency_p50_s']:.2f}s "
+          f"p95 {stats['latency_p95_s']:.2f}s, "
+          f"queue wait mean {stats['queue_wait_mean_s']:.2f}s "
+          f"p95 {stats['queue_wait_p95_s']:.2f}s")
     return results, stats
 
 
@@ -94,6 +106,18 @@ def main():
     ap.add_argument("--sched", default="continuous",
                     choices=["continuous", "static"],
                     help="scheduler for --arrivals replay")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "sjf", "lpt"],
+                    help="admission policy for --sched continuous: fifo "
+                         "(arrival order), sjf (smallest reserved "
+                         "footprint first; may admit past a page-deferred "
+                         "head-of-line request — starvation-prone under "
+                         "sustained small-request load), lpt (largest "
+                         "first)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="admit prompts longer than N in N-token pieces "
+                         "(0 = whole-prompt admission; attention-family "
+                         "engines only)")
     ap.add_argument("--paged", action="store_true",
                     help="paged KV: sequences share one page pool and "
                          "reserve pages for prompt+budget instead of a "

@@ -579,6 +579,90 @@ def _paged_insert_row(kv: PagedKVCache, row, dkv: KVCache, pages
         pos=kv.pos.at[row].set(dkv.pos[0]))
 
 
+def slice_row(cache: Cache, row) -> Cache:
+    """B=1 view of one bank row (the attention context a chunked-prefill
+    piece extends).  ``row`` may be a traced scalar.  KV-only caches: the
+    chunked-prefill path is gated to attention families, so recurrent /
+    cross state never reaches here.
+
+    Paged caches share the pool by reference — only the row's table,
+    ``key_pos`` and ``pos`` are sliced, so the view costs O(max_pages), not
+    a pool copy."""
+    if cache.mamba is not None or cache.xlstm is not None \
+            or cache.cross_k is not None:
+        raise ValueError("slice_row supports KV-only caches "
+                         "(chunked prefill is attention-family only)")
+    row = jnp.asarray(row, jnp.int32)
+    kv = cache.kv
+
+    def rows(a, axis):
+        return jax.lax.dynamic_slice_in_dim(a, row, 1, axis)
+
+    if isinstance(kv, PagedKVCache):
+        return Cache(kv=dataclasses.replace(
+            kv, block_table=rows(kv.block_table, 0),
+            key_pos=rows(kv.key_pos, 0), pos=rows(kv.pos, 0)))
+    return Cache(kv=KVCache(k=rows(kv.k, 1), v=rows(kv.v, 1),
+                            key_pos=rows(kv.key_pos, 0),
+                            pos=rows(kv.pos, 0), window=kv.window))
+
+
+def write_row_at(cache: Cache, row, ks, vs, start, n_valid) -> Cache:
+    """Partial-row insert at an offset (chunked prefill): write the first
+    ``n_valid`` of ``ks/vs (L, W, Hkv, hd)`` into row ``row`` at absolute
+    positions [start, start + n_valid) and advance only that row's ``pos``.
+
+    The complement of ``insert_rows`` (which replaces a whole row): pieces
+    of one prompt land incrementally — dense rows via a masked ring scatter
+    on the row, paged rows via ``_pool_scatter`` through the row's block
+    table (each piece is paginated as it arrives; entries past ``n_valid``
+    — tail-piece padding — are dropped, paged ones into the trash page).
+    Requires W <= the row's logical length (piece slots must not alias).
+    KV-only caches, same gate as ``slice_row``."""
+    if cache.mamba is not None or cache.xlstm is not None \
+            or cache.cross_k is not None:
+        raise ValueError("write_row_at supports KV-only caches "
+                         "(chunked prefill is attention-family only)")
+    row = jnp.asarray(row, jnp.int32)
+    kv = cache.kv
+    W = ks.shape[1]
+    idx = jnp.arange(W, dtype=jnp.int32)
+    valid = idx < n_valid
+    abs_pos = jnp.asarray(start, jnp.int32) + idx
+    new_pos = kv.pos.at[row].set(abs_pos[0] + n_valid)
+
+    if isinstance(kv, PagedKVCache):
+        table_row = jax.lax.dynamic_slice_in_dim(kv.block_table, row, 1, 0)
+        pool_k, pool_v, ok = _pool_scatter(
+            kv.pool_k, kv.pool_v, table_row, ks[:, None], vs[:, None],
+            abs_pos[None, :], valid[None, :])
+        kp_row = _keypos_scatter(
+            jax.lax.dynamic_slice_in_dim(kv.key_pos, row, 1, 0),
+            abs_pos[None, :], ok)
+        return dataclasses.replace(cache, kv=dataclasses.replace(
+            kv, pool_k=pool_k, pool_v=pool_v,
+            key_pos=jax.lax.dynamic_update_slice_in_dim(
+                kv.key_pos, kp_row, row, 0),
+            pos=new_pos))
+
+    S = kv.max_len
+    slots = abs_pos % S
+    # masked scatter: invalid (padding) entries re-write the slot's current
+    # contents — a gather of W slots, cheap next to the piece itself
+    k_cur = kv.k[:, row, slots]
+    v_cur = kv.v[:, row, slots]
+    m = valid[:, None, None]
+    return dataclasses.replace(cache, kv=dataclasses.replace(
+        kv,
+        k=kv.k.at[:, row, slots].set(
+            jnp.where(m, ks.astype(kv.k.dtype), k_cur)),
+        v=kv.v.at[:, row, slots].set(
+            jnp.where(m, vs.astype(kv.v.dtype), v_cur)),
+        key_pos=kv.key_pos.at[row, slots].set(
+            jnp.where(valid, abs_pos, kv.key_pos[row, slots])),
+        pos=new_pos))
+
+
 _UNBOUNDED = 1 << 30
 
 

@@ -56,6 +56,7 @@ write (see runtime/cache.py), so positions diverge freely across the batch.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Optional
 
@@ -63,11 +64,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.speculative.tree import Tree, TreeSpec
+from repro.core.speculative.tree import Tree, TreeSpec, chain_spec
 from repro.core.speculative.verify import SpecState, spec_prefill, spec_step
 from repro.runtime.cache import (PageAllocator, blank_paged_rows,
                                  capacity_left, insert_rows, pages_for,
-                                 paginate_cache, reset_rows, tile_rows)
+                                 paginate_cache, reset_rows, slice_row,
+                                 tile_rows, write_row_at)
 from repro.runtime.sampling import greedy
 
 _NO_EOS = -1          # sentinel: no real token id is negative
@@ -123,6 +125,7 @@ class _PagedPoolMixin:
         self.max_pages = pages_for(self.max_len, page_size) if paged else 0
         self._alloc: Optional[PageAllocator] = None      # sched-bank state
         self._row_pages = {}
+        self._extends = {}          # piece width -> jitted prefill-extend
 
     def _need_pages(self, prompt_len: int, budget: int, n_total: int) -> int:
         return min(pages_for(prompt_len + budget + self._overshoot,
@@ -146,6 +149,25 @@ class _PagedPoolMixin:
         return jnp.asarray(tables), n_total
 
     # ---- scheduler-facing reservation hooks ------------------------------
+    def sched_footprint(self, prompt_len: int, n_tokens: int) -> int:
+        """Slot cost of a request — what the scheduler's size-ordered
+        admission policies (SJF/LPT) rank by: reserved pages when paged,
+        otherwise logical slots (prompt + budget + overshoot)."""
+        need = int(prompt_len) + int(n_tokens) + self._overshoot
+        if self.paged:
+            return pages_for(need, self.page_size)
+        return need
+
+    @property
+    def sched_chunked_ok(self) -> bool:
+        """Whether this engine supports chunked prefill (piecewise
+        ``sched_extend`` admission): attention-only families with full
+        attention.  Recurrent families (Mamba/xLSTM/hybrid) prefill their
+        state sequentially and stay on whole-prompt admission; sliding
+        windows stay dense/whole for the same reason the paged path does."""
+        return self.window == 0 and \
+            getattr(self.model, "family", "") in ("dense", "moe", "vlm")
+
     def sched_can_admit(self, prompt_len: int, n_tokens: int) -> bool:
         """False while the pool cannot fund the request's reservation — the
         scheduler then DEFERS admission until evictions free pages.  A
@@ -173,6 +195,66 @@ class _PagedPoolMixin:
         out[:len(pages)] = pages
         return jnp.asarray(out)
 
+    # ---- chunked-prefill hook (runtime/scheduler.py prefill_chunk) -------
+    def _extend_fn(self, C: int):
+        """Per-piece-width jit of the engine's ``_extend_row``."""
+        if C not in self._extends:
+            model, row_fn = self.model, self._extend_row
+            tree = Tree.from_spec(chain_spec(C))
+
+            def run(p, st, b, toks, nv):
+                return row_fn(model, p, st, b, toks, nv, tree)
+
+            self._extends[C] = jax.jit(run, donate_argnums=(1,))
+        return self._extends[C]
+
+    def sched_extend(self, state, b, tokens, n_valid):
+        """One chunked-prefill piece: run ``tokens (1, C)`` (tail pieces
+        right-padded; ``n_valid`` real entries) through the causal verify
+        path against row ``b``'s existing cache and splice the piece's KVs
+        in at the row's offset.  Returns (state, last-real-token device
+        scalar — after the final piece that token is the request's first
+        emission, and the spec engine's row additionally carries the
+        drafting ``cur_token``/``hidden`` of the last real position, so the
+        finished slot is indistinguishable from a whole-prompt admission).
+        Compiled once per piece width C."""
+        return self._extend_fn(int(tokens.shape[1]))(
+            self.params, state, jnp.asarray(b, jnp.int32),
+            jnp.asarray(tokens, jnp.int32), jnp.asarray(n_valid, jnp.int32))
+
+
+def _extend_seq_row(model, params, state, b, tokens, n_valid, tree):
+    """Chunked-prefill piece for the sequential engine: causal multi-token
+    forward over row ``b``'s cache view (``tree`` is the chain spec — plain
+    causal attention through the tree-verify path, ref numerics) followed by
+    a partial-row KV insert at the row's current offset."""
+    cache, cur = state
+    row_view = slice_row(cache, b)
+    logits, extras = model.verify(params, row_view, tokens, tree,
+                                  backend="ref")
+    k1, v1 = extras["tree_kv"]                       # (L, 1, C, Hkv, hd)
+    cache = write_row_at(cache, b, k1[:, 0], v1[:, 0],
+                         row_view.kv.pos[0], n_valid)
+    last = greedy(jnp.take(logits[0], n_valid - 1, axis=0))
+    return (cache, cur.at[b].set(last)), last
+
+
+def _extend_spec_row(model, params, state, b, tokens, n_valid, tree):
+    """Spec-engine chunked-prefill piece: as ``_extend_seq_row`` plus the
+    drafting carry — ``cur_token``/``hidden`` track the last REAL position
+    so the final piece leaves the row exactly as ``spec_prefill`` would."""
+    row_view = slice_row(state.cache, b)
+    logits, extras = model.verify(params, row_view, tokens, tree,
+                                  backend="ref")
+    k1, v1 = extras["tree_kv"]
+    cache = write_row_at(state.cache, b, k1[:, 0], v1[:, 0],
+                         row_view.kv.pos[0], n_valid)
+    last = greedy(jnp.take(logits[0], n_valid - 1, axis=0))
+    hid = jnp.take(extras["hidden"][0], n_valid - 1, axis=0)
+    return SpecState(cache=cache,
+                     cur_token=state.cur_token.at[b].set(last),
+                     hidden=state.hidden.at[b].set(hid)), last
+
 
 class BatchEngine(_PagedPoolMixin):
     """Uniform-length batched prefill + chunked decode (Sequential baseline).
@@ -187,6 +269,7 @@ class BatchEngine(_PagedPoolMixin):
     """
 
     _overshoot = 1        # decode writes 1 slot past the last emitted token
+    _extend_row = staticmethod(_extend_seq_row)      # chunked-prefill piece
 
     def __init__(self, model, params, *, max_len=512, window=0,
                  backend="ref", chunk=8, paged=False, page_size=16,
@@ -244,8 +327,25 @@ class BatchEngine(_PagedPoolMixin):
                 def body(carry, _):
                     cache, cur, done, rem = carry
                     done = done | (rem <= 0) | (capacity_left(cache) < 1)
+                    kv0 = cache.kv
                     lg, cache = model.decode(p, cache, cur[:, None],
                                              backend=backend)
+                    if kv0 is not None:
+                        # the sequential body decodes EVERY row, done ones
+                        # included — restore their key_pos/pos so a done
+                        # row's KV bookkeeping is frozen (its garbage k/v
+                        # write stays invisible at key_pos -1 and is
+                        # overwritten by the slot's next real write).
+                        # Without this a mid-chunked-prefill row (done-
+                        # masked while its prompt pieces land) would have
+                        # its piece offsets corrupted between pieces.
+                        kv = cache.kv
+                        cache = dataclasses.replace(
+                            cache, kv=dataclasses.replace(
+                                kv,
+                                key_pos=jnp.where(done[:, None], kv0.key_pos,
+                                                  kv.key_pos),
+                                pos=jnp.where(done, kv0.pos, kv.pos)))
                     nxt = greedy(lg[:, 0])
                     nxt = jnp.where(done, eos, nxt)     # pad finished seqs
                     emit = ~done
@@ -344,11 +444,17 @@ class BatchEngine(_PagedPoolMixin):
                                       pages)
         return self._insert(state, jnp.asarray(b, jnp.int32), row)
 
-    def sched_admit(self, state, b, batch, *, n_tokens=None):
+    def sched_admit(self, state, b, batch, *, n_tokens=None,
+                    reserve_len=None):
         """Fused prefill+insert; returns (state, first-token device scalar —
-        unsynced, the caller materializes it lazily)."""
+        unsynced, the caller materializes it lazily).  ``reserve_len``
+        overrides the page reservation's prompt length — chunked prefill
+        admits only the FIRST piece here but must reserve for the whole
+        prompt."""
         if self.paged:
-            pages = self._sched_pages(b, _prompt_len(batch), n_tokens)
+            plen = reserve_len if reserve_len is not None \
+                else _prompt_len(batch)
+            pages = self._sched_pages(b, plen, n_tokens)
             return self._admit_paged(self.params, state,
                                      jnp.asarray(b, jnp.int32), batch, pages)
         return self._admit(self.params, state, jnp.asarray(b, jnp.int32),
@@ -433,6 +539,8 @@ class SpeculativeEngine(_PagedPoolMixin):
     ``max_depth`` overshoot because one speculative step can commit a full
     accepted chain past the budget.
     """
+
+    _extend_row = staticmethod(_extend_spec_row)     # chunked-prefill piece
 
     def __init__(self, model, heads, params, tree_spec: TreeSpec, *,
                  max_len=512, window=0, backend="ref", chunk=8, paged=False,
@@ -627,11 +735,16 @@ class SpeculativeEngine(_PagedPoolMixin):
                                       pages)
         return self._insert(state, jnp.asarray(b, jnp.int32), row)
 
-    def sched_admit(self, state, b, batch, *, n_tokens=None):
+    def sched_admit(self, state, b, batch, *, n_tokens=None,
+                    reserve_len=None):
         """Fused prefill+insert; returns (state, first-token device scalar —
-        unsynced, the caller materializes it lazily)."""
+        unsynced, the caller materializes it lazily).  ``reserve_len``: see
+        ``BatchEngine.sched_admit`` (chunked prefill reserves for the whole
+        prompt while inserting only its first piece)."""
         if self.paged:
-            pages = self._sched_pages(b, _prompt_len(batch), n_tokens)
+            plen = reserve_len if reserve_len is not None \
+                else _prompt_len(batch)
+            pages = self._sched_pages(b, plen, n_tokens)
             return self._admit_paged(self.params, self.heads, state,
                                      jnp.asarray(b, jnp.int32), batch, pages)
         return self._admit(self.params, self.heads, state,

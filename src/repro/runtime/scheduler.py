@@ -40,11 +40,60 @@ boundary (see runtime/engine.py) and it returns fewer tokens, reported via
 
 Paged engines add a reservation step: admission asks ``sched_can_admit``
 whether the page pool can fund ``ceil((prompt + budget + overshoot) /
-page_size)`` pages and DEFERS the request (FIFO head-of-line) while it
-cannot; eviction returns the row's pages via ``sched_release`` before the
-device-side reset, so a freed reservation funds the same boundary's
-admissions.  Pool exhaustion therefore shows up as queueing delay, never
-as a failed or corrupted request.
+page_size)`` pages and DEFERS the request while it cannot; eviction
+returns the row's pages via ``sched_release`` before the device-side
+reset, so a freed reservation funds the same boundary's admissions.  Pool
+exhaustion therefore shows up as queueing delay, never as a failed or
+corrupted request.
+
+Admission policies
+------------------
+*Which* queued request a freed row takes is a pluggable
+``AdmissionPolicy`` (``policy=`` — ``"fifo"`` default, ``"sjf"``,
+``"lpt"``, or any object with the ``pick`` protocol):
+
+* **fifo** — strict arrival order; a request the pool cannot fund blocks
+  everything behind it (head-of-line).  Bit-compatible with the pre-policy
+  scheduler: same requests, same engine calls, same outputs.
+* **sjf** — shortest job first by ``engine.sched_footprint`` (reserved
+  pages when paged, else slots): among ARRIVED requests, the smallest one
+  the pool can fund is admitted, skipping past a deferred head-of-line
+  request.  Cuts queueing delay for the short-budget bulk of a mixed
+  trace.  CAVEAT: SJF is starvation-prone — a stream of small requests
+  can postpone a large one indefinitely; it never *loses* the large
+  request (every policy admits it once the bank drains, because an empty
+  bank always funds the pool's worth), but its latency is unbounded under
+  sustained load.  FIFO remains the fairness-preserving default.
+* **lpt** — longest footprint first (reverse of SJF): packs big
+  reservations early; same skip-past-deferred rule, same starvation
+  caveat with the roles reversed.
+
+Per-request OUTPUT is policy-independent: a policy only reorders
+admission; decode math is untouched (the fuzz suite pins per-request
+parity with solo B=1 runs across policies).
+
+Chunked prefill
+---------------
+``prefill_chunk=N`` (0 = off) admits a long prompt PIECEWISE instead of
+in one prompt-sized prefill dispatch (Sarathi/vLLM-style chunked prefill):
+
+* admission inserts only the first N prompt tokens (the normal fused
+  ``sched_admit``, reservation sized to the WHOLE prompt via
+  ``reserve_len``), and the row joins the bank done-masked;
+* each following chunk boundary runs ``engine.sched_extend`` once per
+  prefilling row: the next N-token piece is pushed through the causal
+  verify path against the row's resident cache and spliced in at the
+  row's offset (``cache.write_row_at``) — paged pieces are paginated
+  incrementally, so the paged path's dense prefill transient is bounded
+  by the piece size, never the prompt;
+* the LAST piece's final logits produce the request's first token and the
+  row goes live (``done`` cleared, budget armed) — from then on the slot
+  is indistinguishable from a whole-prompt admission.
+
+The resident bank keeps decoding between pieces, so one long prompt no
+longer stalls every resident sequence for a prompt-sized dispatch.  Only
+attention-family engines support it (``engine.sched_chunked_ok``);
+recurrent families and prompts <= N fall back to whole-prompt admission.
 
 Arrivals are wall-clock: a request is admissible once ``arrival`` seconds
 (relative to ``serve()`` entry) have elapsed, which is how ``serve.py
@@ -57,8 +106,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from typing import List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -94,18 +142,104 @@ class RequestResult:
 
 def _aggregate(results: Sequence[RequestResult], makespan: float) -> dict:
     lats = np.asarray([r.latency for r in results])
+    waits = np.asarray([r.queue_wait for r in results])
     total = int(sum(r.n_emitted for r in results))
+
+    def pct(a, q):
+        return float(np.percentile(a, q)) if a.size else 0.0
+
+    # mean alone hides the tail the admission policies target: p50/p95 are
+    # first-class alongside it (p90 kept for older consumers)
     return {
         "requests": len(results),
         "makespan_s": makespan,
         "emitted_total": total,
         "tok_s": total / makespan if makespan > 0 else float("inf"),
         "latency_mean_s": float(lats.mean()) if lats.size else 0.0,
-        "latency_p50_s": float(np.percentile(lats, 50)) if lats.size else 0.0,
-        "latency_p90_s": float(np.percentile(lats, 90)) if lats.size else 0.0,
-        "queue_wait_mean_s": float(np.mean([r.queue_wait for r in results]))
-        if results else 0.0,
+        "latency_p50_s": pct(lats, 50),
+        "latency_p90_s": pct(lats, 90),
+        "latency_p95_s": pct(lats, 95),
+        "latency_max_s": float(lats.max()) if lats.size else 0.0,
+        "queue_wait_mean_s": float(waits.mean()) if waits.size else 0.0,
+        "queue_wait_p50_s": pct(waits, 50),
+        "queue_wait_p95_s": pct(waits, 95),
     }
+
+
+# --------------------------------------------------------------------------
+# Admission policies: which queued request a freed row takes.
+#
+# ``pick`` sees the pending list in FIFO order (sorted by (arrival,
+# req_id)) and returns an index into it, or None to leave the remaining
+# free rows empty this boundary.  ``can_admit(req)`` is the engine's page-
+# reservation gate (always admissible when the engine is dense);
+# ``footprint(req)`` is ``engine.sched_footprint`` — reserved pages when
+# paged, else slots.  ``bootstrap`` is True for the very first admission
+# of a serve(): the bank (and paged allocator) are rebuilt from scratch,
+# so the reservation gate must not apply (a depleted allocator left by an
+# aborted run cannot wedge a fresh serve, and a request larger than the
+# whole pool is admitted alone and freezes with a shortfall rather than
+# being lost).
+# --------------------------------------------------------------------------
+class AdmissionPolicy:
+    """Protocol + FIFO base: strict arrival order, defer-blocks-the-line."""
+
+    name = "fifo"
+
+    def pick(self, pending: Sequence["Request"], now: float,
+             can_admit: Callable, footprint: Callable,
+             bootstrap: bool) -> Optional[int]:
+        if pending[0].arrival > now:
+            return None
+        if not bootstrap and not can_admit(pending[0]):
+            # pool exhausted: DEFER head-of-line until evictions free pages
+            return None
+        return 0
+
+
+class _SizeOrderedPolicy(AdmissionPolicy):
+    """Shared SJF/LPT machinery: rank ARRIVED requests by footprint and
+    admit the best-ranked one the pool can fund — i.e. admission may skip
+    past a deferred head-of-line request whenever a differently-sized one
+    fits.  Ties break FIFO (arrival, req_id)."""
+
+    reverse = False
+
+    def pick(self, pending, now, can_admit, footprint, bootstrap):
+        sign = -1 if self.reverse else 1
+        ranked = sorted(
+            (sign * footprint(r), r.arrival, r.req_id, i)
+            for i, r in enumerate(pending) if r.arrival <= now)
+        for *_, i in ranked:
+            if bootstrap or can_admit(pending[i]):
+                return i
+        return None
+
+
+class SJFPolicy(_SizeOrderedPolicy):
+    """Shortest reserved footprint first.  Starvation-prone under
+    sustained small-request load (see module docstring)."""
+    name = "sjf"
+
+
+class LPTPolicy(_SizeOrderedPolicy):
+    """Longest footprint first (packs big reservations early)."""
+    name = "lpt"
+    reverse = True
+
+
+POLICIES = {"fifo": AdmissionPolicy, "sjf": SJFPolicy, "lpt": LPTPolicy}
+
+
+def get_policy(policy) -> AdmissionPolicy:
+    """Resolve a policy name or pass through an AdmissionPolicy instance."""
+    if isinstance(policy, str):
+        try:
+            return POLICIES[policy]()
+        except KeyError:
+            raise ValueError(f"unknown admission policy {policy!r} "
+                             f"(have: {sorted(POLICIES)})") from None
+    return policy
 
 
 class ContinuousScheduler:
@@ -114,15 +248,30 @@ class ContinuousScheduler:
     Works with any engine implementing the slot protocol
     (``sched_prefill`` / ``sched_blank`` / ``sched_insert`` /
     ``sched_reset`` / ``sched_step`` / ``sched_emitted`` plus the paged
-    reservation hooks ``sched_can_admit`` / ``sched_release`` — both
+    reservation hooks ``sched_can_admit`` / ``sched_release`` /
+    ``sched_footprint`` and, for ``prefill_chunk``, the piecewise
+    admission hook ``sched_extend`` gated by ``sched_chunked_ok`` — both
     ``BatchEngine`` and ``SpeculativeEngine`` do).
+
+    ``policy`` picks which queued request a freed row takes (``"fifo"`` /
+    ``"sjf"`` / ``"lpt"`` or an ``AdmissionPolicy``); ``prefill_chunk=N``
+    admits prompts longer than N in N-token pieces (see module docstring).
     """
 
     def __init__(self, engine, *, batch: int = 8,
-                 chunk: Optional[int] = None):
+                 chunk: Optional[int] = None, policy="fifo",
+                 prefill_chunk: int = 0):
         self.engine = engine
         self.batch = batch
         self.chunk = chunk or engine.chunk
+        self.policy = get_policy(policy)
+        if prefill_chunk < 0:
+            raise ValueError("prefill_chunk must be >= 0")
+        # chunked prefill: 0 = whole-prompt admission; N = admit long
+        # prompts in N-token pieces (attention-family engines only — other
+        # families silently use whole-prompt admission)
+        self.prefill_chunk = prefill_chunk if getattr(
+            engine, "sched_chunked_ok", False) else 0
         # introspection for tests / debugging, populated by serve()
         self.last_state = None
         self.events: List[tuple] = []
@@ -131,10 +280,11 @@ class ContinuousScheduler:
               ) -> tuple:
         """Replay ``requests`` (admitting each no earlier than its arrival)
         and return ``(results, stats)`` with results in request order."""
-        eng, B = self.engine, self.batch
+        eng, B, C = self.engine, self.batch, self.prefill_chunk
         eos_val = int(_eos_scalar(eos))
-        queue = deque(sorted(requests, key=lambda r: (r.arrival, r.req_id)))
-        slots: list = [None] * B          # per-row {req, out, t_admit}
+        # pending stays in FIFO order; policies index into it
+        pending = sorted(requests, key=lambda r: (r.arrival, r.req_id))
+        slots: list = [None] * B          # per-row {req, out, t, pending}
         done_np = np.ones((B,), bool)     # free rows are masked done
         rem_np = np.zeros((B,), np.int32)
         state = None
@@ -148,42 +298,72 @@ class ContinuousScheduler:
         def now():
             return time.perf_counter() - t0
 
-        while queue or any(s is not None for s in slots):
-            # ---- admit arrived requests into free rows (FIFO) ------------
+        def can_admit(r):
+            return eng.sched_can_admit(len(r.tokens), r.n_tokens)
+
+        def footprint(r):
+            return eng.sched_footprint(len(r.tokens), r.n_tokens)
+
+        while pending or any(s is not None for s in slots):
+            # ---- advance chunked prefills: one piece per row/boundary ----
             for b in range(B):
-                if slots[b] is not None or not queue:
+                s = slots[b]
+                if s is None or s.get("pending") is None:
                     continue
-                if queue[0].arrival > now():
-                    break
-                if state is not None and not eng.sched_can_admit(
-                        len(queue[0].tokens), queue[0].n_tokens):
-                    # page pool exhausted: DEFER (FIFO head-of-line) until
-                    # evictions return pages; an empty bank always admits
-                    # (a request larger than the whole pool gets the whole
-                    # pool and freezes with a shortfall, it is never lost).
-                    # The bootstrap admission is NOT gated: sched_blank
-                    # rebuilds the allocator, so a depleted allocator left
-                    # by an aborted earlier run cannot wedge a fresh serve
-                    break
-                req = queue.popleft()
-                prompt = np.asarray(req.tokens, np.int32)[None]
+                rest = s["pending"]
+                piece = rest[:C]
+                padded = np.zeros((1, C), np.int32)
+                padded[0, :len(piece)] = piece
+                state, last = eng.sched_extend(state, b, padded, len(piece))
+                self.events.append(("extend", s["req"].req_id, b))
+                if len(rest) > C:
+                    s["pending"] = rest[C:]
+                else:                     # last piece: the row goes LIVE
+                    s["pending"] = None
+                    s["out"] = [last]     # unsynced device scalar, like
+                    done_np[b] = (eos is not None  # an admission's `first`
+                                  and int(last) == eos_val)
+                    rem_np[b] = max(s["req"].n_tokens - 1, 0)
+                    self.events.append(("prefill_done", s["req"].req_id, b))
+
+            # ---- admit arrived requests into free rows (policy order) ----
+            for b in range(B):
+                if slots[b] is not None or not pending:
+                    continue
+                idx = self.policy.pick(pending, now(), can_admit, footprint,
+                                       state is None)
+                if idx is None:           # nothing arrived / nothing the
+                    break                 # pool can fund: leave rows empty
+                req = pending.pop(idx)
+                prompt_np = np.asarray(req.tokens, np.int32)
+                S = len(prompt_np)
+                chunked = bool(C) and S > C
+                prompt = (prompt_np[:C] if chunked else prompt_np)[None]
                 if state is None:         # bootstrap the bank once
                     row = eng.sched_prefill({"tokens": prompt})
                     state = eng.sched_blank(row, B)
                     state = eng.sched_insert(state, b, row,
-                                             prompt_len=prompt.shape[1],
+                                             prompt_len=S,
                                              n_tokens=req.n_tokens)
                     first = eng.sched_first(row)
                 else:                     # ONE fused prefill+insert dispatch
                     state, first = eng.sched_admit(state, b,
                                                    {"tokens": prompt},
-                                                   n_tokens=req.n_tokens)
+                                                   n_tokens=req.n_tokens,
+                                                   reserve_len=S)
                 dirty.discard(b)          # insert overwrote the whole row
-                # `first` may be an unsynced device scalar — only force it
-                # when EOS filtering needs the value now
-                slots[b] = {"req": req, "out": [first], "t": now()}
-                done_np[b] = eos is not None and int(first) == eos_val
-                rem_np[b] = max(req.n_tokens - 1, 0)
+                if chunked:               # rest of the prompt lands piece-
+                    slots[b] = {"req": req, "out": [], "t": now(),
+                                "pending": prompt_np[C:]}
+                    done_np[b] = True     # masked until the last piece
+                    rem_np[b] = 0
+                else:
+                    # `first` may be an unsynced device scalar — only force
+                    # it when EOS filtering needs the value now
+                    slots[b] = {"req": req, "out": [first], "t": now(),
+                                "pending": None}
+                    done_np[b] = eos is not None and int(first) == eos_val
+                    rem_np[b] = max(req.n_tokens - 1, 0)
                 self.events.append(("admit", req.req_id, b))
             if dirty:                     # rows left empty: one batched reset
                 state = eng.sched_reset(state, sorted(dirty))
@@ -191,9 +371,9 @@ class ContinuousScheduler:
             occupied = [b for b in range(B) if slots[b] is not None]
             max_resident = max(max_resident, len(occupied))
             if not occupied:
-                if not queue:
+                if not pending:
                     break
-                wait = queue[0].arrival - now()
+                wait = pending[0].arrival - now()
                 if wait > 0:
                     time.sleep(wait)
                 continue
@@ -209,11 +389,14 @@ class ContinuousScheduler:
                 per_row = eng.sched_emitted(raw)
                 chunks += 1
                 for b in occupied:
-                    slots[b]["out"].extend(per_row[b])
+                    if slots[b]["pending"] is None:
+                        slots[b]["out"].extend(per_row[b])
 
             # ---- evict finished rows (EOS / budget / capacity freeze) ----
             for b in occupied:
                 s = slots[b]
+                if s["pending"] is not None:
+                    continue              # still prefilling: not evictable
                 budget = s["req"].n_tokens
                 if not (done_np[b] or rem_np[b] <= 0
                         or len(s["out"]) >= budget):
@@ -240,7 +423,9 @@ class ContinuousScheduler:
         ordered = [results[r.req_id] for r in requests]
         stats = _aggregate(ordered, makespan)
         stats.update(admitted=len(ordered), chunks=chunks,
-                     max_resident=max_resident, batch=B, chunk=self.chunk)
+                     max_resident=max_resident, batch=B, chunk=self.chunk,
+                     policy=self.policy.name,
+                     prefill_chunk=self.prefill_chunk)
         return ordered, stats
 
 

@@ -10,8 +10,15 @@ Invariants:
   * mid-run admission does not perturb already-resident sequences;
   * the static baseline (``serve_static``) also matches solo runs and
     honours per-request budgets;
-  * the per-row cache primitives (reset/insert/tile) do row surgery without
-    touching other rows.
+  * the per-row cache primitives (reset/insert/tile, and write_row_at /
+    slice_row for chunked prefill) do row surgery without touching other
+    rows;
+  * non-FIFO admission policies (sjf/lpt) reorder ADMISSION only — outputs
+    still match solo runs — and SJF admits fundable small requests past a
+    pool-deferred head-of-line request;
+  * chunked prefill admits a long prompt piecewise (extend events between
+    chunk boundaries), never stalls resident sequences, and the finished
+    row is indistinguishable from a whole-prompt admission.
 """
 import jax
 import jax.numpy as jnp
@@ -183,6 +190,190 @@ def test_row_primitives_unit():
     tiled = C.tile_rows(src, 4)
     assert tiled.kv.k.shape[1] == 4
     assert np.all(np.asarray(tiled.kv.pos) == 9)
+
+
+def _mixed_pool_setup():
+    """Paged spec engine + a trace built to expose head-of-line blocking:
+    one page-hungry request (req 0) ahead of four small ones, all arriving
+    at t=0, on a pool that cannot hold the big one next to more than one
+    small one."""
+    cfg, model, params, heads, spec = _setup()
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=160,
+                            chunk=4, paged=True, page_size=8, pool_pages=20)
+    long_req = _requests(cfg, 1, budgets=[96], prompt_len=24)[0]   # 16 pages
+    shorts = _requests(cfg, 4, budgets=[6], prompt_len=8, seed=5)  # 3 pages
+    for i, r in enumerate(shorts):
+        r.req_id = i + 1
+    return eng, [long_req] + shorts
+
+
+def test_sjf_admits_small_past_deferred_big():
+    """SJF orders admission by reserved footprint and keeps admitting
+    fundable small requests while a big one cannot be funded; FIFO lets the
+    big head-of-line request block the line.  Outputs stay solo-identical
+    under both."""
+    eng, reqs = _mixed_pool_setup()
+    fifo = ContinuousScheduler(eng, batch=4, policy="fifo")
+    f_res, f_stats = fifo.serve(reqs)
+    f_admits = [r for ev, r, _ in fifo.events if ev == "admit"]
+    assert f_admits[0] == 0                       # arrival order: big first
+
+    sjf = ContinuousScheduler(eng, batch=4, policy="sjf")
+    s_res, s_stats = sjf.serve(reqs)
+    s_admits = [r for ev, r, _ in sjf.events if ev == "admit"]
+    # smallest footprints first; the big request lands only once the pool
+    # can fund it again (here: last)
+    assert s_admits == [1, 2, 3, 4, 0]
+    # the shorts pack the bank while the big one is deferred: strictly more
+    # residency than FIFO, which holds rows empty behind the blocked head
+    assert s_stats["max_resident"] > f_stats["max_resident"]
+    assert s_stats["policy"] == "sjf" and f_stats["policy"] == "fifo"
+    _assert_matches_solo(eng, f_res, reqs)
+    _assert_matches_solo(eng, s_res, reqs)
+
+
+def test_lpt_admits_big_first():
+    eng, reqs = _mixed_pool_setup()
+    lpt = ContinuousScheduler(eng, batch=4, policy="lpt")
+    res, stats = lpt.serve(reqs)
+    admits = [r for ev, r, _ in lpt.events if ev == "admit"]
+    assert admits[0] == 0                         # largest footprint first
+    assert stats["policy"] == "lpt"
+    _assert_matches_solo(eng, res, reqs)
+
+
+def test_unknown_policy_rejected():
+    cfg, model, params, _, _ = _setup()
+    eng = BatchEngine(model, params, max_len=64, chunk=4)
+    with pytest.raises(ValueError):
+        ContinuousScheduler(eng, policy="srpt")
+    with pytest.raises(ValueError):
+        ContinuousScheduler(eng, prefill_chunk=-1)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("paged", [False, True])
+def test_chunked_prefill_matches_solo(backend, paged):
+    """A long prompt admitted in prefill_chunk-sized pieces emits exactly
+    the solo-run tokens, dense and paged, ref and Pallas decode."""
+    cfg, model, params, heads, spec = _setup()
+    kw = dict(paged=True, page_size=8, pool_pages=24) if paged else {}
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=96,
+                            backend=backend, chunk=4, **kw)
+    reqs = _requests(cfg, 3, budgets=[8, 5], prompt_len=21)
+    sched = ContinuousScheduler(eng, batch=2, prefill_chunk=6)
+    results, stats = sched.serve(reqs)
+    assert stats["prefill_chunk"] == 6
+    # 21 tokens = 6 admitted + 3 extend pieces (6, 6, 3) per request
+    per_req = {}
+    for ev, r, _ in sched.events:
+        per_req.setdefault(r, []).append(ev)
+    for r in range(3):
+        assert per_req[r].count("extend") == 3
+        assert "prefill_done" in per_req[r]
+    _assert_matches_solo(eng, results, reqs)
+
+
+def test_chunked_prefill_batch_engine_matches_solo():
+    cfg, model, params, _, _ = _setup()
+    eng = BatchEngine(model, params, max_len=96, chunk=4)
+    reqs = _requests(cfg, 3, budgets=[7, 4], prompt_len=17)
+    results, _ = ContinuousScheduler(eng, batch=2,
+                                     prefill_chunk=5).serve(reqs)
+    _assert_matches_solo(eng, results, reqs)
+
+
+def test_chunked_prefill_does_not_stall_residents():
+    """While a long prompt lands piecewise, resident sequences keep
+    decoding: a short resident finishes (and is evicted) strictly between
+    the long request's admission and its prefill completion."""
+    cfg, model, params, heads, spec = _setup()
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=160, chunk=4)
+    short = _requests(cfg, 1, budgets=[6], prompt_len=8)[0]
+    long_req = _requests(cfg, 1, budgets=[8], prompt_len=65, seed=9)[0]
+    long_req.req_id = 1
+    sched = ContinuousScheduler(eng, batch=2, prefill_chunk=8)
+    results, _ = sched.serve([short, long_req])
+    order = [(ev, r) for ev, r, _ in sched.events]
+    assert order.index(("evict", 0)) < order.index(("prefill_done", 1))
+    assert order.index(("admit", 1)) < order.index(("evict", 0))
+    _assert_matches_solo(eng, results, [short, long_req])
+
+
+def test_chunked_prefill_gated_off_for_recurrent_families():
+    """Hybrid/xLSTM prefill state sequentially: the scheduler silently
+    falls back to whole-prompt admission (no extend events, same outputs)."""
+    cfg, model, params, heads, spec = _setup("xlstm-125m")
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=64, chunk=4)
+    assert not eng.sched_chunked_ok
+    reqs = _requests(cfg, 2, budgets=[5], prompt_len=12)
+    sched = ContinuousScheduler(eng, batch=2, prefill_chunk=4)
+    assert sched.prefill_chunk == 0               # gate at construction
+    results, _ = sched.serve(reqs)
+    assert not any(ev == "extend" for ev, _, _ in sched.events)
+    _assert_matches_solo(eng, results, reqs)
+
+
+def test_write_row_at_and_slice_row_unit():
+    kv = C.init_kv_cache(2, 3, 8, 2, 4)
+    cache = C.Cache(kv=C.KVCache(
+        k=jnp.ones_like(kv.k), v=jnp.ones_like(kv.v),
+        key_pos=jnp.full_like(kv.key_pos, -1),
+        pos=jnp.asarray([0, 2, 0], jnp.int32), window=0))
+    ks = jnp.full((2, 4, 2, 4), 5.0, kv.k.dtype)
+    vs = jnp.full((2, 4, 2, 4), 6.0, kv.v.dtype)
+    # write 3 valid entries (1 padding) into row 1 at offset 2
+    out = C.write_row_at(cache, 1, ks, vs, 2, 3)
+    assert np.all(np.asarray(out.kv.k[:, 1, 2:5]) == 5)
+    assert np.all(np.asarray(out.kv.v[:, 1, 2:5]) == 6)
+    assert np.all(np.asarray(out.kv.k[:, 1, 5:]) == 1)   # padding dropped
+    np.testing.assert_array_equal(np.asarray(out.kv.key_pos[1]),
+                                  [-1, -1, 2, 3, 4, -1, -1, -1])
+    assert int(out.kv.pos[1]) == 5
+    # other rows untouched
+    assert np.all(np.asarray(out.kv.k[:, 0]) == 1)
+    assert np.all(np.asarray(out.kv.key_pos[0]) == -1)
+    assert int(out.kv.pos[0]) == 0
+    # slice_row returns the B=1 view of the written row
+    view = C.slice_row(out, 1)
+    assert view.kv.k.shape[1] == 1
+    assert int(view.kv.pos[0]) == 5
+    np.testing.assert_array_equal(np.asarray(view.kv.key_pos[0]),
+                                  np.asarray(out.kv.key_pos[1]))
+    # recurrent state is out of contract
+    bad = C.Cache(kv=out.kv, mamba=C.MambaState(
+        ssm=jnp.zeros((1, 3, 1, 1, 1)), conv=jnp.zeros((1, 3, 1, 1)),
+        pos=jnp.zeros((3,), jnp.int32)))
+    with pytest.raises(ValueError):
+        C.slice_row(bad, 0)
+    with pytest.raises(ValueError):
+        C.write_row_at(bad, 1, ks, vs, 2, 3)
+
+
+def test_write_row_at_paged_unit():
+    kv = C.init_paged_kv_cache(2, 2, 32, 2, 4, page_size=8, n_pages=6)
+    cache = C.Cache(kv=kv)
+    # row 0 owns pages [3, 1]; row 1 unreserved
+    table = kv.block_table.at[0, 0].set(3).at[0, 1].set(1)
+    cache = C.Cache(kv=C.PagedKVCache(
+        pool_k=kv.pool_k, pool_v=kv.pool_v, block_table=table,
+        key_pos=kv.key_pos, pos=kv.pos, page_size=8))
+    ks = jnp.full((2, 4, 2, 4), 9.0, kv.pool_k.dtype)
+    vs = jnp.full((2, 4, 2, 4), 4.0, kv.pool_v.dtype)
+    # logical slots 6..9 straddle the page boundary: 6,7 -> page 3,
+    # 8,9 -> page 1
+    out = C.write_row_at(cache, 0, ks, vs, 6, 4)
+    assert np.all(np.asarray(out.kv.pool_k[:, 3, 6:8]) == 9)
+    assert np.all(np.asarray(out.kv.pool_k[:, 1, 0:2]) == 9)
+    assert np.all(np.asarray(out.kv.pool_v[:, 1, 0:2]) == 4)
+    assert int(out.kv.pos[0]) == 10
+    np.testing.assert_array_equal(np.asarray(out.kv.key_pos[0, 6:10]),
+                                  [6, 7, 8, 9])
+    # write past the reservation (row 1, no pages): trash page only
+    out2 = C.write_row_at(cache, 1, ks, vs, 0, 4)
+    assert np.all(np.asarray(out2.kv.key_pos[1]) == -1)
+    assert np.all(np.asarray(out2.kv.pool_k[:, :6]) ==
+                  np.asarray(cache.kv.pool_k[:, :6]))
 
 
 def test_capacity_left():
