@@ -17,6 +17,16 @@ regime).  Reports per-arm p50/p95 latency (the tail the policies target;
 mean alone hides it) and asserts SJF and/or chunked prefill beat FIFO on
 p95.
 
+Adaptive-speculation comparison (``record["adaptive"]``): ONE
+``DecodeEngine`` bank serves the mixed-budget trace under each fixed
+candidate width and under the scheduler's adaptive mode (measured-ARCA:
+``arca.profile_engine`` step times x observed-acceptance EMA, strategy
+switched at chunk boundaries).  Asserts adaptive matches-or-beats the
+WORST fixed-width arm on aggregate tok/s and logs every per-boundary
+strategy switch in the record — with this repo's random heads the
+observed AL is ~1, so the right move is walking from the wide start down
+to the fastest width, and the record shows exactly that.
+
 Paged KV comparison (``record["paged"]``): at FIXED pool memory — the
 paged pool's reservable slots round DOWN from what the dense B-row bank
 holds, so the paged side never gets extra KV memory — a
@@ -176,6 +186,84 @@ def _paged_compare(cfg, model, params, heads, spec, max_len, n_requests,
         "speedup_paged_vs_dense": pg["tok_s"] / dn["tok_s"],
         "donation_in_place": True,
     }
+
+
+ADAPT_WIDTHS = (1, 2, 8)      # sequential-degenerate, narrow, wide
+
+
+def _adaptive_compare(cfg, model, params, heads, n_requests, chunk,
+                      reps) -> dict:
+    """Measured-ARCA adaptive arm: ONE DecodeEngine bank serves the mixed
+    16/192-budget trace under (a) each fixed candidate width and (b) the
+    scheduler's adaptive mode, which starts at the WIDEST candidate and
+    re-decides from the observed-acceptance EMA x the measured per-width
+    step times (``arca.profile_engine``).  With random heads the observed
+    AL is ~1, so the measured argmax is the fastest step — adaptive must
+    walk away from the wide start and match-or-beat the WORST fixed arm
+    on aggregate tok/s; every strategy switch is logged per boundary in
+    the record."""
+    import numpy as np
+
+    from repro.core import arca
+    from repro.core.speculative import tree as T
+    from repro.runtime.engine import DecodeEngine, DecodeStrategy
+    from repro.runtime.scheduler import ContinuousScheduler
+
+    accs = T.default_accs(cfg.medusa_heads, cfg.medusa_top_k)
+    specs = {w: T.candidate_spec(accs, w) for w in ADAPT_WIDTHS}
+    max_len = PROMPT_LEN + max(BUDGETS) + max(
+        s.max_depth for s in specs.values())
+    eng = DecodeEngine(model, params, heads=heads,
+                       strategy=DecodeStrategy.medusa(
+                           specs[max(ADAPT_WIDTHS)]),
+                       max_len=max_len, chunk=chunk)
+    time_fn = arca.profile_engine(eng, ADAPT_WIDTHS, accs=accs, batch=BATCH,
+                                  prompt_len=PROMPT_LEN, reps=reps)
+    strategies = arca.choose_strategy(cfg, accs, ctx=PROMPT_LEN,
+                                      time_fn=time_fn, widths=ADAPT_WIDTHS)
+    zero = np.zeros(n_requests)
+
+    out = {"widths": list(ADAPT_WIDTHS), "batch": BATCH,
+           "step_time_measured_s": {w: strategies[w].step_time
+                                    for w in ADAPT_WIDTHS},
+           "arms": {}}
+    for w in ADAPT_WIDTHS:
+        eng.set_strategy(specs[w])
+        ContinuousScheduler(eng, batch=BATCH, chunk=chunk).serve(
+            _requests(cfg, n_requests, zero))              # warm/compile
+        s = _best_of(lambda: ContinuousScheduler(
+            eng, batch=BATCH, chunk=chunk).serve(
+                _requests(cfg, n_requests, zero)), reps)
+        out["arms"][f"fixed_w{w}"] = {
+            "tok_s": s["tok_s"], "makespan_s": s["makespan_s"],
+            "latency_p95_s": s["latency_p95_s"]}
+
+    def adaptive_run():
+        eng.set_strategy(specs[max(ADAPT_WIDTHS)])         # wide start
+        return ContinuousScheduler(eng, batch=BATCH, chunk=chunk,
+                                   adaptive=strategies).serve(
+            _requests(cfg, n_requests, zero))
+
+    adaptive_run()                                         # warm/compile
+    best_stats = _best_of(adaptive_run, reps)
+    out["arms"]["adaptive"] = {
+        "tok_s": best_stats["tok_s"],
+        "makespan_s": best_stats["makespan_s"],
+        "latency_p95_s": best_stats["latency_p95_s"],
+        "width_start": max(ADAPT_WIDTHS),
+        "width_final": best_stats["width_final"],
+        "al_observed": best_stats["al_observed"],
+        # per-boundary switch events: the acceptance-criterion log
+        "strategy_switches": best_stats["strategy_switches"]}
+    worst = min(out["arms"][f"fixed_w{w}"]["tok_s"] for w in ADAPT_WIDTHS)
+    out["worst_fixed_tok_s"] = worst
+    out["gain_adaptive_vs_worst_fixed"] = \
+        out["arms"]["adaptive"]["tok_s"] / worst
+    if out["arms"]["adaptive"]["tok_s"] < worst:
+        raise AssertionError(
+            f"adaptive ({out['arms']['adaptive']['tok_s']:.1f} tok/s) lost "
+            f"to the worst fixed width ({worst:.1f} tok/s)")
+    return out
 
 
 POLICY_PROMPTS = (16, 64)     # short budget <-> short prompt, long <-> long
@@ -356,6 +444,8 @@ def _worker(n_requests: int, chunk: int, reps: int,
                                      max_len, n_requests, chunk, reps)
     record["policies"] = _policy_compare(cfg, model, params, heads, spec,
                                          n_requests, chunk, reps)
+    record["adaptive"] = _adaptive_compare(cfg, model, params, heads,
+                                           n_requests, chunk, reps)
     return record
 
 
@@ -399,6 +489,19 @@ def run(n_requests=32, chunk=8, reps=2, paged_only=False) -> list:
         rows.append(("sched_policy_p95_gain_vs_fifo",
                      pol["p95_gain_best_vs_fifo"],
                      "x fifo p95 latency (best of sjf/chunked-prefill)"))
+    if "adaptive" in record:
+        ad = record["adaptive"]
+        for name, a in ad["arms"].items():
+            extra = ""
+            if name == "adaptive":
+                sw = a["strategy_switches"]
+                extra = (f", w {a['width_start']}->{a['width_final']}, "
+                         f"{len(sw)} switch(es)")
+            rows.append((f"sched_{name}", 1e6 / a["tok_s"],
+                         f"{a['tok_s']:.1f} tok/s agg{extra}"))
+        rows.append(("sched_adaptive_vs_worst_fixed",
+                     ad["gain_adaptive_vs_worst_fixed"],
+                     "x worst fixed-width arm (measured-ARCA selection)"))
 
     os.makedirs(RESULT_DIR, exist_ok=True)
     path = os.path.join(RESULT_DIR, "sched_bench.json")

@@ -20,8 +20,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import arca
 from repro.core.speculative import tree as T
-from repro.core.speculative.medusa import draft_candidates, init_medusa, \
-    medusa_logits
+from repro.core.speculative.medusa import head_accuracies, init_medusa
 from repro.data.pipeline import MarkovDataset
 from repro.models.api import get_model
 from repro.runtime.engine import BatchEngine, SpeculativeEngine
@@ -31,30 +30,11 @@ from repro.training.train import medusa_step, train_step
 
 def measure_head_accuracies(cfg, model, params, heads, data, n_batches=4,
                             seq=128):
-    """Real per-head top-k accuracy table (replaces the fitted table)."""
-    H, K = cfg.medusa_heads, cfg.medusa_top_k
-    hits = np.zeros((H, K))
-    counts = 0
-    for s in range(n_batches):
-        toks = jnp.asarray(data.sample(8, seq, seed=100 + s)[:, :-1]
-                           .astype(np.int32))
-        _, extras, _ = model.prefill(params, {"tokens": toks},
-                                     return_cache=False)
-        logits = medusa_logits(cfg, heads, extras["hidden"])  # (B,S,H,V)
-        _, top = jax.lax.top_k(logits, K)                     # (B,S,H,K)
-        top = np.asarray(top)
-        tk = np.asarray(toks)
-        for h in range(H):
-            off = h + 2
-            if off >= seq:
-                continue
-            tgt = tk[:, off:]                                 # (B, S-off)
-            pred = top[:, :seq - off, h]                      # (B, S-off, K)
-            for k in range(K):
-                hits[h, k] += float(np.mean(pred[..., k] == tgt))
-        counts += 1
-    # P(rank-k is the target); cumulative not needed (tree uses per-rank)
-    return hits / max(counts, 1)
+    """Real per-head top-k accuracy table (core/speculative/medusa.py
+    ``head_accuracies`` over sampled calibration batches)."""
+    return head_accuracies(
+        cfg, model, params, heads,
+        (data.sample(8, seq, seed=100 + s)[:, :-1] for s in range(n_batches)))
 
 
 def main():

@@ -12,9 +12,14 @@ Two time sources feed the same search:
   * ``roofline_time`` — the TPU-mesh roofline (compute/HBM/ICI terms from
     the dry-run artifacts).  Used by the serving launcher on the pod.
 
-On real hardware the same ``choose_strategy`` runs over measured step times
-(the profiling hooks in runtime/engine.py) — the search is identical, only
-the timer changes (DESIGN.md §2).
+On real hardware the same ``choose_strategy`` runs over measured step times:
+``profile_engine(engine, widths)`` times the engine's COMPILED per-width
+step functions (``DecodeEngine.time_step`` — the strategy is a jit
+argument, so the timed function is exactly the deployed one) and returns
+the ``time_fn`` the search consumes.  The search is identical, only the
+timer changes; the scheduler's adaptive mode
+(runtime/scheduler.py ``AdaptiveSpeculation``) re-runs the argmax online
+from the measured table plus the observed acceptance EMA.
 """
 from __future__ import annotations
 
@@ -243,8 +248,7 @@ def choose_strategy(cfg, accs: np.ndarray, ctx: int = 256,
     the deployment choice is the argmax."""
     out = {}
     for w in widths:
-        spec = (T.spec_from_nodes([(-1, 0, 0)]) if w == 1
-                else T.build_tree(accs, w, evaluator=evaluator))
+        spec = T.candidate_spec(accs, w, evaluator=evaluator)
         al = T.expected_acceptance_length(spec, accs)
         ratio = contention_aware_ratio(soc, cfg, w, ctx)
         if time_fn is not None:
@@ -260,6 +264,43 @@ def choose_strategy(cfg, accs: np.ndarray, ctx: int = 256,
 
 def best(strategies: Dict[int, Strategy]) -> Strategy:
     return max(strategies.values(), key=lambda s: s.throughput)
+
+
+def profile_engine(engine, widths: Optional[Sequence[int]] = None, *,
+                   accs: Optional[np.ndarray] = None, batch: int = 1,
+                   prompt_len: int = 16, reps: int = 3) -> Callable:
+    """Measured time source for ``choose_strategy``: returns a
+    ``time_fn(cfg, width, ctx, spec)`` that times the engine's COMPILED
+    step for the given tree through ``DecodeEngine.time_step`` (one
+    measurement per tree SHAPE — ``(width, max_depth, n_paths)`` — cached,
+    so the search never re-times a same-shape candidate and switching back
+    to a profiled width is free).
+
+    ``widths`` pre-measures those candidates up front (trees built from
+    ``accs``, default: the engine model's calibration table shape), which
+    also pre-compiles each width's chunk scan — the serve launcher calls
+    this once at startup so the adaptive scheduler's first switch to any
+    candidate width hits a warm compile cache.  Unseen shapes are measured
+    lazily on first use.
+    """
+    times: Dict[tuple, float] = {}
+
+    def time_fn(cfg, width, ctx, spec) -> float:
+        key = (spec.width, spec.max_depth, spec.n_paths)
+        if key not in times:
+            times[key] = engine.time_step(engine.strategy_for(spec),
+                                          batch=batch,
+                                          prompt_len=prompt_len, reps=reps)
+        return times[key]
+
+    if widths:
+        table = accs
+        if table is None:
+            mcfg = engine.model.cfg
+            table = T.default_accs(mcfg.medusa_heads, mcfg.medusa_top_k)
+        for w in widths:
+            time_fn(None, w, prompt_len, T.candidate_spec(table, w))
+    return time_fn
 
 
 # ===========================================================================

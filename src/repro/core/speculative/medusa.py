@@ -46,6 +46,39 @@ def draft_candidates(cfg, heads, hidden, top_k):
     return idx.astype(jnp.int32), vals
 
 
+def head_accuracies(cfg, model, params, heads, token_batches):
+    """REAL per-head top-k accuracy table (replaces the fitted calibration
+    table): accs[h, k] = P(head h's rank-k candidate is the target), the
+    quantity ARCA's tree construction and expected-acceptance estimator
+    consume.  ``token_batches``: iterable of (B, S) int32 token arrays
+    (calibration prompts).  Used by the end-to-end example and the
+    trained-heads arm of ``benchmarks/engine_bench.py``."""
+    import numpy as np
+
+    H, K = cfg.medusa_heads, cfg.medusa_top_k
+    hits = np.zeros((H, K))
+    counts = 0
+    for toks in token_batches:
+        toks = jnp.asarray(np.asarray(toks, np.int32))
+        seq = int(toks.shape[1])
+        _, extras, _ = model.prefill(params, {"tokens": toks},
+                                     return_cache=False)
+        logits = medusa_logits(cfg, heads, extras["hidden"])  # (B,S,H,V)
+        _, top = jax.lax.top_k(logits, K)                     # (B,S,H,K)
+        top = np.asarray(top)
+        tk = np.asarray(toks)
+        for h in range(H):
+            off = h + 2       # hidden at t drives head h toward token t+h+2
+            if off >= seq:
+                continue
+            tgt = tk[:, off:]                                 # (B, S-off)
+            pred = top[:, :seq - off, h]                      # (B, S-off, K)
+            for k in range(K):
+                hits[h, k] += float(np.mean(pred[..., k] == tgt))
+        counts += 1
+    return hits / max(counts, 1)
+
+
 def expand_tree_tokens(tree, cur_token, candidates):
     """Fill tree slots: node 0 = cur committed token; node n (depth d>0) =
     head (d-1)'s rank[n] candidate.

@@ -40,6 +40,12 @@ class TreeSpec:
     node_depth: np.ndarray            # (W,) int32 — == depth
     n_paths: int
 
+    def shape(self) -> tuple:
+        """Compile-cache bucket ``(width, max_depth, n_paths)``: trees with
+        equal shape share one compiled verify/chunk step (``Tree`` is a jit
+        ARGUMENT), so strategy switches inside a bucket never re-jit."""
+        return (self.width, self.max_depth, self.n_paths)
+
     def jnp_arrays(self):
         import jax.numpy as jnp
         return {
@@ -77,6 +83,10 @@ class Tree:
     node_depth: object
     parent: object
     rank: object
+
+    def shape(self) -> tuple:
+        """Compile-cache bucket, mirroring ``TreeSpec.shape``."""
+        return (self.width, self.max_depth, int(self.paths.shape[0]))
 
     @staticmethod
     def from_spec(spec: "TreeSpec") -> "Tree":
@@ -260,6 +270,19 @@ def build_tree(accs: np.ndarray, width: int,
     if refine and width > 2:
         spec = refine_tree(spec, accs, evaluator)
     return spec
+
+
+def candidate_spec(accs: np.ndarray, width: int,
+                   evaluator: Optional[Callable[[TreeSpec], float]] = None
+                   ) -> TreeSpec:
+    """The candidate tree ARCA considers at a given width: the degenerate
+    root-only spec at width 1 (acceptance is exactly 1, nothing to draft
+    or refine), else greedy construction + refinement.  The ONE place the
+    width-1 special case lives — choose_strategy, profile_engine and the
+    serve/bench candidate sets all build through here."""
+    if width == 1:
+        return spec_from_nodes([(-1, 0, 0)])
+    return build_tree(accs, width, evaluator=evaluator)
 
 
 # --------------------------------------------------------------------------

@@ -59,10 +59,15 @@ def accept_walk(tree, tree_tokens, logits):
          data_fields=["cache", "cur_token", "hidden"], meta_fields=[])
 @dataclasses.dataclass
 class SpecState:
-    """Carry between speculative steps (any batch size B)."""
+    """Carry between decode steps (any batch size B).
+
+    Also the unified ``DecodeEngine`` state: a draft-free (sequential)
+    strategy carries ``hidden=None`` — an empty pytree leaf — since there
+    is no drafting input to thread."""
     cache: Any
     cur_token: jax.Array     # (B,) last committed token (next root)
-    hidden: jax.Array        # (B, d) hidden at that token (drafting input)
+    hidden: Any              # (B, d) hidden at that token (drafting
+                             # input), or None for draft-free strategies
 
 
 def spec_step(model, params, heads, tree, state: SpecState, *, backend="ref",

@@ -19,9 +19,19 @@ Two serving shapes:
   tokens/sec plus per-request latency mean/p50/p95 (the tail is what the
   admission policies move — mean alone hides it).  ``--policy
   fifo|sjf|lpt`` picks the admission order (sjf/lpt may admit a small
-  fundable request past a page-deferred head-of-line one) and
+  fundable request past a page-deferred head-of-line one;
+  ``--age-limit N`` bounds their starvation by promoting a request
+  deferred more than N boundaries to FIFO-head priority) and
   ``--prefill-chunk N`` admits prompts longer than N piecewise so one
   long prompt cannot stall the resident bank (attention families).
+
+``--spec-width auto`` (ghidorah + continuous replay) switches ARCA from
+the analytic SoC model to MEASURED profiling: the engine's compiled
+per-width step functions are timed on this machine
+(``arca.profile_engine``), ``choose_strategy`` picks the starting width
+from measured tokens/sec, and the scheduler's adaptive mode keeps
+re-deciding the width at chunk boundaries from the observed-acceptance
+EMA (strategy switches are logged).
 
 Capacity: the KV cache is sized so the full token budget fits
 (prompt + tokens + tree depth of speculative overshoot).  An undersized
@@ -55,7 +65,7 @@ from repro.runtime.scheduler import (ContinuousScheduler, Request,
 from repro.training import checkpoint
 
 
-def _replay(eng, args, data, cfg):
+def _replay(eng, args, data, cfg, adaptive=None):
     """Arrival-replay mode: Poisson request stream through the scheduler."""
     prompts = data.sample(args.requests, args.prompt_len, seed=11)[:, :-1]
     arrivals = poisson_arrivals(args.requests, args.rate, seed=args.seed)
@@ -65,10 +75,17 @@ def _replay(eng, args, data, cfg):
     if args.sched == "continuous":
         results, stats = ContinuousScheduler(
             eng, batch=args.batch, chunk=args.chunk, policy=args.policy,
-            prefill_chunk=args.prefill_chunk).serve(reqs)
+            prefill_chunk=args.prefill_chunk, age_limit=args.age_limit,
+            adaptive=adaptive).serve(reqs)
         label = f"{args.sched}/{stats['policy']}"
         if stats["prefill_chunk"]:
             label += f"+pc{stats['prefill_chunk']}"
+        if adaptive is not None:
+            label += "/adaptive"
+            sw = stats["strategy_switches"]
+            print(f"[serve] adaptive: width {stats['width_final']} at drain, "
+                  f"{len(sw)} switch(es)"
+                  + (f" {[(s['from'], s['to']) for s in sw]}" if sw else ""))
     else:
         results, stats = serve_static(eng, reqs, batch=args.batch)
         label = args.sched
@@ -90,7 +107,18 @@ def main():
     ap.add_argument("--mode", default="ghidorah",
                     choices=["ghidorah", "sequential"])
     ap.add_argument("--width", type=int, default=0,
-                    help="verification width (0 = let ARCA choose)")
+                    help="verification width (0 = let ARCA choose "
+                         "analytically)")
+    ap.add_argument("--spec-width", default=None,
+                    help="verification width: an int (same as --width, "
+                         "takes precedence) or 'auto' — MEASURED ARCA: the "
+                         "compiled per-width steps are profiled on this "
+                         "machine (arca.profile_engine), choose_strategy "
+                         "runs over the measured times, and the continuous "
+                         "scheduler keeps re-deciding the width at chunk "
+                         "boundaries from the observed acceptance EMA "
+                         "(needs --mode ghidorah --arrivals poisson "
+                         "--sched continuous)")
     ap.add_argument("--tokens", type=int, default=64)
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--chunk", type=int, default=8,
@@ -118,6 +146,10 @@ def main():
                     help="admit prompts longer than N in N-token pieces "
                          "(0 = whole-prompt admission; attention-family "
                          "engines only)")
+    ap.add_argument("--age-limit", type=int, default=0,
+                    help="starvation bound for --policy sjf/lpt: a request "
+                         "deferred for more than N chunk boundaries is "
+                         "promoted to FIFO-head priority (0 = off)")
     ap.add_argument("--paged", action="store_true",
                     help="paged KV: sequences share one page pool and "
                          "reserve pages for prompt+budget instead of a "
@@ -132,6 +164,9 @@ def main():
     ap.add_argument("--heads-ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.spec_width and args.mode != "ghidorah":
+        ap.error("--spec-width is a ghidorah option (sequential decoding "
+                 "has no verification width)")
     paged_kw = dict(paged=args.paged, page_size=args.page_size,
                     pool_pages=args.pool_pages or None)
 
@@ -167,6 +202,37 @@ def main():
     if args.heads_ckpt:
         heads = checkpoint.restore(args.heads_ckpt, heads)
     accs = T.default_accs(cfg.medusa_heads, cfg.medusa_top_k)
+    auto = args.spec_width == "auto"
+    if args.spec_width and not auto:
+        args.width = int(args.spec_width)
+    if auto:
+        # measured ARCA + runtime-adaptive speculation: profile the
+        # compiled per-width steps on THIS machine, start at the measured
+        # argmax, and let the scheduler re-decide at chunk boundaries
+        if args.arrivals == "none" or args.sched != "continuous":
+            ap.error("--spec-width auto needs --arrivals poisson "
+                     "--sched continuous")
+        widths = (1, 2, 4, 8, 16)
+        specs = {w: T.candidate_spec(accs, w) for w in widths}
+        # size the ring for the DEEPEST candidate: a runtime switch must
+        # never outgrow a resident row's capacity
+        max_len = args.prompt_len + args.tokens + max(
+            s.max_depth for s in specs.values())
+        eng = SpeculativeEngine(model, heads, params, specs[max(widths)],
+                                max_len=max_len, chunk=args.chunk,
+                                **paged_kw)
+        time_fn = arca.profile_engine(eng, widths, accs=accs,
+                                      batch=args.batch,
+                                      prompt_len=args.prompt_len)
+        strategies = arca.choose_strategy(cfg, accs, ctx=args.prompt_len,
+                                          time_fn=time_fn, widths=widths)
+        start = arca.best(strategies)
+        print(f"[serve] measured ARCA: start width={start.width} "
+              f"(E[AL]={start.acceptance:.2f}, "
+              f"step {start.step_time * 1e3:.2f} ms)")
+        eng.set_strategy(start.tree)
+        _replay(eng, args, data, cfg, adaptive=strategies)
+        return
     if args.width:
         spec = T.build_tree(accs, args.width)
     else:

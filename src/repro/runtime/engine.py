@@ -1,64 +1,65 @@
-"""Serving engines: batched sequential decoding and batched Ghidorah
-speculative decoding, with *device-resident chunked drivers*.
+"""Unified serving engine: ONE device-resident chunked decode driver
+parameterized by a pluggable ``DecodeStrategy``.
 
-Both engines run K decode/speculative steps inside a single jitted
-``lax.scan`` and transfer one fixed-size token chunk back to the host —
-one host sync per chunk instead of per token.
+A strategy is a registered pytree bundling the *verification tree* (the
+PR 1 ``Tree`` machinery), its *width*, and the *draft source*:
 
-Per-sequence liveness is a done-mask carried through the scan.  A row goes
-(and stays) done when any of three conditions hits:
+  * ``DecodeStrategy.medusa(tree_spec)`` — Ghidorah speculative decoding:
+    Medusa heads draft, the tree is verified in one forward, each sequence
+    accepts its own chain (paper §III).
+  * ``DecodeStrategy.sequential()`` — the degenerate ``chain_spec(width=1)``
+    strategy: the tree is just the root (the last committed token), there
+    is no draft source, and "verifying" the root alone IS plain one-token
+    decoding — so the engine runs ``model.decode`` for it and the classic
+    sequential baseline falls out of the same driver, protocol and slot
+    lifecycle as speculation instead of a copy-pasted twin engine.
 
-  * EOS — the sequence emitted its end token (its slot pads with EOS);
-  * budget — ``rem (B,)`` tokens-still-wanted reaches 0, so a sequence that
-    hit ``n_tokens`` without EOS stops burning decode steps while the rest
-    of the batch finishes;
-  * capacity — a full (window=0) KV cache would wrap its ring past
-    ``max_len`` (``cache.capacity_left``), so near-capacity decode freezes
-    instead of silently overwriting its oldest KV and corrupting attention.
+``BatchEngine`` and ``SpeculativeEngine`` survive as thin constructor
+aliases over ``DecodeEngine`` (bit-identical outputs to the pre-unification
+engines); everything below them — the K-step ``lax.scan`` chunk driver, the
+``sched_*`` continuous-batching slot protocol, admission/insert/reset and
+the paged-pool bookkeeping — is ONE implementation.
 
-Done rows commit nothing in the speculative engine (``spec_step``'s
-``active`` mask zeroes their acceptance, so ``pos`` stays put); in the
-sequential engine they keep stepping but their emission is masked.  The
-host loop also clamps the chunk length to the largest remaining budget
-(rounded up to a power of two so the compiled-scan cache stays small), so
-no full K-step chunk is launched when every live sequence needs fewer.
+Because the strategy is a jit ARGUMENT of the chunk functions, it can be
+swapped at runtime between chunks (``set_strategy``): same-shape strategies
+(equal ``(draft, width, max_depth, n_paths)``) reuse the compiled scans, so
+the scheduler's adaptive mode (runtime/scheduler.py) re-decides the
+speculative width from *measured* acceptance/step-time without re-jitting,
+and ARCA's measured time source (core/arca.py ``profile_engine`` ->
+``time_step``) times exactly the deployed step function.
 
-Slot lifecycle (continuous batching, see runtime/scheduler.py): each batch
-row is a *slot*.  The scheduler admits a request by prefilling it at B=1
-and inserting that row into the resident state (``sched_insert``), runs
-chunks over the whole bank, and at each chunk boundary evicts rows that
-went done — freeing the row (``sched_reset``) for the next queued request.
-Admission/eviction only ever happen between chunks, so the jitted K-step
-scan is reused unchanged; inside a chunk a freed row simply rides along
-fully masked.
+Chunked driver semantics (unchanged from the split engines): K steps run
+inside a single jitted ``lax.scan`` with ONE host sync per chunk.  A row
+goes (and stays) done on EOS, on its ``rem`` budget reaching 0, or on a
+capacity freeze — a full (window=0) KV cache that cannot take a worst-case
+accepted chain (``capacity_left < tree.max_depth``; depth 1 for the
+sequential strategy) freezes instead of silently wrapping its ring.  Done
+speculative rows commit nothing (``spec_step(active=...)``); done
+sequential rows keep stepping with emission masked and their KV
+bookkeeping (``key_pos``/``pos``) frozen, so mid-chunked-prefill rows keep
+their piece offsets.  The host loop clamps the chunk length to the largest
+remaining budget (power-of-two schedule, bounded compile cache).
 
-Paged KV (``paged=True``): the bank's KV lives in one shared page pool
-(runtime/cache.py ``PagedKVCache``) instead of B dense ``max_len`` rows.
-Admission reserves ``ceil((prompt + budget + overshoot) / page_size)``
-pages from a host-side free list, eviction returns them
-(``sched_release``), and ``sched_can_admit`` lets the scheduler DEFER a
-request while the pool is exhausted instead of failing it.  A row that
-somehow outgrows its reservation (e.g. ``generate`` on a pool smaller than
-the batch's total need — reservations are then partial) freezes exactly
-like a dense row hitting ``max_len``, with the shortfall in
-``stats["n_emitted"]``; its overflow writes land in the pool's trash page,
-never in a neighbor's reservation.  Recurrent/cross state keeps the dense
-per-row layout — only KV pages.
+Slot lifecycle (continuous batching, runtime/scheduler.py): each batch row
+is a *slot*; admission/eviction happen only between chunks via the
+``sched_*`` protocol, so the compiled scans are reused across the whole
+request stream.  Paged KV (``paged=True``): the bank's KV lives in one
+shared page pool (runtime/cache.py) with host-side page reservations at
+admission and a trash-page redirect for overflow writes; with runtime
+strategy switching the reservation overshoot is the DEEPEST registered
+candidate tree (``register_strategies``), so a mid-request switch can
+never outgrow a row's reservation.
 
-All state-threading jits (the K-step chunk scans, ``sched_admit``,
-``sched_insert``, ``sched_reset``) DONATE the carried state, so the cache
-— one large pool when paged — is updated in place instead of copied every
-chunk.
-
-``SpeculativeEngine`` accepts any batch size: each sequence accepts its own
-chain length per step and the cache commit is a per-sequence masked ring
-write (see runtime/cache.py), so positions diverge freely across the batch.
+All state-threading jits (chunk scans, ``sched_admit``, ``sched_insert``,
+``sched_reset``) DONATE the carried state, so the cache — one large pool
+when paged — is updated in place instead of copied every chunk.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from functools import partial
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -106,14 +107,166 @@ def _prompt_len(batch) -> int:
     return n
 
 
+# ===========================================================================
+# DecodeStrategy: the runtime-swappable (tree, width, draft-source) bundle
+# ===========================================================================
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["tree"], meta_fields=["width", "draft"])
+@dataclasses.dataclass(frozen=True)
+class DecodeStrategy:
+    """What one decode step does: verification tree + width + draft source.
+
+    A registered pytree, passed as a jit ARGUMENT to the engine's chunk
+    scans — strategies with equal ``shape()`` share one compiled scan, so
+    swapping same-shape-bucketed strategies at a chunk boundary is pure
+    data movement (no re-jit).  ``draft`` is static metadata:
+
+      * ``"medusa"`` — Medusa heads draft candidates, the tree is verified
+        in one forward (requires an engine constructed with ``heads``);
+      * ``"none"`` — no draft source; the tree must be the degenerate
+        ``chain_spec(1)`` root and the step is plain one-token decode.
+    """
+    width: int
+    draft: str                   # "medusa" | "none"
+    tree: Tree
+
+    @property
+    def max_depth(self) -> int:
+        return self.tree.max_depth
+
+    def shape(self) -> tuple:
+        """Compile-cache bucket: strategies with equal shape reuse the
+        engine's compiled chunk scans."""
+        return (self.draft,) + self.tree.shape()
+
+    @staticmethod
+    def sequential() -> "DecodeStrategy":
+        """The degenerate width-1 strategy: tree = chain_spec(1) (root
+        only), no draft — sequential decoding."""
+        return DecodeStrategy(width=1, draft="none",
+                              tree=Tree.from_spec(chain_spec(1)))
+
+    @staticmethod
+    def medusa(spec: TreeSpec) -> "DecodeStrategy":
+        return DecodeStrategy(width=spec.width, draft="medusa",
+                              tree=Tree.from_spec(spec))
+
+
+# ===========================================================================
+# unified engine state + row surgery (ONE implementation for both drafts)
+# ===========================================================================
+# The engine state is core/speculative/verify.py ``SpecState``; the
+# sequential strategy carries ``hidden=None`` (an empty pytree leaf), so
+# every insert/reset/admit path below handles both drafts with one body.
+
+def _prefill_state(model, params, heads, batch, *, max_len, window):
+    """Prefill -> engine state.  ``heads is None`` selects the draft-free
+    path (no hidden carry)."""
+    if heads is None:
+        logits, _, cache = model.prefill(params, batch, max_len=max_len,
+                                         window=window)
+        return SpecState(cache=cache, cur_token=greedy(logits[:, -1]),
+                         hidden=None)
+    return spec_prefill(model, params, heads, batch, max_len=max_len,
+                        window=window)
+
+
+def _insert_row(state, b, row, pages=None):
+    cache = insert_rows(state.cache, b, row.cache) if pages is None else \
+        insert_rows(state.cache, b, row.cache, pages=pages)
+    hid = None if state.hidden is None else \
+        state.hidden.at[b].set(row.hidden[0])
+    return type(state)(cache=cache,
+                       cur_token=state.cur_token.at[b].set(row.cur_token[0]),
+                       hidden=hid)
+
+
+def _admit_row(model, params, heads, state, b, batch, *, max_len, window):
+    row = _prefill_state(model, params, heads, batch, max_len=max_len,
+                         window=window)
+    return _insert_row(state, b, row), row.cur_token[0]
+
+
+def _admit_row_paged(model, params, heads, state, b, batch, pages):
+    row = _prefill_state(model, params, heads, batch, max_len=1, window=0)
+    return _insert_row(state, b, row, pages=pages), row.cur_token[0]
+
+
+def _reset_state_rows(state, mask):
+    # a freed slot must be fully inert, carry included: ``cur_token`` seeds
+    # the next chunk's decode input and ``hidden`` keeps driving (masked)
+    # drafts, so a stale carry is one masking bug away from leaking into a
+    # recycled page.  Clear the whole row.
+    mask = jnp.asarray(mask)
+    hid = None if state.hidden is None else \
+        jnp.where(mask[:, None], jnp.zeros_like(state.hidden), state.hidden)
+    return type(state)(cache=reset_rows(state.cache, mask),
+                       cur_token=jnp.where(mask,
+                                           jnp.zeros_like(state.cur_token),
+                                           state.cur_token),
+                       hidden=hid)
+
+
+def _extend_row(model, params, state, b, tokens, n_valid, tree):
+    """Chunked-prefill piece: run ``tokens (1, C)`` through the causal
+    verify path (``tree`` = chain spec — plain causal attention at the
+    row's offset, ref numerics) against row ``b``'s cache view and splice
+    the piece's KVs in.  The drafting carry (``cur_token``/``hidden`` when
+    present) tracks the last REAL position, so the final piece leaves the
+    row exactly as a whole-prompt admission would."""
+    row_view = slice_row(state.cache, b)
+    logits, extras = model.verify(params, row_view, tokens, tree,
+                                  backend="ref")
+    k1, v1 = extras["tree_kv"]                       # (L, 1, C, Hkv, hd)
+    cache = write_row_at(state.cache, b, k1[:, 0], v1[:, 0],
+                         row_view.kv.pos[0], n_valid)
+    last = greedy(jnp.take(logits[0], n_valid - 1, axis=0))
+    hid = None if state.hidden is None else state.hidden.at[b].set(
+        jnp.take(extras["hidden"][0], n_valid - 1, axis=0))
+    return type(state)(cache=cache,
+                       cur_token=state.cur_token.at[b].set(last),
+                       hidden=hid), last
+
+
+def _seq_step(model, params, state, *, backend, active):
+    """One step of the degenerate ``chain_spec(width=1)`` strategy: the
+    tree is just the root (the last committed token) and there is no draft,
+    so verifying it IS plain one-token decode.  Interface mirrors
+    ``spec_step``: returns (state, emitted (B, 1), n (B,) in {0, 1}).
+
+    Every row decodes, done ones included — their ``key_pos``/``pos`` are
+    restored afterwards so a done row's KV bookkeeping is frozen (its
+    garbage k/v write stays invisible at key_pos -1 and is overwritten by
+    the slot's next real write).  Without this a mid-chunked-prefill row
+    (done-masked while its prompt pieces land) would have its piece offsets
+    corrupted between pieces."""
+    kv0 = state.cache.kv
+    lg, cache = model.decode(params, state.cache, state.cur_token[:, None],
+                             backend=backend)
+    if kv0 is not None:
+        done = ~active
+        kv = cache.kv
+        cache = dataclasses.replace(
+            cache, kv=dataclasses.replace(
+                kv,
+                key_pos=jnp.where(done[:, None], kv0.key_pos, kv.key_pos),
+                pos=jnp.where(done, kv0.pos, kv.pos)))
+    nxt = greedy(lg[:, 0])
+    cur = jnp.where(active, nxt, state.cur_token)
+    return (type(state)(cache=cache, cur_token=cur, hidden=state.hidden),
+            nxt[:, None], active.astype(jnp.int32))
+
+
 class _PagedPoolMixin:
     """Shared page-reservation bookkeeping for paged engines.
 
     The allocator is HOST state: pages move between the free list and rows
     only at admission/eviction boundaries (and once per ``generate``), so
     reservation never syncs the device.  ``_overshoot`` is the engine's
-    worst-case slots written past the budget (speculative: one full
-    accepted chain of ``max_depth``)."""
+    worst-case slots written past the budget: one full accepted chain of
+    the current strategy's ``max_depth`` (1 for sequential — decode writes
+    one slot past the last emitted token), ratcheted to the deepest
+    registered candidate when runtime switching is armed."""
 
     def _paged_init(self, *, paged, page_size, pool_pages):
         if paged and self.window:
@@ -197,13 +350,13 @@ class _PagedPoolMixin:
 
     # ---- chunked-prefill hook (runtime/scheduler.py prefill_chunk) -------
     def _extend_fn(self, C: int):
-        """Per-piece-width jit of the engine's ``_extend_row``."""
+        """Per-piece-width jit of the prefill-extend row surgery."""
         if C not in self._extends:
-            model, row_fn = self.model, self._extend_row
+            model = self.model
             tree = Tree.from_spec(chain_spec(C))
 
             def run(p, st, b, toks, nv):
-                return row_fn(model, p, st, b, toks, nv, tree)
+                return _extend_row(model, p, st, b, toks, nv, tree)
 
             self._extends[C] = jax.jit(run, donate_argnums=(1,))
         return self._extends[C]
@@ -214,411 +367,168 @@ class _PagedPoolMixin:
         path against row ``b``'s existing cache and splice the piece's KVs
         in at the row's offset.  Returns (state, last-real-token device
         scalar — after the final piece that token is the request's first
-        emission, and the spec engine's row additionally carries the
-        drafting ``cur_token``/``hidden`` of the last real position, so the
-        finished slot is indistinguishable from a whole-prompt admission).
-        Compiled once per piece width C."""
+        emission, and a drafted row additionally carries the
+        ``cur_token``/``hidden`` of the last real position, so the finished
+        slot is indistinguishable from a whole-prompt admission).  Compiled
+        once per piece width C."""
         return self._extend_fn(int(tokens.shape[1]))(
             self.params, state, jnp.asarray(b, jnp.int32),
             jnp.asarray(tokens, jnp.int32), jnp.asarray(n_valid, jnp.int32))
 
 
-def _extend_seq_row(model, params, state, b, tokens, n_valid, tree):
-    """Chunked-prefill piece for the sequential engine: causal multi-token
-    forward over row ``b``'s cache view (``tree`` is the chain spec — plain
-    causal attention through the tree-verify path, ref numerics) followed by
-    a partial-row KV insert at the row's current offset."""
-    cache, cur = state
-    row_view = slice_row(cache, b)
-    logits, extras = model.verify(params, row_view, tokens, tree,
-                                  backend="ref")
-    k1, v1 = extras["tree_kv"]                       # (L, 1, C, Hkv, hd)
-    cache = write_row_at(cache, b, k1[:, 0], v1[:, 0],
-                         row_view.kv.pos[0], n_valid)
-    last = greedy(jnp.take(logits[0], n_valid - 1, axis=0))
-    return (cache, cur.at[b].set(last)), last
+class DecodeEngine(_PagedPoolMixin):
+    """ONE serving engine for every decode strategy.
 
+    ``strategy`` picks what a step does (``DecodeStrategy.sequential()`` /
+    ``DecodeStrategy.medusa(tree_spec)``); ``heads`` are required exactly
+    when the strategy drafts.  ``chunk`` = K steps fused into one device
+    call via ``lax.scan``; K=1 degenerates to the per-step host-synced
+    loop.  ``paged=True`` swaps the bank's dense per-row KV for the shared
+    page pool (``pool_pages`` total; default ``B * ceil(max_len /
+    page_size)``, the dense-equivalent capacity — shrink it to serve a
+    larger bank at fixed memory).
 
-def _extend_spec_row(model, params, state, b, tokens, n_valid, tree):
-    """Spec-engine chunked-prefill piece: as ``_extend_seq_row`` plus the
-    drafting carry — ``cur_token``/``hidden`` track the last REAL position
-    so the final piece leaves the row exactly as ``spec_prefill`` would."""
-    row_view = slice_row(state.cache, b)
-    logits, extras = model.verify(params, row_view, tokens, tree,
-                                  backend="ref")
-    k1, v1 = extras["tree_kv"]
-    cache = write_row_at(state.cache, b, k1[:, 0], v1[:, 0],
-                         row_view.kv.pos[0], n_valid)
-    last = greedy(jnp.take(logits[0], n_valid - 1, axis=0))
-    hid = jnp.take(extras["hidden"][0], n_valid - 1, axis=0)
-    return SpecState(cache=cache,
-                     cur_token=state.cur_token.at[b].set(last),
-                     hidden=state.hidden.at[b].set(hid)), last
+    Runtime strategy switching: ``set_strategy`` swaps the strategy between
+    chunks (same draft kind only — the state carry differs); same-shape
+    strategies reuse the compiled scans.  ``register_strategies`` arms a
+    candidate set for the scheduler's adaptive mode and ratchets the paged
+    reservation overshoot to the deepest candidate.  ``time_step`` measures
+    one compiled step — ARCA's measured time source."""
 
-
-class BatchEngine(_PagedPoolMixin):
-    """Uniform-length batched prefill + chunked decode (Sequential baseline).
-
-    ``chunk`` = K decode steps fused into one device call via ``lax.scan``;
-    K=1 degenerates to the per-step host-synced loop (the old behaviour).
-
-    ``paged=True`` swaps the bank's dense per-row KV for the shared page
-    pool (``pool_pages`` total; default ``B * ceil(max_len / page_size)``,
-    the dense-equivalent capacity — shrink it to serve a larger bank at
-    fixed memory).
-    """
-
-    _overshoot = 1        # decode writes 1 slot past the last emitted token
-    _extend_row = staticmethod(_extend_seq_row)      # chunked-prefill piece
-
-    def __init__(self, model, params, *, max_len=512, window=0,
-                 backend="ref", chunk=8, paged=False, page_size=16,
-                 pool_pages=None):
-        self.model, self.params = model, params
+    def __init__(self, model, params, *, strategy: Optional[DecodeStrategy]
+                 = None, heads=None, max_len=512, window=0, backend="ref",
+                 chunk=8, paged=False, page_size=16, pool_pages=None):
+        if strategy is None:
+            if heads is not None:
+                raise ValueError("an engine with draft heads needs an "
+                                 "explicit DecodeStrategy.medusa(tree_spec)")
+            strategy = DecodeStrategy.sequential()
+        if (strategy.draft == "medusa") != (heads is not None):
+            raise ValueError(f"strategy draft {strategy.draft!r} "
+                             f"{'requires' if strategy.draft == 'medusa' else 'forbids'} "
+                             "draft heads")
+        self.model, self.params, self.heads = model, params, heads
+        self.strategy = strategy
+        self._registered: Dict[int, DecodeStrategy] = {}
+        self._registered_depth = 0
         self.max_len, self.window = max_len, window
         self.backend, self.chunk = backend, chunk
         self._paged_init(paged=paged, page_size=page_size,
                          pool_pages=pool_pages)
         self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, max_len=max_len, window=window))
+            lambda p, h, b: _prefill_state(model, p, h, b, max_len=max_len,
+                                           window=window))
         self._chunks = {}           # K -> jitted K-step scan
         # state-threading jits donate their carried state: the cache (one
         # large pool when paged) is aliased in place, never copied
-        self._insert = jax.jit(_insert_seq_row, donate_argnums=(0,))
-        self._reset = jax.jit(_reset_seq_rows, donate_argnums=(0,))
+        self._insert = jax.jit(_insert_row, donate_argnums=(0,))
+        self._reset = jax.jit(_reset_state_rows, donate_argnums=(0,))
         # fused admission: B=1 prefill + row splice in ONE device call (a
         # per-request dispatch on the scheduler's hot path)
         self._admit = jax.jit(
-            lambda p, st, b, bt: _admit_seq_row(model, p, st, b, bt,
-                                                max_len=max_len,
-                                                window=window),
-            donate_argnums=(1,))
+            lambda p, h, st, b, bt: _admit_row(model, p, h, st, b, bt,
+                                               max_len=max_len,
+                                               window=window),
+            donate_argnums=(2,))
         if paged:
             # prompt-sized dense prefill: paginated right after (generate)
             # or spliced into the paged bank (admission) — never a full
             # (B, max_len) dense transient
             self._prefill_prompt = jax.jit(
-                lambda p, b: model.prefill(p, b, max_len=1, window=0))
+                lambda p, h, b: _prefill_state(model, p, h, b, max_len=1,
+                                               window=0))
             self._prefills_paged = {}    # n_pages -> fused prefill+paginate
             self._admit_paged = jax.jit(
-                lambda p, st, b, bt, pages: _admit_seq_row_paged(
-                    model, p, st, b, bt, pages),
-                donate_argnums=(1,))
-            self._insert_paged = jax.jit(_insert_seq_row_paged,
-                                         donate_argnums=(0,))
-
-    def _prefill_paged_fn(self, n_total: int):
-        if n_total not in self._prefills_paged:
-            model, ps = self.model, self.page_size
-
-            def run(p, b, tables):
-                logits, _, cache = model.prefill(p, b, max_len=1, window=0)
-                return logits, paginate_cache(cache, tables, page_size=ps,
-                                              n_pages=n_total)
-
-            self._prefills_paged[n_total] = jax.jit(run)
-        return self._prefills_paged[n_total]
-
-    def _chunk_fn(self, K: int):
-        if K not in self._chunks:
-            model, backend = self.model, self.backend
-
-            def run(p, cache, cur, done, rem, eos):
-                def body(carry, _):
-                    cache, cur, done, rem = carry
-                    done = done | (rem <= 0) | (capacity_left(cache) < 1)
-                    kv0 = cache.kv
-                    lg, cache = model.decode(p, cache, cur[:, None],
-                                             backend=backend)
-                    if kv0 is not None:
-                        # the sequential body decodes EVERY row, done ones
-                        # included — restore their key_pos/pos so a done
-                        # row's KV bookkeeping is frozen (its garbage k/v
-                        # write stays invisible at key_pos -1 and is
-                        # overwritten by the slot's next real write).
-                        # Without this a mid-chunked-prefill row (done-
-                        # masked while its prompt pieces land) would have
-                        # its piece offsets corrupted between pieces.
-                        kv = cache.kv
-                        cache = dataclasses.replace(
-                            cache, kv=dataclasses.replace(
-                                kv,
-                                key_pos=jnp.where(done[:, None], kv0.key_pos,
-                                                  kv.key_pos),
-                                pos=jnp.where(done, kv0.pos, kv.pos)))
-                    nxt = greedy(lg[:, 0])
-                    nxt = jnp.where(done, eos, nxt)     # pad finished seqs
-                    emit = ~done
-                    rem = rem - emit.astype(jnp.int32)
-                    done = done | (nxt == eos)
-                    return (cache, nxt, done, rem), (nxt, emit)
-
-                (cache, cur, done, rem), (toks, emit) = jax.lax.scan(
-                    body, (cache, cur, done, rem), None, length=K)
-                return cache, cur, done, rem, toks, emit  # toks/emit: (K, B)
-
-            # donate the scan carry (cache/cur/done/rem): the cache — ONE
-            # pool-sized buffer in paged mode — is updated in place every
-            # chunk instead of being copied (ROADMAP donation item)
-            self._chunks[K] = jax.jit(run, donate_argnums=(1, 2, 3, 4))
-        return self._chunks[K]
-
-    def generate(self, batch, n_tokens, *, eos: Optional[int] = None,
-                 chunk: Optional[int] = None):
-        """``n_tokens``: int or (B,) per-sequence budgets.  Returns
-        ``(out (B, max_budget), stats)`` — rows past their own budget /
-        EOS / capacity freeze are padded with ``eos`` (-1 if None); real
-        per-sequence counts are in ``stats["n_emitted"]``."""
-        K = chunk or self.chunk
-        eos_val = _eos_scalar(eos)
-        B = int(batch["tokens"].shape[0])
-        budget = _budget(n_tokens, B)
-        if self.paged:
-            tables, n_total = self._reserve_tables(batch, budget)
-            logits, cache = self._prefill_paged_fn(n_total)(
-                self.params, batch, tables)
-        else:
-            logits, _, cache = self._prefill(self.params, batch)
-        cur = greedy(logits[:, -1])
-        n_max = int(budget.max())
-        done = cur == eos_val
-        rem = jnp.asarray(budget - 1)
-        done_np, rem_np = np.asarray(done), budget - 1
-        out = [np.asarray(cur)]
-        emits = []
-        times = []
-        while np.any(~done_np & (rem_np > 0)):
-            need = int(rem_np[~done_np & (rem_np > 0)].max())
-            t0 = time.perf_counter()
-            cache, cur, done, rem, toks, emit = self._chunk_fn(
-                _pow2_chunk(K, need))(
-                self.params, cache, cur, done, rem, eos_val)
-            toks = np.asarray(toks)              # ONE host sync per chunk
-            emit_np = np.asarray(emit)
-            done_np, rem_np = np.asarray(done), np.asarray(rem)
-            times.append(time.perf_counter() - t0)
-            out.extend(toks[i] for i in range(toks.shape[0]))
-            emits.extend(emit_np[i] for i in range(emit_np.shape[0]))
-        n_emitted = np.ones((B,), np.int64)      # prefill's first token
-        if emits:
-            n_emitted += np.stack(emits, axis=0).sum(axis=0)
-        res = np.full((B, n_max), int(eos_val), np.int32)
-        out = np.stack(out, axis=1)
-        w = min(out.shape[1], n_max)
-        res[:, :w] = out[:, :w]
-        stats = {"step_times": times, "chunk": K,
-                 "n_emitted": n_emitted.astype(np.int32),
-                 "emitted_total": int(n_emitted.sum())}
-        return res, stats
-
-    # ---- continuous-batching slot protocol (runtime/scheduler.py) --------
-    def sched_prefill(self, batch):
-        """B=1 prefill -> opaque row state (cache, cur).  Paged engines
-        prefill at prompt size (the dense row is a splice source, not a
-        resident)."""
-        if self.paged:
-            logits, _, cache = self._prefill_prompt(self.params, batch)
-        else:
-            logits, _, cache = self._prefill(self.params, batch)
-        return (cache, greedy(logits[:, -1]))
-
-    @staticmethod
-    def sched_first(row):
-        return int(np.asarray(row[1])[0])
-
-    def sched_blank(self, row, batch):
-        cache, cur = row
-        if self.paged:
-            n_total = self.pool_pages or batch * self.max_pages
-            self._alloc = PageAllocator(n_total)
-            self._row_pages = {}
-            bank = blank_paged_rows(cache, batch, page_size=self.page_size,
-                                    n_pages=n_total, max_len=self.max_len)
-            return (bank, jnp.repeat(cur, batch, axis=0))
-        return (tile_rows(cache, batch), jnp.repeat(cur, batch, axis=0))
-
-    def sched_insert(self, state, b, row, *, prompt_len=None, n_tokens=None):
-        if self.paged:
-            pages = self._sched_pages(b, prompt_len, n_tokens)
-            return self._insert_paged(state, jnp.asarray(b, jnp.int32), row,
-                                      pages)
-        return self._insert(state, jnp.asarray(b, jnp.int32), row)
-
-    def sched_admit(self, state, b, batch, *, n_tokens=None,
-                    reserve_len=None):
-        """Fused prefill+insert; returns (state, first-token device scalar —
-        unsynced, the caller materializes it lazily).  ``reserve_len``
-        overrides the page reservation's prompt length — chunked prefill
-        admits only the FIRST piece here but must reserve for the whole
-        prompt."""
-        if self.paged:
-            plen = reserve_len if reserve_len is not None \
-                else _prompt_len(batch)
-            pages = self._sched_pages(b, plen, n_tokens)
-            return self._admit_paged(self.params, state,
-                                     jnp.asarray(b, jnp.int32), batch, pages)
-        return self._admit(self.params, state, jnp.asarray(b, jnp.int32),
-                           batch)
-
-    def sched_reset(self, state, b):
-        mask = np.zeros((int(state[1].shape[0]),), bool)
-        mask[b] = True
-        return self._reset(state, mask)
-
-    def sched_step(self, state, done, rem, K, eos_val):
-        cache, cur = state
-        cache, cur, done, rem, toks, emit = self._chunk_fn(K)(
-            self.params, cache, cur, done, rem, eos_val)
-        return (cache, cur), done, rem, (toks, emit)
-
-    @staticmethod
-    def sched_emitted(raw):
-        toks, emit = (np.asarray(x) for x in raw)
-        K, B = toks.shape
-        return [[int(toks[k, b]) for k in range(K) if emit[k, b]]
-                for b in range(B)]
-
-
-def _insert_seq_row(state, b, row):
-    cache, cur = state
-    rcache, rcur = row
-    return (insert_rows(cache, b, rcache), cur.at[b].set(rcur[0]))
-
-
-def _insert_seq_row_paged(state, b, row, pages):
-    cache, cur = state
-    rcache, rcur = row
-    return (insert_rows(cache, b, rcache, pages=pages),
-            cur.at[b].set(rcur[0]))
-
-
-def _admit_seq_row(model, params, state, b, batch, *, max_len, window):
-    logits, _, cache = model.prefill(params, batch, max_len=max_len,
-                                     window=window)
-    cur = greedy(logits[:, -1])
-    return _insert_seq_row(state, b, (cache, cur)), cur[0]
-
-
-def _admit_seq_row_paged(model, params, state, b, batch, pages):
-    logits, _, cache = model.prefill(params, batch, max_len=1, window=0)
-    cur = greedy(logits[:, -1])
-    return _insert_seq_row_paged(state, b, (cache, cur), pages), cur[0]
-
-
-def _reset_seq_rows(state, mask):
-    cache, cur = state
-    # a freed slot must be fully inert, carry included: ``cur`` seeds the
-    # next chunk's decode input, so a stale token would feed the dead
-    # request's suffix back through the (masked) row until re-admission
-    return (reset_rows(cache, mask),
-            jnp.where(mask, jnp.zeros_like(cur), cur))
-
-
-def _reset_spec_rows(state, mask):
-    # cache reset alone is NOT enough: a freed speculative slot used to
-    # keep its stale ``cur_token``/``hidden``, so the evicted request's
-    # last state kept driving (masked) drafts — and once freed pages are
-    # recycled immediately, a stale carry is one masking bug away from
-    # leaking into a neighbor.  Clear the whole row.
-    mask = jnp.asarray(mask)
-    return type(state)(cache=reset_rows(state.cache, mask),
-                       cur_token=jnp.where(mask,
-                                           jnp.zeros_like(state.cur_token),
-                                           state.cur_token),
-                       hidden=jnp.where(mask[:, None],
-                                        jnp.zeros_like(state.hidden),
-                                        state.hidden))
-
-
-class SpeculativeEngine(_PagedPoolMixin):
-    """Ghidorah speculative serving: draft -> tree-verify -> accept, batched
-    over sequences and chunked over steps (K speculative steps per device
-    call, one host transfer per chunk).
-
-    ``paged=True`` as in ``BatchEngine``; the per-row reservation carries a
-    ``max_depth`` overshoot because one speculative step can commit a full
-    accepted chain past the budget.
-    """
-
-    _extend_row = staticmethod(_extend_spec_row)     # chunked-prefill piece
-
-    def __init__(self, model, heads, params, tree_spec: TreeSpec, *,
-                 max_len=512, window=0, backend="ref", chunk=8, paged=False,
-                 page_size=16, pool_pages=None):
-        self.model, self.heads, self.params = model, heads, params
-        self.tree = Tree.from_spec(tree_spec)
-        self.max_depth = tree_spec.max_depth
-        self.max_len, self.window = max_len, window
-        self.backend, self.chunk = backend, chunk
-        self._paged_init(paged=paged, page_size=page_size,
-                         pool_pages=pool_pages)
-        # the tree is a jit ARGUMENT of the chunk fns (registered pytree):
-        # same-shape trees share one compiled scan — ARCA sweeps many
-        # same-width candidates
-        self._prefill = jax.jit(
-            lambda p, h, b: spec_prefill(model, p, h, b,
-                                         max_len=max_len, window=window))
-        self._chunks = {}           # K -> jitted K-step scan
-        self._insert = jax.jit(_insert_spec_row, donate_argnums=(0,))
-        self._reset = jax.jit(_reset_spec_rows, donate_argnums=(0,))
-        self._admit = jax.jit(
-            lambda p, h, st, b, bt: _admit_spec_row(model, p, h, st, b, bt,
-                                                    max_len=max_len,
-                                                    window=window),
-            donate_argnums=(2,))
-        if paged:
-            self._prefill_prompt = jax.jit(
-                lambda p, h, b: spec_prefill(model, p, h, b, max_len=1,
-                                             window=0))
-            self._prefills_paged = {}    # n_pages -> fused prefill+paginate
-            self._admit_paged = jax.jit(
-                lambda p, h, st, b, bt, pages: _admit_spec_row_paged(
+                lambda p, h, st, b, bt, pages: _admit_row_paged(
                     model, p, h, st, b, bt, pages),
                 donate_argnums=(2,))
-            self._insert_paged = jax.jit(_insert_spec_row_paged,
-                                         donate_argnums=(0,))
+            self._insert_paged = jax.jit(
+                lambda st, b, row, pages: _insert_row(st, b, row,
+                                                      pages=pages),
+                donate_argnums=(0,))
+
+    # ---- strategy axis ---------------------------------------------------
+    @property
+    def tree(self) -> Tree:
+        return self.strategy.tree
 
     @property
-    def _overshoot(self):
+    def max_depth(self) -> int:
+        return self.strategy.tree.max_depth
+
+    @property
+    def _overshoot(self) -> int:
         # worst case slots written past the budget: one full accepted chain
-        return self.max_depth
+        # (1 for sequential); with runtime switching armed, the deepest
+        # registered candidate (a switch must never outgrow a reservation)
+        return max(self.strategy.tree.max_depth, self._registered_depth)
 
-    def _prefill_paged_fn(self, n_total: int):
-        if n_total not in self._prefills_paged:
-            model, ps = self.model, self.page_size
+    def strategy_for(self, spec: TreeSpec) -> DecodeStrategy:
+        """Build a DecodeStrategy of THIS engine's draft kind from a tree
+        spec (the state carry differs across draft kinds, so an engine can
+        only ever run strategies of its own kind)."""
+        if self.heads is None:
+            if spec.width != 1:
+                raise ValueError("a draft-free engine can only run the "
+                                 "degenerate width-1 strategy")
+            return DecodeStrategy.sequential()
+        return DecodeStrategy.medusa(spec)
 
-            def run(p, h, b, tables):
-                st = spec_prefill(model, p, h, b, max_len=1, window=0)
-                return SpecState(
-                    cache=paginate_cache(st.cache, tables, page_size=ps,
-                                         n_pages=n_total),
-                    cur_token=st.cur_token, hidden=st.hidden)
-
-            self._prefills_paged[n_total] = jax.jit(run)
-        return self._prefills_paged[n_total]
+    def set_strategy(self, strategy) -> None:
+        """Swap the decode strategy WITHOUT dropping compiled steps (the
+        strategy is a jit argument: same-shape strategies share one
+        compiled scan).  Accepts a ``DecodeStrategy`` or a ``TreeSpec``;
+        the draft kind must match the engine's.  Safe only at chunk
+        boundaries — the scheduler's adaptive mode calls it there."""
+        if isinstance(strategy, TreeSpec):
+            strategy = self.strategy_for(strategy)
+        if strategy.draft != self.strategy.draft:
+            raise ValueError(f"cannot switch draft kind "
+                             f"{self.strategy.draft!r} -> {strategy.draft!r}"
+                             " (the state carry differs)")
+        self.strategy = strategy
 
     def set_tree(self, tree_spec: TreeSpec) -> None:
-        """Swap the verification tree WITHOUT dropping compiled steps (used
-        by ``measure_acceptance`` across ARCA's candidate trees)."""
-        self.tree = Tree.from_spec(tree_spec)
-        self.max_depth = tree_spec.max_depth
+        """Legacy alias of ``set_strategy`` (ARCA's ``measure_acceptance``
+        swaps candidate trees through it)."""
+        self.set_strategy(tree_spec)
 
+    def register_strategies(self, specs) -> Dict[int, DecodeStrategy]:
+        """Arm a candidate set for runtime switching: builds the
+        DecodeStrategy per width ONCE (switches then reuse the same
+        pytrees) and ratchets the paged reservation overshoot to the
+        deepest candidate so a mid-request switch can never outgrow a
+        row's page reservation.  ``specs``: {width: TreeSpec}."""
+        self._registered = {int(w): self.strategy_for(sp)
+                            for w, sp in specs.items()}
+        self._registered_depth = max(
+            [s.tree.max_depth for s in self._registered.values()],
+            default=0)
+        return self._registered
+
+    # ---- the ONE chunk driver --------------------------------------------
     def _chunk_fn(self, K: int):
         if K not in self._chunks:
             model, backend = self.model, self.backend
 
-            def run(p, h, t, state, done, rem, eos):
+            def run(p, h, strat, state, done, rem, eos):
                 def body(carry, _):
                     state, done, rem = carry
                     # capacity guard BEFORE the step: a commit may write up
-                    # to max_depth tokens, so freeze once the ring cannot
-                    # take a worst-case chain without wrapping
+                    # to max_depth slots (1 for sequential), so freeze once
+                    # the ring cannot take a worst case without wrapping
                     done = done | (rem <= 0) | \
-                        (capacity_left(state.cache) < t.max_depth)
+                        (capacity_left(state.cache) < strat.tree.max_depth)
                     active = ~done
-                    state, emitted, n = spec_step(model, p, h, t, state,
-                                                  backend=backend,
-                                                  active=active)
+                    if strat.draft == "none":       # static: strategy meta
+                        state, emitted, n = _seq_step(model, p, state,
+                                                      backend=backend,
+                                                      active=active)
+                    else:
+                        state, emitted, n = spec_step(model, p, h,
+                                                      strat.tree, state,
+                                                      backend=backend,
+                                                      active=active)
                     idx = jnp.arange(emitted.shape[1])[None, :]
                     valid = idx < n[:, None]
                     is_eos = valid & (emitted == eos)
@@ -642,12 +552,29 @@ class SpeculativeEngine(_PagedPoolMixin):
             self._chunks[K] = jax.jit(run, donate_argnums=(3, 4, 5))
         return self._chunks[K]
 
+    def _prefill_paged_fn(self, n_total: int):
+        if n_total not in self._prefills_paged:
+            model, ps = self.model, self.page_size
+
+            def run(p, h, b, tables):
+                st = _prefill_state(model, p, h, b, max_len=1, window=0)
+                return type(st)(
+                    cache=paginate_cache(st.cache, tables, page_size=ps,
+                                         n_pages=n_total),
+                    cur_token=st.cur_token, hidden=st.hidden)
+
+            self._prefills_paged[n_total] = jax.jit(run)
+        return self._prefills_paged[n_total]
+
+    # ---- batch generation ------------------------------------------------
     def generate(self, batch, n_tokens, *, eos: Optional[int] = None,
                  chunk: Optional[int] = None):
-        """``n_tokens``: int or (B,) per-sequence budgets.  B=1 returns a
-        1-D token array, B>1 a (B, max_budget) array; rows past their
-        budget / EOS / capacity freeze pad with ``eos`` (-1 if None) and
-        ``stats["n_emitted"]`` has the real per-sequence counts."""
+        """``n_tokens``: int or (B,) per-sequence budgets.  Returns
+        ``(out, stats)``; rows past their budget / EOS / capacity freeze
+        pad with ``eos`` (-1 if None) and ``stats["n_emitted"]`` has the
+        real per-sequence counts.  Drafted engines return a 1-D token
+        array at B=1 (legacy ``SpeculativeEngine`` shape); the sequential
+        strategy always returns ``(B, max_budget)``."""
         K = chunk or self.chunk
         eos_val = _eos_scalar(eos)
         B = int(batch["tokens"].shape[0])
@@ -673,7 +600,8 @@ class SpeculativeEngine(_PagedPoolMixin):
             t0 = time.perf_counter()
             state, done, rem, toks, ns = self._chunk_fn(
                 _pow2_chunk(K, need))(
-                self.params, self.heads, self.tree, state, done, rem, eos_val)
+                self.params, self.heads, self.strategy, state, done, rem,
+                eos_val)
             toks_np = np.asarray(toks)           # ONE host sync per chunk
             ns_np = np.asarray(ns)
             done_np, rem_np = np.asarray(done), np.asarray(rem)
@@ -698,14 +626,53 @@ class SpeculativeEngine(_PagedPoolMixin):
         for b in range(B):
             seq = np.asarray(outs[b][:budget[b]], np.int32)
             out[b, :len(seq)] = seq
-        if B == 1:
+        if B == 1 and self.strategy.draft == "medusa":
             return out[0], stats
         return out, stats
 
+    # ---- measured step time (ARCA's time source) -------------------------
+    def time_step(self, strategy: Optional[DecodeStrategy] = None, *,
+                  batch: int = 1, prompt_len: int = 16, reps: int = 3,
+                  chunk: Optional[int] = None) -> float:
+        """Best-of-``reps`` wall time of ONE decode step under ``strategy``
+        (default: the current one), measured through the engine's COMPILED
+        chunk scan on a dummy prompt — the strategy is a jit argument, so
+        the timed function is exactly the deployed one.  Timed at the
+        serving chunk cadence (``chunk`` steps per dispatch, divided out);
+        feeds ``core/arca.py profile_engine`` -> ``choose_strategy``."""
+        strategy = strategy or self.strategy
+        K = chunk or self.chunk
+        bd = {"tokens": jnp.zeros((batch, prompt_len), jnp.int32)}
+        if self.paged:
+            budget = np.full((batch,), self.max_len, np.int64)
+            tables, n_total = self._reserve_tables(bd, budget)
+            state = self._prefill_paged_fn(n_total)(
+                self.params, self.heads, bd, tables)
+        else:
+            state = self._prefill(self.params, self.heads, bd)
+        done = jnp.zeros((batch,), bool)
+        rem = jnp.full((batch,), 1 << 30, jnp.int32)
+        eos = _eos_scalar(None)
+        fn = self._chunk_fn(K)
+
+        def step(st, dn, rm):
+            return fn(self.params, self.heads, strategy, st, dn, rm, eos)
+
+        # warm-up compiles; the donated carry is rebound from the outputs
+        state, done, rem, toks, _ = step(state, done, rem)
+        jax.block_until_ready(toks)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            state, done, rem, toks, _ = step(state, done, rem)
+            jax.block_until_ready(toks)
+            best = min(best, time.perf_counter() - t0)
+        return best / K
+
     # ---- continuous-batching slot protocol (runtime/scheduler.py) --------
     def sched_prefill(self, batch):
-        """B=1 prefill -> opaque row state (a SpecState).  Paged engines
-        prefill at prompt size (the dense row is a splice source)."""
+        """B=1 prefill -> opaque row state.  Paged engines prefill at
+        prompt size (the dense row is a splice source, not a resident)."""
         if self.paged:
             return self._prefill_prompt(self.params, self.heads, batch)
         return self._prefill(self.params, self.heads, batch)
@@ -724,9 +691,11 @@ class SpeculativeEngine(_PagedPoolMixin):
                                     n_pages=n_total, max_len=self.max_len)
         else:
             bank = tile_rows(row.cache, batch)
+        hid = None if row.hidden is None else \
+            jnp.repeat(row.hidden, batch, axis=0)
         return type(row)(cache=bank,
                          cur_token=jnp.repeat(row.cur_token, batch, axis=0),
-                         hidden=jnp.repeat(row.hidden, batch, axis=0))
+                         hidden=hid)
 
     def sched_insert(self, state, b, row, *, prompt_len=None, n_tokens=None):
         if self.paged:
@@ -738,9 +707,10 @@ class SpeculativeEngine(_PagedPoolMixin):
     def sched_admit(self, state, b, batch, *, n_tokens=None,
                     reserve_len=None):
         """Fused prefill+insert; returns (state, first-token device scalar —
-        unsynced, the caller materializes it lazily).  ``reserve_len``: see
-        ``BatchEngine.sched_admit`` (chunked prefill reserves for the whole
-        prompt while inserting only its first piece)."""
+        unsynced, the caller materializes it lazily).  ``reserve_len``
+        overrides the page reservation's prompt length — chunked prefill
+        admits only the FIRST piece here but must reserve for the whole
+        prompt."""
         if self.paged:
             plen = reserve_len if reserve_len is not None \
                 else _prompt_len(batch)
@@ -757,7 +727,8 @@ class SpeculativeEngine(_PagedPoolMixin):
 
     def sched_step(self, state, done, rem, K, eos_val):
         state, done, rem, toks, ns = self._chunk_fn(K)(
-            self.params, self.heads, self.tree, state, done, rem, eos_val)
+            self.params, self.heads, self.strategy, state, done, rem,
+            eos_val)
         return state, done, rem, (toks, ns)
 
     @staticmethod
@@ -773,29 +744,37 @@ class SpeculativeEngine(_PagedPoolMixin):
         return out
 
 
-def _insert_spec_row(state, b, row):
-    return type(state)(cache=insert_rows(state.cache, b, row.cache),
-                       cur_token=state.cur_token.at[b].set(row.cur_token[0]),
-                       hidden=state.hidden.at[b].set(row.hidden[0]))
+# ===========================================================================
+# legacy entry points: thin constructor aliases over DecodeEngine
+# ===========================================================================
+class BatchEngine(DecodeEngine):
+    """Sequential baseline = ``DecodeEngine`` pinned to the degenerate
+    ``DecodeStrategy.sequential()`` (chain_spec(width=1), no draft).
+    Output- and protocol-identical to the pre-unification BatchEngine."""
+
+    def __init__(self, model, params, *, max_len=512, window=0,
+                 backend="ref", chunk=8, paged=False, page_size=16,
+                 pool_pages=None):
+        super().__init__(model, params,
+                         strategy=DecodeStrategy.sequential(),
+                         max_len=max_len, window=window, backend=backend,
+                         chunk=chunk, paged=paged, page_size=page_size,
+                         pool_pages=pool_pages)
 
 
-def _insert_spec_row_paged(state, b, row, pages):
-    return type(state)(cache=insert_rows(state.cache, b, row.cache,
-                                         pages=pages),
-                       cur_token=state.cur_token.at[b].set(row.cur_token[0]),
-                       hidden=state.hidden.at[b].set(row.hidden[0]))
+class SpeculativeEngine(DecodeEngine):
+    """Ghidorah speculative serving = ``DecodeEngine`` with a Medusa-draft
+    strategy built from ``tree_spec``.  Output- and protocol-identical to
+    the pre-unification SpeculativeEngine."""
 
-
-def _admit_spec_row(model, params, heads, state, b, batch, *, max_len,
-                    window):
-    row = spec_prefill(model, params, heads, batch, max_len=max_len,
-                       window=window)
-    return _insert_spec_row(state, b, row), row.cur_token[0]
-
-
-def _admit_spec_row_paged(model, params, heads, state, b, batch, pages):
-    row = spec_prefill(model, params, heads, batch, max_len=1, window=0)
-    return _insert_spec_row_paged(state, b, row, pages), row.cur_token[0]
+    def __init__(self, model, heads, params, tree_spec: TreeSpec, *,
+                 max_len=512, window=0, backend="ref", chunk=8, paged=False,
+                 page_size=16, pool_pages=None):
+        super().__init__(model, params, heads=heads,
+                         strategy=DecodeStrategy.medusa(tree_spec),
+                         max_len=max_len, window=window, backend=backend,
+                         chunk=chunk, paged=paged, page_size=page_size,
+                         pool_pages=pool_pages)
 
 
 def _stats(accepts, times):
@@ -809,14 +788,14 @@ def _stats(accepts, times):
 
 def measure_acceptance(model, heads, params, tree_spec: TreeSpec, prompts,
                        n_tokens=64, *, max_len=512,
-                       engine: Optional[SpeculativeEngine] = None) -> float:
+                       engine: Optional[DecodeEngine] = None) -> float:
     """Empirical acceptance length over a prompt set (ARCA's brute-force
     refinement evaluator + Table-I measurement).
 
-    Pass ``engine`` to reuse a constructed ``SpeculativeEngine`` across
-    candidate trees: the tree is swapped via ``set_tree`` and the jitted
-    step is shared for same-shape trees, so ARCA's evaluator does not pay
-    compile time per candidate.
+    Pass ``engine`` to reuse a constructed engine across candidate trees:
+    the strategy is swapped via ``set_tree`` and the jitted step is shared
+    for same-shape trees, so ARCA's evaluator does not pay compile time
+    per candidate.
     """
     if engine is None:
         engine = SpeculativeEngine(model, heads, params, tree_spec,

@@ -68,6 +68,19 @@ Admission policies
   reservations early; same skip-past-deferred rule, same starvation
   caveat with the roles reversed.
 
+``age_limit=N`` (0 = off) bounds SJF/LPT starvation: every boundary an
+ARRIVED request is PASSED OVER — another request admitted past it, or a
+free row left empty because its own reservation could not be funded —
+increments its ``age`` (waiting behind a full bank ages nobody, so
+ordinary saturation never triggers the bound); once ``age >= age_limit``
+the oldest such request is promoted to FIFO-HEAD priority — the
+size-ordered ranking is suspended and, exactly like FIFO, nothing may be
+admitted past the starved request while its reservation cannot be funded
+(skipping past it is what made the starvation unbounded).  A deferred
+request is therefore passed over at most ``age_limit`` times before it
+gets FIFO's own worst case.  FIFO ignores ``age_limit`` (strict arrival
+order cannot starve).
+
 Per-request OUTPUT is policy-independent: a policy only reorders
 admission; decode math is untouched (the fuzz suite pins per-request
 parity with solo B=1 runs across policies).
@@ -95,6 +108,32 @@ longer stalls every resident sequence for a prompt-sized dispatch.  Only
 attention-family engines support it (``engine.sched_chunked_ok``);
 recurrent families and prompts <= N fall back to whole-prompt admission.
 
+Adaptive speculation
+--------------------
+``adaptive=`` arms runtime strategy selection over a ``DecodeEngine``
+bank (measured ARCA, paper §III-C run *online* instead of once at
+startup — the Dovetail observation that the best width moves with the
+workload).  Pass the ``{width: arca.Strategy}`` table that
+``arca.choose_strategy`` returns — ideally with the MEASURED ``time_fn``
+from ``arca.profile_engine`` — or a pre-built ``AdaptiveSpeculation``.
+The scheduler then:
+
+* tracks a windowed EMA of the acceptance length actually observed on the
+  bank (per-step accepted counts from the chunk raw, free rows excluded);
+* at an eviction/admission boundary, rescales every candidate width's
+  ESTIMATED acceptance by the observed/estimated ratio of the active
+  width (width 1 stays exactly 1) and switches the bank's strategy when
+  the ``AL / step_time`` argmax moves (``engine.set_strategy``);
+* logs every switch as a ``("switch", from_width, to_width)`` event and
+  in ``stats["strategy_switches"]``.
+
+Switching is output-neutral: greedy tree verification commits exactly the
+greedy chain whatever the tree, so a mid-request width change alters speed,
+never tokens (the strategy-parity tests pin this).  Candidate strategies
+are registered with the engine up front (``register_strategies``), which
+buckets them for compile-cache reuse and ratchets the paged reservation
+overshoot to the deepest candidate tree.
+
 Arrivals are wall-clock: a request is admissible once ``arrival`` seconds
 (relative to ``serve()`` entry) have elapsed, which is how ``serve.py
 --arrivals poisson`` and ``benchmarks/sched_bench.py`` replay traces.
@@ -120,6 +159,8 @@ class Request:
     tokens: np.ndarray           # (S,) int32 prompt
     n_tokens: int                # generation budget (includes first token)
     arrival: float = 0.0         # seconds after serve() start
+    age: int = 0                 # boundaries this request was passed over
+                                 # (scheduler-managed; fuels age_limit)
 
 
 @dataclasses.dataclass
@@ -182,9 +223,17 @@ def _aggregate(results: Sequence[RequestResult], makespan: float) -> dict:
 # being lost).
 # --------------------------------------------------------------------------
 class AdmissionPolicy:
-    """Protocol + FIFO base: strict arrival order, defer-blocks-the-line."""
+    """Protocol + FIFO base: strict arrival order, defer-blocks-the-line.
+
+    ``age_limit`` (0 = off) is the starvation bound the size-ordered
+    policies honour; FIFO cannot starve and ignores it."""
 
     name = "fifo"
+
+    def __init__(self, age_limit: int = 0):
+        if age_limit < 0:
+            raise ValueError("age_limit must be >= 0")
+        self.age_limit = age_limit
 
     def pick(self, pending: Sequence["Request"], now: float,
              can_admit: Callable, footprint: Callable,
@@ -201,11 +250,23 @@ class _SizeOrderedPolicy(AdmissionPolicy):
     """Shared SJF/LPT machinery: rank ARRIVED requests by footprint and
     admit the best-ranked one the pool can fund — i.e. admission may skip
     past a deferred head-of-line request whenever a differently-sized one
-    fits.  Ties break FIFO (arrival, req_id)."""
+    fits.  Ties break FIFO (arrival, req_id).
+
+    Aging: a request whose ``age`` (boundaries it was passed over,
+    scheduler-maintained) reaches ``age_limit`` is promoted to FIFO-head
+    priority — the ranking is suspended and, like FIFO, NOTHING may be
+    admitted past the starved request while it cannot be funded; skipping
+    past it is exactly what made the starvation unbounded."""
 
     reverse = False
 
     def pick(self, pending, now, can_admit, footprint, bootstrap):
+        if self.age_limit:
+            aged = [i for i, r in enumerate(pending)
+                    if r.arrival <= now and r.age >= self.age_limit]
+            if aged:                  # oldest starved request, FIFO order
+                i = aged[0]
+                return i if (bootstrap or can_admit(pending[i])) else None
         sign = -1 if self.reverse else 1
         ranked = sorted(
             (sign * footprint(r), r.arrival, r.req_id, i)
@@ -218,7 +279,8 @@ class _SizeOrderedPolicy(AdmissionPolicy):
 
 class SJFPolicy(_SizeOrderedPolicy):
     """Shortest reserved footprint first.  Starvation-prone under
-    sustained small-request load (see module docstring)."""
+    sustained small-request load (see module docstring) unless
+    ``age_limit`` bounds the deferral."""
     name = "sjf"
 
 
@@ -231,15 +293,125 @@ class LPTPolicy(_SizeOrderedPolicy):
 POLICIES = {"fifo": AdmissionPolicy, "sjf": SJFPolicy, "lpt": LPTPolicy}
 
 
-def get_policy(policy) -> AdmissionPolicy:
-    """Resolve a policy name or pass through an AdmissionPolicy instance."""
+def get_policy(policy, age_limit: int = 0) -> AdmissionPolicy:
+    """Resolve a policy name (constructed with ``age_limit``) or pass
+    through an AdmissionPolicy instance (which keeps its own)."""
     if isinstance(policy, str):
         try:
-            return POLICIES[policy]()
+            return POLICIES[policy](age_limit=age_limit)
         except KeyError:
             raise ValueError(f"unknown admission policy {policy!r} "
                              f"(have: {sorted(POLICIES)})") from None
     return policy
+
+
+# --------------------------------------------------------------------------
+# Adaptive speculation: measured-ARCA width selection at runtime.
+# --------------------------------------------------------------------------
+class AdaptiveSpeculation:
+    """Runtime decode-strategy selection for a ``DecodeEngine`` bank.
+
+    Wraps the ``{width: arca.Strategy}`` table ``choose_strategy`` returns
+    — each entry carries the candidate tree, its ESTIMATED acceptance
+    length (calibration accuracies) and a step time, ideally MEASURED via
+    ``arca.profile_engine`` — plus a windowed EMA of the acceptance length
+    actually observed on the bank.
+
+    The observed signal only exists for the ACTIVE width, so candidate ALs
+    are compared by rescaling every width's estimate with the
+    observed/estimated ratio of the active width, anchored so width 1
+    stays exactly AL=1 (``al_hat(w) = 1 + (est(w) - 1) * ratio``).  The
+    ratio is only updated while a width > 1 is active — width 1 observes
+    AL == 1 by construction and carries no draft-quality information, so
+    while it is active the ratio instead RELAXES toward the calibration
+    prior at rate ``probe`` per boundary: width 1 is never absorbing, the
+    bank periodically re-probes the best drafted width and drops back if
+    the observation still disagrees.
+
+    ``pick`` (called by the scheduler at an eviction/admission boundary)
+    returns the new width when the ``al_hat / step_time`` argmax moved,
+    else None.  ``switch_every`` throttles how often a switch may happen;
+    ``min_steps`` delays the first observation-driven switch until the
+    EMA has seen that many accepted steps.  A switch resets the
+    observation window (the EMA is read against the ACTIVE width's
+    estimate, so stale cross-width samples would corrupt the ratio and
+    flap the argmax); the normalized ratio itself persists across
+    switches.
+    """
+
+    def __init__(self, strategies, *, ema: float = 0.3,
+                 switch_every: int = 2, min_steps: int = 8,
+                 probe: float = 0.05):
+        if not strategies:
+            raise ValueError("adaptive mode needs candidate strategies")
+        self.strategies = {int(w): s for w, s in strategies.items()}
+        self.ema, self.switch_every = ema, switch_every
+        self.min_steps = min_steps
+        self.probe = probe
+        self.reset()
+
+    def reset(self) -> None:
+        """Back to the calibration prior: observation EMA, ratio, counters
+        and the switch log all cleared.  ``serve()`` calls this on entry so
+        a reused controller never carries one stream's observations (or
+        switch events) into the next run's decisions and stats."""
+        self.al_obs: Optional[float] = None   # EMA of observed AL
+        self.ratio = 1.0                      # observed/estimated, anchored
+        self.steps_seen = 0
+        self.boundaries = 0
+        self.switches: List[tuple] = []       # (boundary, from_w, to_w)
+
+    def observe(self, ns, width: int) -> None:
+        """Feed one chunk's per-step accepted counts (``ns (K, B)``; zeros
+        = masked/free rows, dropped).  Width-1 chunks carry no signal."""
+        if width <= 1 or width not in self.strategies:
+            return
+        ns = np.asarray(ns).ravel()
+        ns = ns[ns > 0]
+        if not ns.size:
+            return
+        al = float(ns.mean())
+        self.al_obs = al if self.al_obs is None else \
+            (1.0 - self.ema) * self.al_obs + self.ema * al
+        est = self.strategies[width].acceptance
+        self.ratio = max(self.al_obs - 1.0, 0.0) / max(est - 1.0, 1e-9)
+        self.steps_seen += int(ns.size)
+
+    def al_hat(self, width: int) -> float:
+        """Rescaled acceptance estimate (width 1 is exactly 1)."""
+        return 1.0 + (self.strategies[width].acceptance - 1.0) * self.ratio
+
+    def pick(self, width: int) -> Optional[int]:
+        """New width when the measured AL/step_time argmax moved, else
+        None.  Call at an eviction/admission boundary only."""
+        self.boundaries += 1
+        if width <= 1:
+            # width 1 observes AL == 1 by construction (no signal), so it
+            # would be an ABSORBING state once the ratio hits 0.  Relax the
+            # ratio toward the calibration prior (1.0) instead: after
+            # enough signal-free boundaries the argmax re-probes the best
+            # drafted width, and a still-bad observation sends it straight
+            # back down — bounded-duty-cycle probing, no pinned serve.
+            self.ratio += self.probe * (1.0 - self.ratio)
+        elif self.steps_seen < self.min_steps:
+            return None                       # EMA not warmed up yet
+        if self.boundaries % self.switch_every:
+            return None
+        best = max(sorted(self.strategies),
+                   key=lambda w: self.al_hat(w)
+                   / self.strategies[w].step_time)
+        if best == width:
+            return None
+        self.switches.append((self.boundaries, width, best))
+        # fresh observation window for the new width: the AL EMA is read
+        # against the ACTIVE width's estimate, so stale samples from the
+        # old width would corrupt the ratio (an inflated ratio right after
+        # a downswitch flips the argmax straight back — flapping).  The
+        # ratio itself persists: it is the width-normalized draft-quality
+        # signal and stays comparable across switches.
+        self.al_obs = None
+        self.steps_seen = 0
+        return best
 
 
 class ContinuousScheduler:
@@ -250,21 +422,28 @@ class ContinuousScheduler:
     ``sched_reset`` / ``sched_step`` / ``sched_emitted`` plus the paged
     reservation hooks ``sched_can_admit`` / ``sched_release`` /
     ``sched_footprint`` and, for ``prefill_chunk``, the piecewise
-    admission hook ``sched_extend`` gated by ``sched_chunked_ok`` — both
-    ``BatchEngine`` and ``SpeculativeEngine`` do).
+    admission hook ``sched_extend`` gated by ``sched_chunked_ok`` — the
+    unified ``DecodeEngine`` implements all of it once; ``BatchEngine`` /
+    ``SpeculativeEngine`` are its aliases).
 
     ``policy`` picks which queued request a freed row takes (``"fifo"`` /
-    ``"sjf"`` / ``"lpt"`` or an ``AdmissionPolicy``); ``prefill_chunk=N``
-    admits prompts longer than N in N-token pieces (see module docstring).
+    ``"sjf"`` / ``"lpt"`` or an ``AdmissionPolicy``); ``age_limit=N``
+    bounds SJF/LPT starvation (a request deferred for more than N
+    boundaries is promoted to FIFO-head priority); ``prefill_chunk=N``
+    admits prompts longer than N in N-token pieces; ``adaptive=`` arms
+    measured-ARCA runtime strategy switching (a ``{width: arca.Strategy}``
+    table or an ``AdaptiveSpeculation`` — drafted engines only).  See the
+    module docstring for all four.
     """
 
     def __init__(self, engine, *, batch: int = 8,
                  chunk: Optional[int] = None, policy="fifo",
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, age_limit: int = 0,
+                 adaptive=None):
         self.engine = engine
         self.batch = batch
         self.chunk = chunk or engine.chunk
-        self.policy = get_policy(policy)
+        self.policy = get_policy(policy, age_limit)
         if prefill_chunk < 0:
             raise ValueError("prefill_chunk must be >= 0")
         # chunked prefill: 0 = whole-prompt admission; N = admit long
@@ -272,6 +451,21 @@ class ContinuousScheduler:
         # families silently use whole-prompt admission)
         self.prefill_chunk = prefill_chunk if getattr(
             engine, "sched_chunked_ok", False) else 0
+        self.adaptive: Optional[AdaptiveSpeculation] = None
+        self._strategy_table = {}
+        if adaptive is not None:
+            if getattr(engine, "strategy", None) is None or \
+                    engine.strategy.draft != "medusa":
+                raise ValueError("adaptive speculation needs a drafted "
+                                 "DecodeEngine (strategy.draft == 'medusa')")
+            self.adaptive = adaptive if isinstance(
+                adaptive, AdaptiveSpeculation) else \
+                AdaptiveSpeculation(adaptive)
+            # build each candidate DecodeStrategy once (switches reuse the
+            # pytrees) and ratchet the paged reservation overshoot to the
+            # deepest candidate tree
+            self._strategy_table = engine.register_strategies(
+                {w: s.tree for w, s in self.adaptive.strategies.items()})
         # introspection for tests / debugging, populated by serve()
         self.last_state = None
         self.events: List[tuple] = []
@@ -284,6 +478,10 @@ class ContinuousScheduler:
         eos_val = int(_eos_scalar(eos))
         # pending stays in FIFO order; policies index into it
         pending = sorted(requests, key=lambda r: (r.arrival, r.req_id))
+        for r in pending:
+            r.age = 0                 # aging state is per-serve()
+        if self.adaptive is not None:
+            self.adaptive.reset()     # so is the observation window
         slots: list = [None] * B          # per-row {req, out, t, pending}
         done_np = np.ones((B,), bool)     # free rows are masked done
         rem_np = np.zeros((B,), np.int32)
@@ -327,13 +525,20 @@ class ContinuousScheduler:
                     self.events.append(("prefill_done", s["req"].req_id, b))
 
             # ---- admit arrived requests into free rows (policy order) ----
+            # ONE arrival cutoff for the whole boundary: pick and the
+            # aging filter below must agree on who was visible, or a
+            # request arriving mid-dispatch would be aged (and promoted)
+            # without ever having been passed over
+            t_bound = now()
+            admitted_n, free_rows = 0, False
             for b in range(B):
                 if slots[b] is not None or not pending:
                     continue
-                idx = self.policy.pick(pending, now(), can_admit, footprint,
-                                       state is None)
+                idx = self.policy.pick(pending, t_bound, can_admit,
+                                       footprint, state is None)
                 if idx is None:           # nothing arrived / nothing the
-                    break                 # pool can fund: leave rows empty
+                    free_rows = True      # pool can fund: leave rows empty
+                    break
                 req = pending.pop(idx)
                 prompt_np = np.asarray(req.tokens, np.int32)
                 S = len(prompt_np)
@@ -364,7 +569,18 @@ class ContinuousScheduler:
                                 "pending": None}
                     done_np[b] = eos is not None and int(first) == eos_val
                     rem_np[b] = max(req.n_tokens - 1, 0)
+                admitted_n += 1
                 self.events.append(("admit", req.req_id, b))
+            # aging counts boundaries a request was PASSED OVER: another
+            # request was admitted past it, or a free row stayed empty
+            # because its own reservation could not be funded.  Waiting
+            # behind a FULL bank ages nobody — otherwise ordinary
+            # saturation would push every request past age_limit and
+            # permanently degrade SJF/LPT to FIFO.
+            if admitted_n or free_rows:
+                for r in pending:
+                    if r.arrival <= t_bound:
+                        r.age += 1
             if dirty:                     # rows left empty: one batched reset
                 state = eng.sched_reset(state, sorted(dirty))
                 dirty.clear()
@@ -391,6 +607,10 @@ class ContinuousScheduler:
                 for b in occupied:
                     if slots[b]["pending"] is None:
                         slots[b]["out"].extend(per_row[b])
+                if self.adaptive is not None:
+                    # raw[1] = (K, B) per-step accepted counts; masked/free
+                    # rows are 0 and dropped by the EMA
+                    self.adaptive.observe(raw[1], eng.strategy.width)
 
             # ---- evict finished rows (EOS / budget / capacity freeze) ----
             for b in occupied:
@@ -415,6 +635,14 @@ class ContinuousScheduler:
                 rem_np[b] = 0
                 self.events.append(("evict", s["req"].req_id, b))
 
+            # ---- adaptive: re-decide the decode strategy at the boundary -
+            if self.adaptive is not None and live:
+                new_w = self.adaptive.pick(eng.strategy.width)
+                if new_w is not None:
+                    old_w = eng.strategy.width
+                    eng.set_strategy(self._strategy_table[new_w])
+                    self.events.append(("switch", old_w, new_w))
+
         if dirty and state is not None:   # final evictions: leave rows clean
             state = eng.sched_reset(state, sorted(dirty))
             dirty.clear()
@@ -425,7 +653,15 @@ class ContinuousScheduler:
         stats.update(admitted=len(ordered), chunks=chunks,
                      max_resident=max_resident, batch=B, chunk=self.chunk,
                      policy=self.policy.name,
+                     age_limit=getattr(self.policy, "age_limit", 0),
                      prefill_chunk=self.prefill_chunk)
+        if self.adaptive is not None:
+            stats.update(
+                strategy_switches=[
+                    {"boundary": n, "from": f, "to": t}
+                    for n, f, t in self.adaptive.switches],
+                width_final=self.engine.strategy.width,
+                al_observed=self.adaptive.al_obs)
         return ordered, stats
 
 

@@ -426,11 +426,12 @@ def test_evicted_seq_rows_clear_carry():
     reqs = _requests(cfg, 3, budgets=[5])
     sched = ContinuousScheduler(eng, batch=2)
     results, _ = sched.serve(reqs)
-    _, cur = sched.last_state
+    st = sched.last_state                 # unified protocol: SpecState with
+    assert st.hidden is None              # no drafting carry for sequential
     # a freed row's carry is reset to 0; trailing chunks may overwrite it
     # with the EOS pad sentinel — either way it is never the evicted
     # request's live token
-    cur = np.asarray(cur)
+    cur = np.asarray(st.cur_token)
     assert np.all(np.isin(cur, [0, -1])), cur
     for r in results:
         assert not np.any(cur == r.tokens[-1]) or r.tokens[-1] in (0, -1)

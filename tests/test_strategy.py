@@ -1,0 +1,256 @@
+"""Unified decode-strategy layer (runtime/engine.py DecodeEngine /
+DecodeStrategy, core/arca.py profile_engine, runtime/scheduler.py
+AdaptiveSpeculation).
+
+Invariants:
+  * ``BatchEngine`` / ``SpeculativeEngine`` are thin aliases: one
+    ``DecodeEngine`` implementation underneath (no overridden driver or
+    sched protocol), sequential = the degenerate chain_spec(width=1)
+    strategy;
+  * ``choose_strategy`` over a measured ``time_fn`` produces a sane
+    argmax (monotone step times push the optimum down; free steps push it
+    to the widest) and width=1 degenerates to the sequential chain;
+  * ``profile_engine`` times the engine's compiled steps once per tree
+    shape and feeds the search;
+  * runtime strategy switches at chunk boundaries are output-neutral
+    (greedy tree verification commits the greedy chain whatever the
+    tree): an adaptive run's per-request tokens are bit-identical to
+    fixed-width solo runs;
+  * same-shape strategy switches reuse the compiled chunk scans (no
+    re-jit), and returning to an already-compiled width is free.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import arca
+from repro.core.speculative import tree as T
+from repro.core.speculative.medusa import init_medusa
+from repro.models.api import get_model
+from repro.runtime.engine import (BatchEngine, DecodeEngine, DecodeStrategy,
+                                  SpeculativeEngine)
+from repro.runtime.scheduler import (AdaptiveSpeculation,
+                                     ContinuousScheduler, Request)
+
+
+def _setup(arch="qwen2-0.5b"):
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    heads = init_medusa(cfg, jax.random.PRNGKey(7))
+    accs = T.default_accs(cfg.medusa_heads, cfg.medusa_top_k)
+    return cfg, model, params, heads, accs
+
+
+def _requests(cfg, n, budgets, prompt_len=8, seed=3):
+    toks = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n, prompt_len), 0, cfg.vocab_size),
+        np.int32)
+    return [Request(req_id=i, tokens=toks[i],
+                    n_tokens=budgets[i % len(budgets)]) for i in range(n)]
+
+
+# --------------------------------------------------------------------------
+# one engine, two aliases
+# --------------------------------------------------------------------------
+def test_aliases_are_thin():
+    """The legacy entry points add a constructor, nothing else: the chunk
+    driver, generate loop and whole sched_* protocol are DecodeEngine's."""
+    for alias in (BatchEngine, SpeculativeEngine):
+        assert issubclass(alias, DecodeEngine)
+        for name in ("generate", "sched_step", "sched_admit",
+                     "sched_insert", "sched_reset", "sched_blank",
+                     "sched_prefill", "sched_emitted", "_chunk_fn",
+                     "set_strategy", "time_step"):
+            assert name not in vars(alias), \
+                f"{alias.__name__}.{name} overrides the unified engine"
+
+
+def test_sequential_is_degenerate_chain():
+    cfg, model, params, heads, _ = _setup()
+    seq = BatchEngine(model, params, max_len=64)
+    assert seq.strategy.draft == "none"
+    assert seq.strategy.width == 1
+    assert seq.strategy.tree.max_depth == 1          # chain_spec(1): root
+    assert seq.strategy.shape() == ("none", 1, 1, 1)
+    assert seq._overshoot == 1                       # one slot past budget
+    # draft-kind guards: no heads -> width-1 only; no cross-kind switches
+    with pytest.raises(ValueError):
+        seq.strategy_for(T.build_tree(T.default_accs(4, 4), 4))
+    spec_eng = SpeculativeEngine(model, heads, params,
+                                 T.build_tree(T.default_accs(4, 4), 4),
+                                 max_len=64)
+    with pytest.raises(ValueError):
+        spec_eng.set_strategy(DecodeStrategy.sequential())
+    with pytest.raises(ValueError):
+        DecodeEngine(model, params, heads=heads)     # heads need a strategy
+
+
+# --------------------------------------------------------------------------
+# choose_strategy over a measured time_fn
+# --------------------------------------------------------------------------
+def test_choose_strategy_measured_time_fn():
+    cfg, _, _, _, accs = _setup()
+    widths = (1, 2, 4, 8)
+
+    # width=1 degenerates to the sequential chain whatever the timer says
+    flat = arca.choose_strategy(cfg, accs, ctx=32, widths=widths,
+                                time_fn=lambda c, w, ctx, s: 1e-3)
+    assert flat[1].tree.width == 1 and flat[1].tree.max_depth == 1
+    assert flat[1].acceptance == pytest.approx(1.0)
+    # free extra width: acceptance is monotone, so the argmax is widest
+    assert arca.best(flat).width == widths[-1]
+
+    # strongly monotone step times (cost ~ width) overwhelm the sublinear
+    # acceptance gain: the argmax moves DOWN, and every strategy carries
+    # the measured time it was scored with
+    steep = arca.choose_strategy(cfg, accs, ctx=32, widths=widths,
+                                 time_fn=lambda c, w, ctx, s: 1e-3 * w)
+    assert arca.best(steep).width < widths[-1]
+    for w in widths:
+        assert steep[w].step_time == pytest.approx(1e-3 * w)
+        assert steep[w].throughput == pytest.approx(
+            steep[w].acceptance / (1e-3 * w))
+
+
+def test_profile_engine_measures_compiled_steps():
+    cfg, model, params, heads, accs = _setup()
+    eng = SpeculativeEngine(model, heads, params, T.build_tree(accs, 4),
+                            max_len=96, chunk=4)
+    calls = {"n": 0}
+    real = eng.time_step
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    eng.time_step = counting
+    widths = (1, 2, 4)
+    time_fn = arca.profile_engine(eng, widths, accs=accs, reps=1)
+    assert calls["n"] == len(widths)                 # pre-warmed per width
+    strats = arca.choose_strategy(cfg, accs, ctx=16, time_fn=time_fn,
+                                  widths=widths)
+    # the search re-builds the same trees -> same shapes -> zero re-timing
+    assert calls["n"] == len(widths)
+    for w in widths:
+        assert np.isfinite(strats[w].step_time) and strats[w].step_time > 0
+    assert arca.best(strats).width in widths
+
+
+# --------------------------------------------------------------------------
+# runtime strategy switching
+# --------------------------------------------------------------------------
+def test_adaptive_run_matches_fixed_width_solo():
+    """Strategy switches mid-stream never change tokens: every request of
+    an adaptive run is bit-identical to its solo run under EITHER fixed
+    width (greedy verification commits the greedy chain for any tree)."""
+    cfg, model, params, heads, accs = _setup()
+    specs = {2: T.build_tree(accs, 2), 8: T.build_tree(accs, 8)}
+    max_len = 96 + max(s.max_depth for s in specs.values())
+    eng = SpeculativeEngine(model, heads, params, specs[8], max_len=max_len,
+                            chunk=4)
+    # synthetic measured table rigged so the argmax flips to width 2 as
+    # soon as the (random-heads, AL~1) observation lands
+    strategies = arca.choose_strategy(
+        cfg, accs, ctx=8, widths=(2, 8),
+        time_fn=lambda c, w, ctx, s: 1e-3 * w)
+    sched = ContinuousScheduler(
+        eng, batch=2,
+        adaptive=AdaptiveSpeculation(strategies, min_steps=4,
+                                     switch_every=1))
+    reqs = _requests(cfg, 5, budgets=[16, 9])
+    results, stats = sched.serve(reqs)
+    assert stats["strategy_switches"], "no switch happened — dead test"
+    assert stats["width_final"] == 2
+    assert any(ev == "switch" for ev, _, _ in sched.events)
+    for w, spec in specs.items():
+        solo = SpeculativeEngine(model, heads, params, spec,
+                                 max_len=max_len, chunk=4)
+        for r, req in zip(results, reqs):
+            out, _ = solo.generate({"tokens": req.tokens[None]},
+                                   req.n_tokens)
+            np.testing.assert_array_equal(
+                r.tokens, np.atleast_2d(out)[0][:req.n_tokens],
+                err_msg=f"req {r.req_id} vs fixed width {w}")
+
+
+def test_same_shape_switches_reuse_compiled_chunks():
+    cfg, model, params, heads, accs = _setup()
+    # two distinct trees with IDENTICAL shapes (width, depths, paths)
+    spec_a = T.spec_from_nodes([(-1, 0, 0), (0, 1, 0), (1, 2, 0)])
+    spec_b = T.spec_from_nodes([(-1, 0, 0), (0, 1, 1), (1, 2, 0)])
+    assert spec_a.shape() == spec_b.shape()
+    eng = SpeculativeEngine(model, heads, params, spec_a, max_len=64,
+                            chunk=4)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0,
+                              cfg.vocab_size)
+    out_a, _ = eng.generate({"tokens": toks}, 10)
+    sizes = {k: f._cache_size() for k, f in eng._chunks.items()}
+    eng.set_strategy(spec_b)                     # same shape bucket
+    out_b, _ = eng.generate({"tokens": toks}, 10)
+    for k, size in sizes.items():
+        assert eng._chunks[k]._cache_size() == size, \
+            "re-jitted for a same-shape strategy"
+    np.testing.assert_array_equal(out_a, out_b)  # greedy: tree-independent
+
+    # a different shape compiles once; toggling BACK is then free
+    wide = T.build_tree(accs, 4)
+    eng.set_strategy(wide)
+    eng.generate({"tokens": toks}, 10)
+    sizes = {k: f._cache_size() for k, f in eng._chunks.items()}
+    eng.set_strategy(spec_a)
+    eng.generate({"tokens": toks}, 10)
+    eng.set_strategy(wide)
+    eng.generate({"tokens": toks}, 10)
+    for k, size in sizes.items():
+        assert eng._chunks[k]._cache_size() == size, \
+            "toggling between compiled widths re-jitted"
+
+
+def test_adaptive_controller_unit():
+    """Ratio anchoring: width 1 is pinned at AL=1, the observed/estimated
+    ratio rescales the rest, and width-1 chunks feed no signal (so the
+    controller can leave width 1 again)."""
+    mk = lambda w, al, t: arca.Strategy(width=w, tree=None, ratio=0.5,
+                                        acceptance=al, step_time=t,
+                                        throughput=al / t)
+    ctrl = AdaptiveSpeculation({1: mk(1, 1.0, 1e-3), 4: mk(4, 3.0, 2e-3)},
+                               min_steps=4, switch_every=1)
+    # estimates alone (ratio=1): width 4 wins 3.0/2e-3 > 1.0/1e-3
+    assert ctrl.pick(1) == 4
+    # observe AL~1 at width 4 -> ratio ~0 -> every al_hat -> 1 -> fastest
+    ctrl.observe(np.asarray([[1, 1, 1, 1, 0]]), width=4)
+    assert ctrl.al_hat(1) == pytest.approx(1.0)
+    assert ctrl.al_hat(4) == pytest.approx(1.0)
+    assert ctrl.pick(4) == 1
+    # width-1 chunks are signal-free: ratio untouched
+    r = ctrl.ratio
+    ctrl.observe(np.asarray([[1, 1, 1, 1]]), width=1)
+    assert ctrl.ratio == r
+    # sustained strong observations at width 4 pull the EMA back up and
+    # restore the wide pick (one sample cannot: the window smooths it)
+    for _ in range(4):
+        ctrl.observe(np.asarray([[3, 3, 3, 3]]), width=4)
+    assert ctrl.pick(1) == 4
+
+    # width 1 is NOT absorbing: with no signal the ratio relaxes toward
+    # the calibration prior, so a controller parked at width 1 with
+    # ratio 0 eventually re-probes the best drafted width on its own
+    ctrl2 = AdaptiveSpeculation({1: mk(1, 1.0, 1e-3), 4: mk(4, 3.0, 2e-3)},
+                                min_steps=4, switch_every=1)
+    ctrl2.observe(np.asarray([[1, 1, 1, 1]]), width=4)    # ratio -> 0
+    assert ctrl2.pick(4) == 1
+    probed = None
+    for _ in range(200):
+        probed = ctrl2.pick(1)
+        if probed is not None:
+            break
+    assert probed == 4
+    with pytest.raises(ValueError):
+        AdaptiveSpeculation({})
+    with pytest.raises(ValueError):
+        # draft-free engines cannot adapt
+        cfg, model, params, _, _ = _setup()
+        ContinuousScheduler(BatchEngine(model, params, max_len=64),
+                            adaptive={1: mk(1, 1.0, 1e-3)})
