@@ -38,6 +38,15 @@ pool buffer must be DELETED (aliased in place) and exactly one pool-sized
 buffer may be live — a ~2x pool-size peak fails the bench.
 ``--paged`` runs ONLY this comparison (the CI smoke).
 
+Fault-tolerance comparison (``record["faults"]``): the mixed-budget
+Poisson trace served through the async multi-replica router
+(``runtime.router`` over ``runtime.server``), faults off vs a seeded
+chaos plan (replica crash mid-serve + ~10% client disconnects + finite
+deadlines).  Asserts every request ends in a typed terminal state, no
+replica leaks pool pages through crash/cancel/timeout cleanup, and
+goodput-under-SLO stays >= 0.8x the fault-free arm.  ``--faults`` runs
+ONLY this comparison (the chaos smoke).
+
 Runs in a SUBPROCESS with XLA CPU intra-op threading pinned off, same
 measurement contract as engine_bench (see that module's docstring).
 
@@ -186,6 +195,119 @@ def _paged_compare(cfg, model, params, heads, spec, max_len, n_requests,
         "speedup_paged_vs_dense": pg["tok_s"] / dn["tok_s"],
         "donation_in_place": True,
     }
+
+
+FAULT_SEED = 9                # cancels reqs 4 and 6 (both short-budget)
+FAULT_REPLICAS = 2
+FAULT_BATCH = 4               # per replica: half the single-bank BATCH
+FAULT_CANCEL_RATE = 0.10
+
+
+def _faults_compare(cfg, model, params, heads, spec, max_len, n_requests,
+                    chunk, reps) -> dict:
+    """Fault-tolerance arm (``record["faults"]``): the SAME mixed
+    16/192-budget Poisson trace served through the async router over
+    ``FAULT_REPLICAS`` paged replicas, faults off vs faults on (replica
+    r0 crashes mid-serve, ~10% of clients hang up mid-stream, every
+    request carries a finite deadline).  Asserts every request lands in
+    a typed terminal state, no replica leaks pool pages (free + held ==
+    pool after drain, on BOTH arms — including through ``fail_all`` on
+    the crashed replica), and goodput-under-SLO (tokens of DONE requests
+    per second of makespan) stays >= 0.8x the fault-free arm: the
+    crash's lost work is re-decoded on the surviving replica and the
+    cancelled clients' budgets leave the denominator with them."""
+    import asyncio
+
+    import numpy as np
+
+    from repro.runtime.cache import pages_for
+    from repro.runtime.engine import SpeculativeEngine
+    from repro.runtime.faults import FaultPlan
+    from repro.runtime.router import ReplicaRouter
+    from repro.runtime.router import replay as router_replay
+    from repro.runtime.scheduler import (ContinuousScheduler, Request,
+                                         poisson_arrivals)
+    from repro.runtime.server import AsyncEngineServer
+
+    n = min(n_requests, 12)
+    pool_pages = FAULT_BATCH * pages_for(max_len, PAGE_SIZE)
+    engines = [SpeculativeEngine(model, heads, params, spec,
+                                 max_len=max_len, chunk=chunk, paged=True,
+                                 page_size=PAGE_SIZE, pool_pages=pool_pages)
+               for _ in range(FAULT_REPLICAS)]
+
+    # warm/compile each replica's bank + measure single-replica throughput
+    warm_reqs = _requests(cfg, 4, np.zeros(4))
+    warm = None
+    for eng in engines:
+        _, warm = ContinuousScheduler(eng, batch=FAULT_BATCH,
+                                      chunk=chunk).serve(
+            [Request(req_id=r.req_id, tokens=r.tokens, n_tokens=r.n_tokens,
+                     arrival=0.0) for r in warm_reqs])
+    total_budget = sum(BUDGETS[i % len(BUDGETS)] for i in range(n))
+    w1 = total_budget / warm["tok_s"]          # est. 1-replica makespan
+    # arrivals span ~35% of the est. fleet makespan (same staggering
+    # contract as the main grid); deadlines bind at 2x the single-replica
+    # makespan — real pressure once a crash serializes the fleet
+    rate = n / max(0.35 * w1 / FAULT_REPLICAS, 1e-6)
+    arrivals = poisson_arrivals(n, rate, seed=3)
+    deadline_s = 2.0 * w1
+    # r0 dies ~60% through its share of the trace: enough in-flight work
+    # to make the retry path real, enough runway to re-decode it on r1
+    crash_boundary = max(6, int(0.6 * warm["chunks"]))
+
+    def arm(plan):
+        scheds = [ContinuousScheduler(
+            eng, batch=FAULT_BATCH, chunk=chunk,
+            faults=None if plan is None else plan.injector(f"r{i}"))
+            for i, eng in enumerate(engines)]
+        servers = [AsyncEngineServer(s, name=f"r{i}")
+                   for i, s in enumerate(scheds)]
+        router = ReplicaRouter(
+            servers, seed=FAULT_SEED,
+            client_faults=None if plan is None else plan.client())
+
+        async def go():
+            await router.start()
+            try:
+                return await router_replay(
+                    router, _requests(cfg, n, arrivals),
+                    deadline_s=deadline_s)
+            finally:
+                await router.stop()
+
+        _, stats = asyncio.run(go())
+        if not stats["terminal"]:
+            raise AssertionError(
+                f"non-terminal request states: {stats['states']}")
+        if not (router.pages_conserved() and router.drained()):
+            raise AssertionError(
+                "leaked pool pages after drain (faults "
+                f"{'on' if plan else 'off'})")
+        stats["pages_drained"] = True
+        return stats
+
+    plan = FaultPlan(seed=FAULT_SEED, crash={"r0": crash_boundary},
+                     cancel_rate=FAULT_CANCEL_RATE)
+
+    def best(fn):
+        runs = [fn() for _ in range(reps)]
+        return max(runs, key=lambda s: s["goodput_tok_s"])
+
+    clean = best(lambda: arm(None))
+    chaos = best(lambda: arm(plan))
+    ratio = chaos["goodput_tok_s"] / max(clean["goodput_tok_s"], 1e-9)
+    out = {"replicas": FAULT_REPLICAS, "batch": FAULT_BATCH, "requests": n,
+           "page_size": PAGE_SIZE, "pool_pages": pool_pages,
+           "seed": FAULT_SEED, "cancel_rate": FAULT_CANCEL_RATE,
+           "crash_boundary": crash_boundary, "deadline_s": deadline_s,
+           "fault_free": clean, "faulted": chaos,
+           "goodput_ratio_faulted_vs_fault_free": ratio}
+    if ratio < 0.8:
+        raise AssertionError(
+            f"faulted goodput {chaos['goodput_tok_s']:.1f} tok/s fell "
+            f"below 0.8x fault-free {clean['goodput_tok_s']:.1f} tok/s")
+    return out
 
 
 ADAPT_WIDTHS = (1, 2, 8)      # sequential-degenerate, narrow, wide
@@ -372,7 +494,7 @@ def _policy_compare(cfg, model, params, heads, spec, n_requests, chunk,
 
 
 def _worker(n_requests: int, chunk: int, reps: int,
-            paged_only: bool = False) -> dict:
+            paged_only: bool = False, faults_only: bool = False) -> dict:
     import jax
     import numpy as np
 
@@ -394,6 +516,10 @@ def _worker(n_requests: int, chunk: int, reps: int,
         return {"arch": cfg.name, "requests": n_requests, "chunk": chunk,
                 "paged": _paged_compare(cfg, model, params, heads, spec,
                                         max_len, n_requests, chunk, reps)}
+    if faults_only:
+        return {"arch": cfg.name, "requests": n_requests, "chunk": chunk,
+                "faults": _faults_compare(cfg, model, params, heads, spec,
+                                          max_len, n_requests, chunk, reps)}
 
     engines = {
         "sequential": BatchEngine(model, params, max_len=max_len,
@@ -446,15 +572,20 @@ def _worker(n_requests: int, chunk: int, reps: int,
                                          n_requests, chunk, reps)
     record["adaptive"] = _adaptive_compare(cfg, model, params, heads,
                                            n_requests, chunk, reps)
+    record["faults"] = _faults_compare(cfg, model, params, heads, spec,
+                                       max_len, n_requests, chunk, reps)
     return record
 
 
-def run(n_requests=32, chunk=8, reps=2, paged_only=False) -> list:
+def run(n_requests=32, chunk=8, reps=2, paged_only=False,
+        faults_only=False) -> list:
     """Spawn the pinned-environment worker, persist + pretty-print results."""
     argv = ["--requests", str(n_requests), "--chunk", str(chunk),
             "--reps", str(reps)]
     if paged_only:
         argv.append("--paged")
+    if faults_only:
+        argv.append("--faults")
     record = spawn_pinned_worker(__file__, argv)
 
     rows = []
@@ -471,14 +602,16 @@ def run(n_requests=32, chunk=8, reps=2, paged_only=False) -> list:
             rows.append((f"sched_latencyx_static_vs_cont_{eng[:4]}",
                          record[f"latency_ratio_static_vs_continuous_{eng}"],
                          "x mean latency (higher = static worse)"))
-    pg = record["paged"]
-    rows.append(("sched_paged_resident_gain", pg["resident_gain"],
-                 f"{pg['paged_max_resident']} vs "
-                 f"{pg['dense_max_resident']} resident at "
-                 f"{pg['pool_slots']} pool slots"))
-    rows.append(("sched_paged_vs_dense_tok_s", pg["speedup_paged_vs_dense"],
-                 f"{pg['paged_tok_s']:.1f} vs {pg['dense_tok_s']:.1f} "
-                 "tok/s agg at fixed pool memory"))
+    if "paged" in record:
+        pg = record["paged"]
+        rows.append(("sched_paged_resident_gain", pg["resident_gain"],
+                     f"{pg['paged_max_resident']} vs "
+                     f"{pg['dense_max_resident']} resident at "
+                     f"{pg['pool_slots']} pool slots"))
+        rows.append(("sched_paged_vs_dense_tok_s",
+                     pg["speedup_paged_vs_dense"],
+                     f"{pg['paged_tok_s']:.1f} vs {pg['dense_tok_s']:.1f} "
+                     "tok/s agg at fixed pool memory"))
     if "policies" in record:
         pol = record["policies"]
         for name, a in pol["arms"].items():
@@ -502,14 +635,30 @@ def run(n_requests=32, chunk=8, reps=2, paged_only=False) -> list:
         rows.append(("sched_adaptive_vs_worst_fixed",
                      ad["gain_adaptive_vs_worst_fixed"],
                      "x worst fixed-width arm (measured-ARCA selection)"))
+    if "faults" in record:
+        fl = record["faults"]
+        for name in ("fault_free", "faulted"):
+            a = fl[name]
+            rows.append((f"sched_{name}", a["goodput_tok_s"],
+                         f"goodput tok/s ({a['tok_s']:.1f} raw, "
+                         f"states {a['states']}, {a['retries']} retried, "
+                         f"pages drained {a['pages_drained']})"))
+        rows.append(("sched_faults_goodput_ratio",
+                     fl["goodput_ratio_faulted_vs_fault_free"],
+                     f"x fault-free goodput under crash@"
+                     f"{fl['crash_boundary']} + "
+                     f"{fl['cancel_rate']:.0%} cancel + "
+                     f"{fl['deadline_s']:.1f}s deadline "
+                     f"({fl['replicas']} replicas)"))
 
     os.makedirs(RESULT_DIR, exist_ok=True)
     path = os.path.join(RESULT_DIR, "sched_bench.json")
-    if paged_only and os.path.exists(path):
-        # CI smoke: refresh only the paged section of the checked-in record
+    if (paged_only or faults_only) and os.path.exists(path):
+        # partial run: refresh only that section of the checked-in record
         with open(path) as f:
             full = json.load(f)
-        full["paged"] = record["paged"]
+        key = "paged" if paged_only else "faults"
+        full[key] = record[key]
         record = full
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
@@ -527,11 +676,18 @@ if __name__ == "__main__":
     ap.add_argument("--paged", action="store_true",
                     help="run ONLY the fixed-memory paged-vs-dense "
                          "comparison (CI smoke)")
+    ap.add_argument("--faults", action="store_true",
+                    help="run ONLY the fault-tolerance router comparison "
+                         "(chaos smoke)")
     ap.add_argument("--worker", action="store_true")
     args = ap.parse_args()
+    if args.paged and args.faults:
+        ap.error("--paged and --faults are mutually exclusive")
     if args.worker:
         bootstrap_worker_path()
         print(json.dumps(_worker(args.requests, args.chunk, args.reps,
-                                 paged_only=args.paged)))
+                                 paged_only=args.paged,
+                                 faults_only=args.faults)))
     else:
-        run(args.requests, args.chunk, args.reps, paged_only=args.paged)
+        run(args.requests, args.chunk, args.reps, paged_only=args.paged,
+            faults_only=args.faults)

@@ -44,10 +44,20 @@ prompt+budget needs, so ``--pool-pages`` bounds total KV memory instead of
 ``batch * max_len`` — shrink it below the dense equivalent to serve a
 larger ``--batch`` at fixed memory (the sched_bench paged record measures
 exactly this trade).
+
+Fault-tolerant serving (``--replicas N``, ``--deadline-s``,
+``--cancel-rate``, ``--inject-faults SEED``): the replay runs through the
+async front end instead of in-process — N engine replicas behind
+``runtime/router.py`` with retry+backoff, per-request deadlines, client
+cancellations and (with ``--inject-faults``) the seeded chaos harness
+(replica crash, chunk stalls, admission-time pool exhaustion).  The run
+exits non-zero unless EVERY request reaches a typed terminal state and
+every replica's page pool drains leak-free — the CI chaos smoke gate.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -60,18 +70,100 @@ from repro.core.speculative.medusa import init_medusa
 from repro.data.pipeline import MarkovDataset
 from repro.models.api import get_model
 from repro.runtime.engine import BatchEngine, SpeculativeEngine
+from repro.runtime.faults import FaultPlan
+from repro.runtime.router import ReplicaRouter, replay as router_replay
 from repro.runtime.scheduler import (ContinuousScheduler, Request,
                                      poisson_arrivals, serve_static)
+from repro.runtime.server import AsyncEngineServer
 from repro.training import checkpoint
+
+
+def _requests(args, data):
+    prompts = data.sample(args.requests, args.prompt_len, seed=11)[:, :-1]
+    arrivals = poisson_arrivals(args.requests, args.rate, seed=args.seed)
+    return [Request(req_id=i, tokens=prompts[i].astype(np.int32),
+                    n_tokens=args.tokens, arrival=float(arrivals[i]))
+            for i in range(args.requests)]
+
+
+def _once_then(prebuilt, build):
+    """Engine factory that hands out the already-built engine first (its
+    compiles are paid), then builds fresh replicas."""
+    first = [prebuilt]
+
+    def factory():
+        if first:
+            return first.pop()
+        return build()
+    return factory
+
+
+def _fault_tolerant(args) -> bool:
+    """Whether the replay must go through the async server/router plane."""
+    return (args.replicas > 1 or args.deadline_s is not None
+            or args.cancel_rate > 0 or args.inject_faults is not None)
+
+
+def _replay_async(args, data, build_engine, adaptive=None):
+    """Fault-tolerant replay: the arrival stream flows through N replica
+    servers behind the router; with ``--inject-faults`` the seeded chaos
+    plan crashes replica r0, stalls chunks and blocks admissions.  Exits
+    non-zero unless every request is terminal and no replica leaked
+    pages."""
+    reqs = _requests(args, data)
+    plan = None
+    if args.inject_faults is not None:
+        crash = {"r0": 6} if args.replicas > 1 else {}
+        plan = FaultPlan(seed=args.inject_faults, crash=crash,
+                         stall_rate=0.05, stall_s=0.01, exhaust_rate=0.05,
+                         cancel_rate=args.cancel_rate)
+    elif args.cancel_rate > 0:
+        plan = FaultPlan(seed=args.seed, cancel_rate=args.cancel_rate)
+
+    servers = []
+    for i in range(args.replicas):
+        name = f"r{i}"
+        sched = ContinuousScheduler(
+            build_engine(), batch=args.batch, chunk=args.chunk,
+            policy=args.policy, prefill_chunk=args.prefill_chunk,
+            age_limit=args.age_limit, adaptive=adaptive,
+            faults=plan.injector(name) if plan is not None else None)
+        servers.append(AsyncEngineServer(sched, name=name,
+                                         queue_limit=args.queue_limit))
+    router = ReplicaRouter(
+        servers, seed=args.seed,
+        client_faults=plan.client() if plan is not None else None)
+
+    async def run():
+        await router.start(health_every_s=0.2)
+        try:
+            return await router_replay(router, reqs,
+                                       deadline_s=args.deadline_s)
+        finally:
+            await router.stop()
+
+    results, stats = asyncio.run(run())
+    drained = router.drained()
+    faulty = "faults on" if args.inject_faults is not None else "faults off"
+    print(f"[serve] router x{args.requests} reqs over {args.replicas} "
+          f"replica(s) ({faulty}): {stats['delivered_total']} tokens in "
+          f"{stats['makespan_s']:.2f}s ({stats['tok_s']:.1f} tok/s, "
+          f"goodput {stats['goodput_tok_s']:.1f} tok/s), "
+          f"states {stats['states']}, {stats['retries']} retried, "
+          f"routed {stats['routed']}, "
+          f"latency mean {stats['latency_mean_s']:.2f}s "
+          f"p95 {stats['latency_p95_s']:.2f}s, "
+          f"pages drained: {drained}")
+    if not stats["terminal"] or not drained:
+        raise SystemExit(
+            f"[serve] FAULT-TOLERANCE VIOLATION: terminal="
+            f"{stats['terminal']} drained={drained}")
+    return results, stats
 
 
 def _replay(eng, args, data, cfg, adaptive=None):
     """Arrival-replay mode: Poisson request stream through the scheduler."""
-    prompts = data.sample(args.requests, args.prompt_len, seed=11)[:, :-1]
-    arrivals = poisson_arrivals(args.requests, args.rate, seed=args.seed)
-    reqs = [Request(req_id=i, tokens=prompts[i].astype(np.int32),
-                    n_tokens=args.tokens, arrival=float(arrivals[i]))
-            for i in range(args.requests)]
+    reqs = _requests(args, data)
     if args.sched == "continuous":
         results, stats = ContinuousScheduler(
             eng, batch=args.batch, chunk=args.chunk, policy=args.policy,
@@ -163,10 +255,71 @@ def main():
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--heads-ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the async router "
+                         "(>1 switches the replay to the fault-tolerant "
+                         "server/router plane)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline (seconds, replica serve "
+                         "clock); expired requests finalize TIMED_OUT at "
+                         "the next chunk boundary")
+    ap.add_argument("--cancel-rate", type=float, default=0.0,
+                    help="fraction of clients that disconnect mid-stream "
+                         "(deterministic per request id); cancelled "
+                         "requests finalize CANCELLED")
+    ap.add_argument("--inject-faults", type=int, default=None,
+                    metavar="SEED",
+                    help="arm the seeded chaos harness: replica r0 crash "
+                         "(when --replicas > 1), chunk stalls, "
+                         "admission-time pool exhaustion, plus "
+                         "--cancel-rate disconnects; exits non-zero on "
+                         "any leaked page or non-terminal request")
+    ap.add_argument("--queue-limit", type=int, default=64,
+                    help="bounded admission queue per replica; submits "
+                         "over it are REJECTED (backpressure)")
     args = ap.parse_args()
+    # ---- argument validation: fail fast with a clear error, never hang
+    # or crash layers deeper --------------------------------------------
+    if args.tokens < 1:
+        ap.error("--tokens must be >= 1")
+    if args.batch < 1:
+        ap.error("--batch must be >= 1")
+    if args.chunk < 1:
+        ap.error("--chunk must be >= 1")
+    if args.prompt_len < 2:
+        ap.error("--prompt-len must be >= 2 (one context token must "
+                 "survive the next-token shift)")
+    if args.arrivals == "poisson":
+        if args.rate <= 0:
+            ap.error("--rate must be > 0 (poisson inter-arrivals are "
+                     "1/rate)")
+        if args.requests < 1:
+            ap.error("--requests must be >= 1")
+    if args.prefill_chunk < 0:
+        ap.error("--prefill-chunk must be >= 0 (0 disables chunked "
+                 "prefill)")
+    if args.age_limit < 0:
+        ap.error("--age-limit must be >= 0 (0 disables aging)")
+    if args.paged and args.page_size < 1:
+        ap.error("--page-size must be >= 1")
+    if args.pool_pages < 0:
+        ap.error("--pool-pages must be >= 0 (0 = dense-equivalent pool)")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.deadline_s is not None and args.deadline_s <= 0:
+        ap.error("--deadline-s must be > 0")
+    if not 0.0 <= args.cancel_rate <= 1.0:
+        ap.error("--cancel-rate must be in [0, 1]")
+    if args.queue_limit < 1:
+        ap.error("--queue-limit must be >= 1")
     if args.spec_width and args.mode != "ghidorah":
         ap.error("--spec-width is a ghidorah option (sequential decoding "
                  "has no verification width)")
+    if _fault_tolerant(args) and (args.arrivals != "poisson"
+                                  or args.sched != "continuous"):
+        ap.error("--replicas/--deadline-s/--cancel-rate/--inject-faults "
+                 "need --arrivals poisson --sched continuous (the async "
+                 "plane serves an arrival stream)")
     paged_kw = dict(paged=args.paged, page_size=args.page_size,
                     pool_pages=args.pool_pages or None)
 
@@ -187,7 +340,12 @@ def main():
         eng = BatchEngine(model, params, max_len=max_len, chunk=args.chunk,
                           **paged_kw)
         if args.arrivals != "none":
-            _replay(eng, args, data, cfg)
+            if _fault_tolerant(args):
+                _replay_async(args, data, _once_then(
+                    eng, lambda: BatchEngine(model, params, max_len=max_len,
+                                             chunk=args.chunk, **paged_kw)))
+            else:
+                _replay(eng, args, data, cfg)
             return
         t0 = time.perf_counter()
         out, stats = eng.generate(batch, args.tokens)
@@ -231,7 +389,19 @@ def main():
               f"(E[AL]={start.acceptance:.2f}, "
               f"step {start.step_time * 1e3:.2f} ms)")
         eng.set_strategy(start.tree)
-        _replay(eng, args, data, cfg, adaptive=strategies)
+
+        def build_auto():
+            e = SpeculativeEngine(model, heads, params, specs[max(widths)],
+                                  max_len=max_len, chunk=args.chunk,
+                                  **paged_kw)
+            e.set_strategy(start.tree)
+            return e
+
+        if _fault_tolerant(args):
+            _replay_async(args, data, _once_then(eng, build_auto),
+                          adaptive=strategies)
+        else:
+            _replay(eng, args, data, cfg, adaptive=strategies)
         return
     if args.width:
         spec = T.build_tree(accs, args.width)
@@ -247,7 +417,14 @@ def main():
     eng = SpeculativeEngine(model, heads, params, spec, max_len=max_len,
                             chunk=args.chunk, **paged_kw)
     if args.arrivals != "none":
-        _replay(eng, args, data, cfg)
+        if _fault_tolerant(args):
+            _replay_async(args, data, _once_then(
+                eng, lambda: SpeculativeEngine(model, heads, params, spec,
+                                               max_len=max_len,
+                                               chunk=args.chunk,
+                                               **paged_kw)))
+        else:
+            _replay(eng, args, data, cfg)
         return
     t0 = time.perf_counter()
     out, stats = eng.generate(batch, args.tokens)        # full batch: B >= 1

@@ -185,19 +185,41 @@ def pages_for(n_tokens, page_size) -> int:
 class PageAllocator:
     """Host-side free list over the pool's reservable page ids.
 
-    Alloc/free happen only at admission/eviction boundaries (and once per
-    ``generate`` call), so this never syncs the device.  Pages are handed
-    out lowest-id-first so runs are deterministic and reuse after
+    Alloc/free happen only at admission/eviction/abort boundaries (and once
+    per ``generate`` call), so this never syncs the device.  Pages are
+    handed out lowest-id-first so runs are deterministic and reuse after
     fragmented frees is exercised by the unit tests.
+
+    Every page handed out is tracked in a held set, so ``outstanding`` /
+    ``conserved`` give the leak audit the fault paths rely on: after any
+    mix of evictions, mid-flight aborts and replica-crash cleanups,
+    ``available + outstanding == n_pages`` must hold at every step and a
+    drained bank must return to ``available == n_pages`` — a page that is
+    neither free nor held by a row is a leak.  Freeing a page that is not
+    currently held (double free, foreign page) raises instead of
+    corrupting the free list.
     """
 
     def __init__(self, n_pages: int):
         self.n_pages = int(n_pages)
         self._free = list(range(self.n_pages))   # kept sorted
+        self._held = set()                        # pages currently reserved
 
     @property
     def available(self) -> int:
         return len(self._free)
+
+    @property
+    def outstanding(self) -> int:
+        """Pages currently reserved by rows (the held side of the audit)."""
+        return len(self._held)
+
+    @property
+    def conserved(self) -> bool:
+        """free + held == pool, with no page on both sides — the invariant
+        every admission/eviction/abort sequence must preserve."""
+        return (len(self._free) + len(self._held) == self.n_pages
+                and not self._held.intersection(self._free))
 
     def alloc(self, n: int) -> list:
         """Take exactly ``n`` pages; raises if the pool cannot supply them
@@ -206,6 +228,7 @@ class PageAllocator:
             raise RuntimeError(
                 f"page pool exhausted: want {n}, have {len(self._free)}")
         pages, self._free = self._free[:n], self._free[n:]
+        self._held.update(pages)
         return pages
 
     def alloc_upto(self, n: int) -> list:
@@ -218,8 +241,9 @@ class PageAllocator:
             p = int(p)
             if p < 0:
                 continue
-            if p >= self.n_pages or p in self._free:
+            if p not in self._held:
                 raise RuntimeError(f"bad page free: {p}")
+            self._held.discard(p)
             self._free.append(p)
         self._free.sort()
 

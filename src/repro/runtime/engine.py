@@ -338,6 +338,42 @@ class _PagedPoolMixin:
         if self.paged and self._alloc is not None:
             self._alloc.free(self._row_pages.pop(b, ()))
 
+    def sched_abort(self, b: int) -> None:
+        """Release a LIVE, unfinished row mid-flight (client cancellation,
+        expired deadline, injected fault).  Identical to the eviction-time
+        release: the allocator is host state, so returning an unfinished
+        row's pages never syncs the device — but the caller MUST reset the
+        row (clearing its device-side block table) before the next chunk
+        runs, or a same-boundary admission could write pages the aborted
+        row still references.  The scheduler's dirty-reset ordering
+        guarantees exactly that."""
+        self.sched_release(b)
+
+    @property
+    def sched_pages_held(self) -> int:
+        """Pages currently reserved by resident rows (0 when dense)."""
+        if not self.paged:
+            return 0
+        return sum(len(p) for p in self._row_pages.values())
+
+    def sched_pool_conserved(self) -> bool:
+        """Page-leak audit: the allocator's free+held must equal the pool
+        and agree with the engine's per-row bookkeeping.  True for dense
+        engines and before the first sched admission."""
+        if not self.paged or self._alloc is None:
+            return True
+        return (self._alloc.conserved
+                and self._alloc.outstanding == self.sched_pages_held)
+
+    def sched_drained(self) -> bool:
+        """True when every page is back on the free list and no row holds
+        a reservation — the zero-leak postcondition every drained stream
+        (including aborted/faulted ones) must satisfy."""
+        if not self.paged or self._alloc is None:
+            return True
+        return (not self._row_pages
+                and self._alloc.available == self._alloc.n_pages)
+
     def _sched_pages(self, b: int, prompt_len: int, n_tokens: int):
         """Allocate row ``b``'s reservation (gated by ``sched_can_admit``),
         -1-padded to the static ``max_pages`` table width."""

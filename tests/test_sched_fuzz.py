@@ -21,6 +21,14 @@ reserve/release orderings (fragmentation, aborted runs): free + reserved
 must equal the pool at every step and a full drain must restore the
 initial free list.
 
+A third fuzz drives the request LIFECYCLE through the stepping API:
+random cancellations (``abort()`` at random boundaries), random
+deadlines and injected admission-exhaustion/stall faults mid-trace.
+Every request must land in exactly one typed terminal state, every
+emitted token array must be a bit-identical PREFIX of the solo run
+(DONE requests the full solo output), and a drained paged pool must
+conserve every page through mid-flight abort/timeout cleanup.
+
 Seeds are fixed (``tests/_mini_hypothesis.py`` derives them from the test
 name), so tier-1/CI replays the exact same traces every run.
 """
@@ -39,7 +47,9 @@ from repro.core.speculative.medusa import init_medusa
 from repro.models.api import get_model
 from repro.runtime.cache import PageAllocator
 from repro.runtime.engine import BatchEngine, SpeculativeEngine
-from repro.runtime.scheduler import (AdmissionPolicy, ContinuousScheduler,
+from repro.runtime.faults import FaultPlan
+from repro.runtime.scheduler import (CANCELLED, DONE, TERMINAL_STATES,
+                                     AdmissionPolicy, ContinuousScheduler,
                                      Request, get_policy)
 
 MAX_LEN = 64
@@ -121,6 +131,71 @@ def test_fuzz_continuous_matches_solo(ex):
                     f"chunked={prefill_chunk}, B={B})")
     if paged:                                     # full drain returns pages
         assert eng._alloc.available == eng._alloc.n_pages
+
+
+@settings(max_examples=8, deadline=None)
+@given(ex=st.tuples(
+    st.integers(2, 6),                         # number of requests
+    st.integers(0, 2 ** 31 - 1),               # lifecycle seed
+    st.sampled_from(["seq", "spec"]),
+    st.sampled_from([False, True]),            # paged
+    st.sampled_from([2, 3]),                   # bank width B
+))
+def test_fuzz_lifecycle_terminal_and_conserved(ex):
+    """Random cancels/deadlines/faults mid-trace: every request ends in
+    exactly one typed terminal state, emitted tokens are always a
+    bit-identical prefix of the solo run, and the paged pool conserves
+    every page through mid-flight abort and timeout cleanup."""
+    n, seed, kind, paged, B = ex
+    cfg, eng = _engine(kind, paged)
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.choice(PROMPT_LENS))
+        reqs.append(Request(
+            req_id=i,
+            tokens=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            n_tokens=int(rng.choice(BUDGETS))))
+    abort_at = {}                          # req_id -> boundary to cancel at
+    for r in reqs:
+        u = rng.random()
+        if u < 0.35:
+            abort_at[r.req_id] = int(rng.integers(1, 7))
+        elif u < 0.5:
+            r.deadline = float(rng.random() * 0.003)   # expires early
+    plan = FaultPlan(seed=seed,
+                     stall_rate=float(rng.choice([0.0, 0.2])),
+                     stall_s=0.001,
+                     exhaust_rate=float(rng.choice([0.0, 0.3])))
+    sched = ContinuousScheduler(eng, batch=B, faults=plan.injector("fz"))
+    sched.start(reqs)
+    i = 0
+    while sched.has_work:
+        i += 1
+        assert i < 500, "lifecycle trace did not converge"
+        for rid, bnd in abort_at.items():
+            if bnd == i:
+                sched.abort(rid)
+        sched.boundary()
+    results, stats = sched.finish(reqs)
+
+    assert [r.req_id for r in results] == [r.req_id for r in reqs]
+    for r, req in zip(results, reqs):
+        assert r.state in TERMINAL_STATES
+        solo_toks, solo_n = _solo((kind, paged), eng, req)
+        assert len(r.tokens) == r.n_emitted <= solo_n
+        np.testing.assert_array_equal(
+            r.tokens, solo_toks[:r.n_emitted],
+            err_msg=f"req {r.req_id} state={r.state} (kind={kind}, "
+                    f"paged={paged}, B={B})")
+        if r.state == DONE:                # full solo output, nothing less
+            assert r.n_emitted == solo_n
+        if r.state == CANCELLED:
+            assert req.req_id in abort_at  # only injected cancels
+    assert sum(stats["states"].values()) == n
+    if paged:                              # drained pool conserves pages
+        assert eng._alloc.available == eng._alloc.n_pages
+        assert eng.sched_pool_conserved() and eng.sched_drained()
 
 
 @settings(max_examples=30, deadline=None)

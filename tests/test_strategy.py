@@ -254,3 +254,67 @@ def test_adaptive_controller_unit():
         cfg, model, params, _, _ = _setup()
         ContinuousScheduler(BatchEngine(model, params, max_len=64),
                             adaptive={1: mk(1, 1.0, 1e-3)})
+
+
+def test_adaptive_perwidth_probe_unit():
+    """Scheduled online acceptance probes de-bias the per-width ratios:
+    every ``probe_every`` boundaries the controller switches the bank to
+    a NON-ACTIVE drafted width for ``probe_boundaries`` boundaries, that
+    width's observation lands in ``ratios[w]`` without touching the
+    active width's measured ratio, and the post-probe argmax reads each
+    width through its OWN ratio instead of extrapolating the active
+    one."""
+    mk = lambda w, al, t: arca.Strategy(width=w, tree=None, ratio=0.5,
+                                        acceptance=al, step_time=t,
+                                        throughput=al / t)
+    # step times keep width 4 the argmax at full ratios and width 1 the
+    # argmax when every ratio collapses to 0
+    ctrl = AdaptiveSpeculation(
+        {1: mk(1, 1.0, 1e-3), 2: mk(2, 2.0, 1.4e-3), 4: mk(4, 3.0, 2e-3)},
+        min_steps=1, switch_every=1, probe_every=3, probe_boundaries=2)
+    ctrl.observe(np.asarray([[3, 3, 3, 3]]), width=4)   # w4 self-reports
+    assert ctrl.ratios[4] == pytest.approx(1.0)
+    assert ctrl.pick(4) is None                  # b1: argmax stays put
+    assert ctrl.pick(4) is None                  # b2
+    # b3: the scheduled probe fires on the non-active drafted width (2)
+    assert ctrl.pick(4) == 2
+    assert ctrl.switches[-1] == (3, 4, 2)
+    # the probed width's observation is BAD: its own ratio collapses,
+    # the previously measured width-4 ratio is untouched
+    ctrl.observe(np.asarray([[1, 1, 1, 1]]), width=2)
+    assert ctrl.ratios[2] == pytest.approx(0.0)
+    assert ctrl.ratios[4] == pytest.approx(1.0)
+    assert ctrl.pick(2) is None                  # b4: probe window holds
+    # b5: window closes; argmax reads al_hat(4)=3 via ratios[4], NOT the
+    # collapsed global ratio — the probe de-biased, it did not poison
+    assert ctrl.pick(2) == 4
+    assert ctrl.al_hat(4) == pytest.approx(3.0)
+    assert ctrl.al_hat(2) == pytest.approx(1.0)
+    assert ctrl.switches[-1] == (5, 2, 4)
+
+    # round-robin: with two non-active candidates the next probe targets
+    # the OTHER one
+    ctrl2 = AdaptiveSpeculation(
+        {1: mk(1, 1.0, 1e-3), 2: mk(2, 2.0, 1.4e-3), 4: mk(4, 3.0, 2e-3),
+         8: mk(8, 4.0, 2.5e-3)},
+        min_steps=1, switch_every=1, probe_every=2, probe_boundaries=1)
+    ctrl2.observe(np.asarray([[4, 4, 4, 4]]), width=8)
+    first = None
+    targets = []
+    for _ in range(12):
+        w = ctrl2.pick(8)
+        if w is not None and ctrl2._probing is not None:
+            targets.append(w)
+            # probe window is 1 boundary: next pick closes it
+            back = ctrl2.pick(w)
+            assert back in (None, 8)
+        if len(targets) >= 2:
+            break
+    assert len(set(targets)) == 2            # two different probe widths
+
+    # defaults keep probing OFF (legacy behavior) and bad args raise
+    assert AdaptiveSpeculation({4: mk(4, 3.0, 2e-3)}).probe_every == 0
+    with pytest.raises(ValueError):
+        AdaptiveSpeculation({4: mk(4, 3.0, 2e-3)}, probe_every=-1)
+    with pytest.raises(ValueError):
+        AdaptiveSpeculation({4: mk(4, 3.0, 2e-3)}, probe_boundaries=0)
