@@ -1,0 +1,42 @@
+"""reprolint: AST-based static analysis enforcing this stack's invariants.
+
+Six PRs of growth piled up correctness invariants that were enforced only
+by convention: the decode hot path must stay device-resident (one host
+sync per chunk), jitted state carries must be donated (the paged pool is
+updated in place, never copied), traced code must be pure, pytrees passed
+as jit arguments must be registered completely, the async server's shared
+state must stay behind its lock, and every engine must implement the full
+scheduler slot protocol.  Any of these can rot silently — a forgotten
+``donate_argnums`` doubles the pool's memory without failing a single
+test — so this package machine-checks them.
+
+Run it with::
+
+    PYTHONPATH=src python -m repro.analysis.lint src/
+
+Rules (see ``src/repro/analysis/README.md`` for the full story):
+
+* **R1 jit-purity** — no host side effects (``time.*``, ``print``,
+  ``random``, ``np.*``-on-tracer, ``.item()`` / scalar coercions,
+  mutable default args) inside functions reachable from jit roots
+  (``jax.jit``, ``lax.scan``/``while_loop``/``fori_loop`` bodies).
+* **R2 donation discipline** — a jit threading a cache/pool/state carry
+  must declare ``donate_argnums``, and a donated name must not be read
+  after the jitted call in the enclosing scope.
+* **R3 host-sync discipline** — ``block_until_ready``, ``np.asarray``
+  in the chunk-loop/boundary hot paths, and wall-clock ``time.time()``
+  in measured intervals (use ``time.perf_counter()``).
+* **R4 lock discipline** — attributes mutated under ``self._lock`` are
+  never touched off-lock, and worker-thread-owned objects (the
+  scheduler/engine behind ``AsyncEngineServer``) are never reached from
+  event-loop methods.
+* **R5 pytree completeness** — registered pytree classes flatten every
+  field; dataclasses built inside traced code must be registered.
+* **R6 slot-protocol conformance** — engines exposing any ``sched_*``
+  method implement the full protocol the scheduler calls, cross-checked
+  against the declared ``SchedulableEngine`` Protocol.
+
+The implementation is stdlib-only (``ast`` + ``tokenize``): it imports
+nothing from the repo under analysis and needs no third-party deps.
+"""
+from repro.analysis.core import Finding, lint_paths, load_baseline  # noqa: F401

@@ -1,0 +1,468 @@
+"""Project index + jit-root call-graph for reprolint.
+
+Builds, from the parsed ``Project``:
+
+* a per-module symbol table (module-level functions, classes + methods,
+  nested functions, import aliases);
+* the set of **jit roots** — every callable handed to a tracing
+  entry point (``jax.jit``, ``lax.scan`` / ``while_loop`` / ``fori_loop``
+  / ``cond`` / ``map`` bodies, ``jax.checkpoint`` / ``grad`` /
+  ``value_and_grad`` / ``vmap`` / ``pmap``) plus every def decorated with
+  ``@jax.jit`` / ``@partial(jax.jit, ...)``;
+* a conservative reachability walk from those roots: bare-name calls
+  resolve through the lexical scope chain (enclosing defs -> module ->
+  imports, cross-module), ``self.method()`` resolves through the
+  enclosing class and its statically-known bases, ``module.fn()``
+  resolves through import aliases.  Attribute calls on dynamic objects
+  (``model.decode``) stay unresolved — polymorphic dispatch is out of
+  scope, which keeps the walk noise-free.
+
+The same index records every ``jax.jit(...)`` site with its resolved
+target and donation kwargs for R2, and exposes the reached-function set
+for R1/R5.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import Project, SourceFile
+
+# callables whose function-valued arguments are traced: name (last
+# attribute segment) -> indices of callable args ("*" = every arg)
+TRACE_ARG_POS: Dict[str, Tuple] = {
+    "jit": (0,),
+    "scan": (0,),
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "cond": (1, 2),
+    "switch": ("*",),
+    "map": (0,),
+    "checkpoint": (0,),
+    "remat": (0,),
+    "grad": (0,),
+    "value_and_grad": (0,),
+    "vmap": (0,),
+    "pmap": (0,),
+}
+# module-ish prefixes we accept for the names above (plain `jit(f)` with
+# `from jax import jit` is resolved through import aliases instead)
+_JAX_PREFIXES = {"jax", "lax", "jax.lax", "jax.tree_util", "functools"}
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'jax.lax.scan' for nested Attribute/Name chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    node: ast.AST                       # FunctionDef/AsyncFunctionDef/Lambda
+    file: SourceFile
+    qualname: str
+    parent: object                      # FuncInfo | ClassInfo | ModuleInfo
+    cls: Optional["ClassInfo"] = None   # enclosing class (for self.x())
+    locals: Dict[str, "FuncInfo"] = dataclasses.field(default_factory=dict)
+
+    @property
+    def params(self) -> List[str]:
+        a = self.node.args
+        return [p.arg for p in a.posonlyargs + a.args]
+
+    @property
+    def line(self) -> int:
+        return self.node.lineno
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    node: ast.ClassDef
+    file: SourceFile
+    name: str
+    module: "ModuleInfo"
+    methods: Dict[str, FuncInfo] = dataclasses.field(default_factory=dict)
+    base_names: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    file: SourceFile
+    name: str                                        # dotted module path
+    funcs: Dict[str, FuncInfo] = dataclasses.field(default_factory=dict)
+    classes: Dict[str, ClassInfo] = dataclasses.field(default_factory=dict)
+    imports: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class JitSite:
+    """One ``jax.jit(target, ...)`` call (or @jit-decorated def)."""
+    call: Optional[ast.Call]            # None for decorated defs
+    file: SourceFile
+    scope: object                       # FuncInfo | ClassInfo | ModuleInfo
+    target: Optional[FuncInfo]          # resolved jitted callable
+    donate: Tuple[int, ...]             # declared donate_argnums
+    has_donate: bool
+    assigned_to: Optional[str]          # "name" or "self.attr" when known
+    line: int
+
+
+def _module_name(rel: str) -> str:
+    name = rel[:-3] if rel.endswith(".py") else rel
+    return name.replace("/", ".").replace("\\", ".")
+
+
+class Index:
+    """Symbol tables + jit roots + reachability for one Project."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.jit_sites: List[JitSite] = []
+        self._trace_sites: List[Tuple[ast.Call, object, SourceFile]] = []
+        self._decorated_roots: List[FuncInfo] = []
+        for f in project.files:
+            self._index_file(f)
+        self._resolve_jit_sites()
+
+    # ---- indexing --------------------------------------------------------
+    def _index_file(self, f: SourceFile) -> None:
+        mod = ModuleInfo(file=f, name=_module_name(f.rel))
+        self.modules[mod.name] = mod
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    mod.imports[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    mod.imports[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+        self._index_body(f.tree.body, mod, mod, None, f)
+
+    def _index_body(self, body, scope, mod: ModuleInfo,
+                    cls: Optional[ClassInfo], f: SourceFile) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = node.name if scope is mod else \
+                    f"{getattr(scope, 'qualname', getattr(scope, 'name', ''))}." \
+                    f"{node.name}"
+                fi = FuncInfo(node=node, file=f, qualname=qual,
+                              parent=scope, cls=cls)
+                if isinstance(scope, ModuleInfo):
+                    mod.funcs[node.name] = fi
+                elif isinstance(scope, ClassInfo):
+                    scope.methods[node.name] = fi
+                    fi.cls = scope
+                else:
+                    scope.locals[node.name] = fi
+                if self._has_jit_decorator(node, mod):
+                    self._decorated_roots.append(fi)
+                    self.jit_sites.append(JitSite(
+                        call=None, file=f, scope=scope, target=fi,
+                        donate=self._decorator_donate(node),
+                        has_donate=self._decorator_has_donate(node),
+                        assigned_to=node.name, line=node.lineno))
+                self._index_body(node.body, fi, mod, fi.cls, f)
+            elif isinstance(node, ast.ClassDef):
+                ci = ClassInfo(node=node, file=f, name=node.name, module=mod)
+                ci.base_names = [dotted(b) or "" for b in node.bases]
+                mod.classes[node.name] = ci
+                self._index_body(node.body, ci, mod, ci, f)
+            else:
+                # non-def statements: record trace-entry calls and pick up
+                # defs nested inside if/for/while/with/try blocks (the
+                # engine builds its chunk fns inside `if K not in ...:`)
+                self._scan_stmt(node, scope, mod, cls, f)
+
+    def _scan_stmt(self, node, scope, mod: ModuleInfo,
+                   cls: Optional[ClassInfo], f: SourceFile) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                self._index_body([child], scope, mod, cls, f)
+                continue
+            if isinstance(child, ast.Call):
+                if self._trace_entry_name(child, scope) is not None:
+                    self._trace_sites.append((child, scope, f))
+            self._scan_stmt(child, scope, mod, cls, f)
+
+    def _entry_kind(self, func_node, scope) -> Optional[str]:
+        """'jit'/'scan'/... when ``func_node`` names a tracing entry."""
+        d = dotted(func_node)
+        if d is None:
+            return None
+        # functools.partial(jax.jit, ...) handled by callers directly
+        parts = d.split(".")
+        last = parts[-1]
+        if last not in TRACE_ARG_POS:
+            return None
+        prefix = ".".join(parts[:-1])
+        if prefix in _JAX_PREFIXES or prefix.endswith(".lax"):
+            return last
+        if not prefix:
+            # bare name: accept if imported from jax ('from jax import jit')
+            mod = self._module_of(scope)
+            tgt = mod.imports.get(last, "") if mod else ""
+            if tgt.startswith("jax"):
+                return last
+        return None
+
+    def _trace_entry_name(self, call: ast.Call, scope) -> Optional[str]:
+        kind = self._entry_kind(call.func, scope)
+        if kind is not None:
+            return kind
+        # partial(jax.jit, ...) / functools.partial(jax.jit, ...)
+        d = dotted(call.func)
+        if d in ("partial", "functools.partial") and call.args:
+            inner = self._entry_kind(call.args[0], scope)
+            if inner == "jit":
+                return "jit"
+        return None
+
+    # ---- decorator helpers ----------------------------------------------
+    def _jit_decorators(self, node):
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call):
+                d = dotted(dec.func)
+                if d in ("partial", "functools.partial") and dec.args and \
+                        dotted(dec.args[0]) in ("jax.jit", "jit"):
+                    yield dec
+                elif d in ("jax.jit", "jit"):
+                    yield dec
+            elif dotted(dec) in ("jax.jit", "jit"):
+                yield dec
+
+    def _has_jit_decorator(self, node, mod: ModuleInfo) -> bool:
+        return next(self._jit_decorators(node), None) is not None
+
+    def _decorator_donate(self, node) -> Tuple[int, ...]:
+        for dec in self._jit_decorators(node):
+            if isinstance(dec, ast.Call):
+                return _donate_from_kwargs(dec.keywords)
+        return ()
+
+    def _decorator_has_donate(self, node) -> bool:
+        for dec in self._jit_decorators(node):
+            if isinstance(dec, ast.Call) and any(
+                    k.arg in ("donate_argnums", "donate_argnames")
+                    for k in dec.keywords):
+                return True
+        return False
+
+    # ---- resolution ------------------------------------------------------
+    def _module_of(self, scope) -> Optional[ModuleInfo]:
+        while scope is not None and not isinstance(scope, ModuleInfo):
+            scope = getattr(scope, "parent", None) or \
+                getattr(scope, "module", None)
+        return scope
+
+    def _module_by_dotted(self, target: str) -> Optional[ModuleInfo]:
+        """Match 'repro.runtime.cache' whether files were rooted at src/
+        or at the repo root."""
+        if target in self.modules:
+            return self.modules[target]
+        for name, mod in self.modules.items():
+            if name.endswith("." + target) or target.endswith("." + name):
+                return mod
+        # suffix match on the tail (src/-rooted vs repo-rooted)
+        for name, mod in self.modules.items():
+            if name.split(".")[-1] == target.split(".")[-1] and \
+                    target.split(".")[-2:] == name.split(".")[-2:]:
+                return mod
+        return None
+
+    def resolve_import(self, mod: ModuleInfo, name: str
+                       ) -> Optional[FuncInfo]:
+        target = mod.imports.get(name)
+        if not target:
+            return None
+        parts = target.rsplit(".", 1)
+        if len(parts) == 2:
+            m = self._module_by_dotted(parts[0])
+            if m is not None:
+                if parts[1] in m.funcs:
+                    return m.funcs[parts[1]]
+        return None
+
+    def resolve_class(self, mod: ModuleInfo, name: str
+                      ) -> Optional[ClassInfo]:
+        if name in mod.classes:
+            return mod.classes[name]
+        target = mod.imports.get(name)
+        if target:
+            head, _, tail = target.rpartition(".")
+            m = self._module_by_dotted(head)
+            if m is not None and tail in m.classes:
+                return m.classes[tail]
+        return None
+
+    def class_methods(self, ci: ClassInfo, *, seen=None
+                      ) -> Dict[str, FuncInfo]:
+        """Own + inherited methods (statically-resolved bases)."""
+        seen = seen if seen is not None else set()
+        if ci.name in seen:
+            return {}
+        seen.add(ci.name)
+        out: Dict[str, FuncInfo] = {}
+        for base in ci.base_names:
+            bci = self.resolve_class(ci.module, base.split(".")[-1])
+            if bci is not None:
+                out.update(self.class_methods(bci, seen=seen))
+        out.update(ci.methods)
+        return out
+
+    def resolve_call(self, call: ast.Call, scope) -> Optional[FuncInfo]:
+        """Resolve a Call's callee to a project FuncInfo (or None)."""
+        fn = call.func
+        if isinstance(fn, ast.Name):
+            s = scope
+            while isinstance(s, FuncInfo):
+                if fn.id in s.locals:
+                    return s.locals[fn.id]
+                s = s.parent
+            mod = self._module_of(scope)
+            if mod is None:
+                return None
+            if fn.id in mod.funcs:
+                return mod.funcs[fn.id]
+            return self.resolve_import(mod, fn.id)
+        if isinstance(fn, ast.Attribute):
+            base = fn.value
+            if isinstance(base, ast.Name) and base.id in ("self", "cls"):
+                cls = getattr(scope, "cls", None)
+                if cls is not None:
+                    return self.class_methods(cls).get(fn.attr)
+                return None
+            d = dotted(base)
+            if d is not None:
+                mod = self._module_of(scope)
+                if mod is not None:
+                    target = mod.imports.get(d)
+                    if target:
+                        m = self._module_by_dotted(target)
+                        if m is not None and fn.attr in m.funcs:
+                            return m.funcs[fn.attr]
+                # Class.method / Class.staticmethod
+                if mod is not None:
+                    ci = self.resolve_class(mod, d.split(".")[-1])
+                    if ci is not None:
+                        return self.class_methods(ci).get(fn.attr)
+        return None
+
+    def _callable_arg(self, call: ast.Call, i: int, scope, f: SourceFile
+                      ) -> Optional[FuncInfo]:
+        if i >= len(call.args):
+            return None
+        arg = call.args[i]
+        if isinstance(arg, ast.Lambda):
+            fi = FuncInfo(node=arg, file=f,
+                          qualname=f"<lambda L{arg.lineno}>", parent=scope,
+                          cls=getattr(scope, "cls", None))
+            return fi
+        if isinstance(arg, (ast.Name, ast.Attribute)):
+            fake = ast.Call(func=arg, args=[], keywords=[])
+            ast.copy_location(fake, arg)
+            return self.resolve_call(fake, scope)
+        if isinstance(arg, ast.Call):
+            # jax.checkpoint(lambda p: ...) nested inside value_and_grad
+            inner = self._trace_entry_name(arg, scope)
+            if inner is not None:
+                return None        # its own site records the callable
+        return None
+
+    def _resolve_jit_sites(self) -> None:
+        for call, scope, f in self._trace_sites:
+            kind = self._trace_entry_name(call, scope)
+            pos = TRACE_ARG_POS.get(kind, ())
+            indices = range(len(call.args)) if pos == ("*",) else pos
+            # partial(jax.jit, ...) decorates elsewhere; its callable (if
+            # given positionally) is arg 1
+            d = dotted(call.func)
+            if d in ("partial", "functools.partial"):
+                indices = (1,) if len(call.args) > 1 else ()
+            for i in indices:
+                target = self._callable_arg(call, i, scope, f)
+                if kind == "jit":
+                    self.jit_sites.append(JitSite(
+                        call=call, file=f, scope=scope, target=target,
+                        donate=_donate_from_kwargs(call.keywords),
+                        has_donate=any(
+                            k.arg in ("donate_argnums", "donate_argnames")
+                            for k in call.keywords),
+                        assigned_to=None, line=call.lineno))
+                if target is not None:
+                    self._decorated_roots.append(target)
+
+    # ---- reachability ----------------------------------------------------
+    def reached_from_jit(self) -> List[FuncInfo]:
+        """Every project function reachable from any jit/scan root."""
+        roots = list(self._decorated_roots)
+        for site in self.jit_sites:
+            if site.target is not None:
+                roots.append(site.target)
+        seen: Set[int] = set()
+        out: List[FuncInfo] = []
+        work = list(roots)
+        while work:
+            fi = work.pop()
+            key = id(fi.node)
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(fi)
+            body = [fi.node.body] if isinstance(fi.node, ast.Lambda) \
+                else list(fi.node.body)
+            for stmt in body:
+                for node in ast.walk(stmt):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    callee = self.resolve_call(node, fi)
+                    if callee is not None:
+                        work.append(callee)
+                    # scan/while/cond bodies nested inside traced code
+                    kind = self._trace_entry_name(node, fi)
+                    if kind is not None:
+                        pos = TRACE_ARG_POS.get(kind, ())
+                        idxs = range(len(node.args)) if pos == ("*",) \
+                            else pos
+                        for i in idxs:
+                            t = self._callable_arg(node, i, fi, fi.file)
+                            if t is not None:
+                                work.append(t)
+        return out
+
+
+def _donate_from_kwargs(keywords) -> Tuple[int, ...]:
+    for k in keywords:
+        if k.arg == "donate_argnums":
+            v = k.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out = []
+                for e in v.elts:
+                    if isinstance(e, ast.Constant) and \
+                            isinstance(e.value, int):
+                        out.append(e.value)
+                return tuple(out)
+    return ()
+
+
+def build_index(project: Project) -> Index:
+    return Index(project)
+
+
+def get_index(project: Project) -> Index:
+    """One shared Index per Project (rules run over the same parse)."""
+    idx = getattr(project, "_reprolint_index", None)
+    if idx is None:
+        idx = Index(project)
+        project._reprolint_index = idx
+    return idx

@@ -1,0 +1,87 @@
+"""reprolint CLI.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis.lint src/
+    PYTHONPATH=src python -m repro.analysis.lint src/ --rules R2,R3
+    PYTHONPATH=src python -m repro.analysis.lint src/ --write-baseline
+    PYTHONPATH=src python -m repro.analysis.lint --list-rules
+
+Exit status 0 iff every finding is suppressed inline or present in the
+committed baseline (``src/repro/analysis/baseline.txt`` by default);
+otherwise each fresh finding is printed as ``file:line RULE message``
+and the exit status is 1.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis import core
+
+_DEFAULT_BASELINE = Path(__file__).parent / "baseline.txt"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="AST-based invariant checks for this repo "
+                    "(jit purity, donation, host syncs, locks, pytrees, "
+                    "slot protocol)")
+    ap.add_argument("paths", nargs="*", help="files or directories to lint")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated subset, e.g. R1,R3")
+    ap.add_argument("--baseline", default=str(_DEFAULT_BASELINE),
+                    help="baseline file of grandfathered finding keys")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline (report everything)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline and exit 0")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--root", default=None,
+                    help="anchor for relative paths in findings/baseline")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        core._ensure_rules_loaded()
+        for rid in sorted(core.RULE_DOC):
+            print(f"{rid}  {core.RULE_DOC[rid]}")
+        return 0
+    if not args.paths:
+        ap.error("no paths given (or use --list-rules)")
+
+    rules = [r.strip() for r in args.rules.split(",")] if args.rules \
+        else None
+    root = Path(args.root) if args.root else None
+    findings = core.lint_paths(args.paths, rules=rules, root=root)
+
+    if args.write_baseline:
+        core.write_baseline(args.baseline, findings)
+        print(f"reprolint: wrote {len(findings)} finding key(s) to "
+              f"{args.baseline}")
+        return 0
+
+    baseline = set() if args.no_baseline else \
+        core.load_baseline(args.baseline)
+    fresh = [f for f in findings if f.key not in baseline]
+    for f in fresh:
+        print(f.render())
+    n_base = len(findings) - len(fresh)
+    if fresh:
+        print(f"reprolint: {len(fresh)} finding(s)"
+              + (f" ({n_base} baselined)" if n_base else ""),
+              file=sys.stderr)
+        return 1
+    stale = baseline - {f.key for f in findings}
+    if stale:
+        print(f"reprolint: clean; {len(stale)} stale baseline entr"
+              f"{'y' if len(stale) == 1 else 'ies'} can be deleted",
+              file=sys.stderr)
+    print(f"reprolint: clean"
+          + (f" ({n_base} baselined finding(s))" if n_base else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,232 @@
+"""R2 — donation discipline for state-carrying jits.
+
+The engine's whole residency story rests on the paged pool being updated
+in place: every jit that threads a cache/pool/state carry must declare
+``donate_argnums`` for it, or XLA double-buffers the carry (PR 3
+measured the pool at 2x memory without donation).  And once donated, the
+buffer is dead — reading the donated name after the jitted call in the
+enclosing scope is a use-after-free that jax only reports at runtime.
+
+Detection: for every ``jax.jit`` site with a statically-resolvable
+target, an argument is *state-like* if its parameter name looks like a
+carry (``state``/``st``/``cache``/``pool``/``opt``/``*_state``/...), or
+if it is forwarded one call deep into a parameter with such a name
+(lambda wrappers: ``jax.jit(lambda p, o, b: train_step(.., p, o, b))``).
+``params`` deliberately does NOT match — inference jits thread model
+parameters across calls and must not donate them.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis import callgraph
+from repro.analysis.core import Finding, Project, register_rule
+from repro.analysis.callgraph import FuncInfo, dotted
+
+_STATE_EXACT = {"state", "st", "cache", "carry", "pool", "opt",
+                "opt_state", "kv", "kv_cache", "mem", "memory", "buf"}
+
+
+def _statelike(name: str) -> bool:
+    return name in _STATE_EXACT or \
+        name.endswith(("_state", "_cache", "_pool", "_carry"))
+
+
+def _donate_names(keywords) -> Tuple[str, ...]:
+    for k in keywords:
+        if k.arg == "donate_argnames":
+            v = k.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return tuple(e.value for e in v.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, str))
+    return ()
+
+
+def _stateful_args(idx, target: FuncInfo) -> Dict[int, str]:
+    """index -> reason, for every state-like parameter of ``target``."""
+    params = [p for p in target.params if p not in ("self", "cls")]
+    stateful: Dict[int, str] = {}
+    for i, p in enumerate(params):
+        if _statelike(p):
+            stateful[i] = f"`{p}`"
+    # one hop: a param forwarded (by position or keyword) into a callee's
+    # state-like parameter is itself the carry
+    body = [target.node.body] if isinstance(target.node, ast.Lambda) \
+        else list(target.node.body)
+    pos_of = {p: i for i, p in enumerate(params)}
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = idx.resolve_call(node, target)
+            if callee is None:
+                continue
+            cparams = [p for p in callee.params if p not in ("self", "cls")]
+            for j, arg in enumerate(node.args):
+                if isinstance(arg, ast.Name) and arg.id in pos_of \
+                        and j < len(cparams) and _statelike(cparams[j]):
+                    stateful.setdefault(
+                        pos_of[arg.id],
+                        f"`{arg.id}` (forwarded to "
+                        f"`{callee.qualname}({cparams[j]})`)")
+            for kw in node.keywords:
+                if kw.arg and isinstance(kw.value, ast.Name) \
+                        and kw.value.id in pos_of and _statelike(kw.arg):
+                    stateful.setdefault(
+                        pos_of[kw.value.id],
+                        f"`{kw.value.id}` (forwarded to "
+                        f"`{callee.qualname}({kw.arg})`)")
+    return stateful
+
+
+@register_rule(
+    "R2",
+    "donation discipline: state-carrying jits declare donate_argnums; "
+    "donated names are never read after the jitted call")
+def rule_donation(project: Project) -> List[Finding]:
+    idx = callgraph.get_index(project)
+    out: List[Finding] = []
+    seen = set()
+
+    def add(rel, line, msg):
+        if (rel, line, msg) not in seen:
+            seen.add((rel, line, msg))
+            out.append(Finding(path=rel, line=line, rule="R2", message=msg))
+
+    for site in idx.jit_sites:
+        if site.target is None:
+            continue
+        stateful = _stateful_args(idx, site.target)
+        if not stateful:
+            continue
+        tname = site.target.qualname
+        if not site.has_donate:
+            names = ", ".join(stateful[i] for i in sorted(stateful))
+            add(site.file.rel, site.line,
+                f"jit of `{tname}` threads state-like argument(s) {names} "
+                f"but declares no donate_argnums — the carry is "
+                f"double-buffered instead of updated in place")
+            continue
+        donate_names = () if site.call is None else \
+            _donate_names(site.call.keywords)
+        params = [p for p in site.target.params if p not in ("self", "cls")]
+        for i in sorted(stateful):
+            if i not in site.donate and params[i] not in donate_names \
+                    and (site.donate or donate_names):
+                add(site.file.rel, site.line,
+                    f"state-like argument {stateful[i]} (index {i}) of "
+                    f"jitted `{tname}` is missing from donate_argnums"
+                    f"={site.donate}")
+
+    # ---- use-after-donate ------------------------------------------------
+    for f in project.files:
+        site_by_call = {id(s.call): s for s in idx.jit_sites
+                        if s.call is not None and s.file is f}
+        for node in ast.walk(f.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            _check_use_after_donate(f, node, site_by_call, add)
+        # self._x = jax.jit(...) in __init__, called from other methods
+        for cnode in ast.walk(f.tree):
+            if not isinstance(cnode, ast.ClassDef):
+                continue
+            attr_donate: Dict[str, Tuple[int, ...]] = {}
+            for sub in ast.walk(cnode):
+                if isinstance(sub, ast.Assign) and id(sub.value) in \
+                        site_by_call and len(sub.targets) == 1:
+                    t = sub.targets[0]
+                    if isinstance(t, ast.Attribute) and \
+                            isinstance(t.value, ast.Name) and \
+                            t.value.id == "self":
+                        s = site_by_call[id(sub.value)]
+                        if s.donate:
+                            attr_donate[t.attr] = s.donate
+            if not attr_donate:
+                continue
+            for m in cnode.body:
+                if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    _check_attr_use_after_donate(f, m, attr_donate, add)
+    return out
+
+
+def _name_lines(fn_node, name):
+    loads, stores = [], []
+    for n in ast.walk(fn_node):
+        if isinstance(n, ast.Name) and n.id == name:
+            (loads if isinstance(n.ctx, ast.Load) else stores).append(
+                n.lineno)
+    return sorted(loads), sorted(stores)
+
+
+def _flag_reads_after(f, fn_node, call, donated_args, add, label):
+    end = getattr(call, "end_lineno", call.lineno)
+    for name in donated_args:
+        loads, stores = _name_lines(fn_node, name)
+        for load in loads:
+            if load <= end:
+                continue
+            if any(call.lineno <= s <= load for s in stores):
+                break           # rebound before (or at) this read: fine
+            add(f.rel, load,
+                f"`{name}` is read after being donated to {label} — "
+                f"donated buffers are invalidated by the call")
+            break               # one finding per donated name is enough
+
+
+def _in_return(fn_node) -> set:
+    """ids of every node nested inside a Return statement: a donating
+    call whose value is immediately returned leaves the scope — later
+    reads on sibling branches are not reads-after-donate."""
+    out = set()
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.Return) and node.value is not None:
+            for sub in ast.walk(node.value):
+                out.add(id(sub))
+    return out
+
+
+def _check_use_after_donate(f, fn_node, site_by_call, add):
+    jitted_vars: Dict[str, Tuple[int, ...]] = {}
+    for sub in ast.walk(fn_node):
+        if isinstance(sub, ast.Assign) and id(sub.value) in site_by_call \
+                and len(sub.targets) == 1 and \
+                isinstance(sub.targets[0], ast.Name):
+            s = site_by_call[id(sub.value)]
+            if s.donate:
+                jitted_vars[sub.targets[0].id] = s.donate
+    if not jitted_vars:
+        return
+    returned = _in_return(fn_node)
+    for sub in ast.walk(fn_node):
+        if id(sub) in returned:
+            continue
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                and sub.func.id in jitted_vars:
+            donate = jitted_vars[sub.func.id]
+            donated_args = [a.id for i, a in enumerate(sub.args)
+                            if i in donate and isinstance(a, ast.Name)]
+            _flag_reads_after(f, fn_node, sub, donated_args, add,
+                              f"jitted `{sub.func.id}` "
+                              f"(donate_argnums={donate})")
+
+
+def _check_attr_use_after_donate(f, method, attr_donate, add):
+    returned = _in_return(method)
+    for sub in ast.walk(method):
+        if id(sub) in returned:
+            continue
+        if isinstance(sub, ast.Call) and \
+                isinstance(sub.func, ast.Attribute) and \
+                isinstance(sub.func.value, ast.Name) and \
+                sub.func.value.id == "self" and \
+                sub.func.attr in attr_donate:
+            donate = attr_donate[sub.func.attr]
+            donated_args = [a.id for i, a in enumerate(sub.args)
+                            if i in donate and isinstance(a, ast.Name)]
+            _flag_reads_after(f, method, sub, donated_args, add,
+                              f"jitted `self.{sub.func.attr}` "
+                              f"(donate_argnums={donate})")

@@ -1,0 +1,111 @@
+"""R3 — host-sync discipline in the decode hot path.
+
+The stack's performance contract is ONE host sync per chunk boundary
+(`np.asarray` on the chunk's token block).  Any extra
+``block_until_ready`` / ``np.asarray`` inside the hot functions
+(``generate`` / ``boundary`` / ``sched_step`` / ``sched_emitted`` in
+``runtime/``) serializes host and device and erodes the measured
+speedups silently.  Wall-clock ``time.time()`` in measured intervals is
+flagged everywhere (it is not monotonic; NTP steps corrupt latency
+numbers) — suppress only where an absolute timestamp is intended.
+
+Benchmark and test files are allowlisted for the sync checks: a
+benchmark's ``block_until_ready`` IS the measurement.  The intended
+boundary syncs in runtime code carry inline ``# reprolint: disable=R3``
+suppressions — making the budgeted sync sites grep-able is the point.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import PurePath
+from typing import List
+
+from repro.analysis.core import Finding, Project, SourceFile, register_rule
+from repro.analysis.callgraph import dotted
+
+_HOT_FUNCS = {"generate", "boundary", "sched_step", "sched_emitted",
+              "step_chunk"}
+_NP_SYNC = {"asarray", "array", "copyto", "ascontiguousarray", "copy"}
+
+
+def _allowlisted(rel: str) -> bool:
+    parts = PurePath(rel).parts
+    name = parts[-1] if parts else rel
+    return bool(set(parts[:-1]) & {"tests", "benchmarks"}) or \
+        name.startswith(("test_", "bench_")) or name.endswith("_bench.py")
+
+
+def _numpy_alias(f: SourceFile) -> set:
+    out = set()
+    for node in ast.walk(f.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.split(".")[0] == "numpy":
+                    out.add(a.asname or "numpy")
+    return out
+
+
+@register_rule(
+    "R3",
+    "host-sync discipline: no block_until_ready/np.asarray/implicit "
+    "array bool in hot paths; time.perf_counter for measured intervals")
+def rule_hostsync(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+
+    def add(rel, line, msg):
+        out.append(Finding(path=rel, line=line, rule="R3", message=msg))
+
+    for f in project.files:
+        allow = _allowlisted(f.rel)
+        np_names = _numpy_alias(f)
+        in_runtime = "runtime" in PurePath(f.rel).parts
+        # -- time.time() anywhere (except allowlisted files) --------------
+        if not allow:
+            for node in ast.walk(f.tree):
+                if isinstance(node, ast.Call) and \
+                        dotted(node.func) == "time.time":
+                    add(f.rel, node.lineno,
+                        "wall-clock time.time() feeds a measured interval "
+                        "— use time.perf_counter() (suppress if an "
+                        "absolute timestamp is intended)")
+                if isinstance(node, ast.Call) and \
+                        dotted(node.func) is not None and \
+                        dotted(node.func).endswith("block_until_ready"):
+                    add(f.rel, node.lineno,
+                        "block_until_ready() stalls the dispatch pipeline "
+                        "— outside benchmarks the chunk boundary sync is "
+                        "the only budgeted stall")
+        # -- hot-function sync checks -------------------------------------
+        if allow or not in_runtime:
+            continue
+        for node in ast.walk(f.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if node.name not in _HOT_FUNCS:
+                continue
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call):
+                    d = dotted(sub.func)
+                    if d and d.split(".")[0] in np_names and \
+                            d.split(".")[-1] in _NP_SYNC and sub.args and \
+                            not isinstance(sub.args[0],
+                                           (ast.List, ast.Tuple,
+                                            ast.Constant, ast.ListComp,
+                                            ast.GeneratorExp)):
+                        add(f.rel, sub.lineno,
+                            f"host sync `{d}(...)` in hot path "
+                            f"`{node.name}` — one sync per chunk boundary "
+                            f"is the budget (suppress if this IS the "
+                            f"boundary sync)")
+                if isinstance(sub, (ast.If, ast.While)):
+                    for t in ast.walk(sub.test):
+                        if isinstance(t, ast.Call):
+                            td = dotted(t.func)
+                            if td and td.split(".")[0] in ("jnp",) or \
+                                    (td and td.startswith("jax.numpy")):
+                                add(f.rel, sub.lineno,
+                                    f"implicit device-array __bool__ in "
+                                    f"hot path `{node.name}` blocks on "
+                                    f"the device")
+                                break
+    return out

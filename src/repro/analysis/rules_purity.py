@@ -1,0 +1,101 @@
+"""R1 — jit-purity: no host side effects inside traced code.
+
+Everything reachable from a jit root (``jax.jit`` targets, ``lax.scan``
+/ ``while_loop`` / ``fori_loop`` bodies, ``checkpoint`` / ``grad`` /
+``vmap`` operands — see ``callgraph``) runs under a tracer: host clocks
+read trace time not step time, ``print`` fires once at trace then never
+again, host ``random`` freezes one sample into the compiled graph,
+``np.*`` on a tracer forces a device sync (or a trace error), and
+``int()``/``float()``/``bool()`` on a traced argument raises a
+``ConcretizationTypeError`` only on the unlucky path that executes it.
+Mutable default arguments are captured at trace time and shared across
+every compiled call.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis import callgraph
+from repro.analysis.core import Finding, Project, register_rule
+from repro.analysis.callgraph import dotted
+
+# numpy attributes that are legal inside traced code: dtype objects and
+# scalar-type constructors used as `jnp.zeros(..., np.int32)` arguments
+_NP_DTYPE_OK = {
+    "int8", "int16", "int32", "int64", "uint8", "uint16", "uint32",
+    "uint64", "float16", "float32", "float64", "bfloat16", "bool_",
+    "complex64", "complex128", "integer", "floating", "dtype", "ndarray",
+    "generic", "number", "inf", "nan", "newaxis", "pi", "e",
+}
+
+
+@register_rule(
+    "R1",
+    "jit-purity: no time.*/print/random/np.*/scalar coercions/mutable "
+    "defaults inside functions reachable from jit or lax.scan roots")
+def rule_jit_purity(project: Project) -> List[Finding]:
+    idx = callgraph.get_index(project)
+    out = {}
+
+    def add(fi, line, msg):
+        out[(fi.file.rel, line, msg)] = Finding(
+            path=fi.file.rel, line=line, rule="R1", message=msg)
+
+    for fi in idx.reached_from_jit():
+        mod = idx._module_of(fi)
+        imports = mod.imports if mod is not None else {}
+        qual = fi.qualname
+        args = fi.node.args
+        for dflt in list(args.defaults) + \
+                [d for d in args.kw_defaults if d is not None]:
+            if isinstance(dflt, (ast.List, ast.Dict, ast.Set)):
+                add(fi, dflt.lineno,
+                    f"mutable default argument in jit-reachable `{qual}` "
+                    f"is captured at trace time and shared across calls")
+        params = set(fi.params)
+        body = [fi.node.body] if isinstance(fi.node, ast.Lambda) \
+            else list(fi.node.body)
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted(node.func)
+                if d is not None:
+                    base = d.split(".")[0]
+                    target = imports.get(base, base)
+                    if d == "print":
+                        add(fi, node.lineno,
+                            f"print() inside jit-reachable `{qual}` fires "
+                            f"at trace time only (use jax.debug.print)")
+                    elif target == "time" or target.startswith("time."):
+                        add(fi, node.lineno,
+                            f"host clock `{d}` inside jit-reachable "
+                            f"`{qual}` reads trace time, not step time")
+                    elif (target == "random"
+                          or target.startswith("random.")
+                          or (target.startswith("numpy")
+                              and ".random" in d)):
+                        add(fi, node.lineno,
+                            f"host RNG `{d}` inside jit-reachable `{qual}` "
+                            f"freezes one sample into the compiled graph "
+                            f"(use jax.random)")
+                    elif target.startswith("numpy"):
+                        if d.split(".")[-1] not in _NP_DTYPE_OK:
+                            add(fi, node.lineno,
+                                f"numpy host op `{d}` inside jit-reachable "
+                                f"`{qual}` breaks tracing / forces a sync "
+                                f"(use jnp)")
+                    if d.endswith(".item"):
+                        add(fi, node.lineno,
+                            f"`.item()` inside jit-reachable `{qual}` "
+                            f"concretizes a tracer")
+                if (isinstance(node.func, ast.Name)
+                        and node.func.id in ("int", "float", "bool")
+                        and len(node.args) == 1
+                        and isinstance(node.args[0], ast.Name)
+                        and node.args[0].id in params):
+                    add(fi, node.lineno,
+                        f"`{node.func.id}({node.args[0].id})` coerces a "
+                        f"traced argument of `{qual}` to a host scalar")
+    return list(out.values())

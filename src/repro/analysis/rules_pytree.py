@@ -1,0 +1,230 @@
+"""R5 — pytree registration completeness.
+
+Every class that crosses the jit boundary as data (``Tree``,
+``DecodeStrategy``, ``SpecState``, the KV caches, ``AdamWState``) must
+be a registered pytree, and the registration must cover every declared
+field: a field missing from ``data_fields``/``meta_fields`` silently
+vanishes on the first ``tree_map``/donated round-trip — the engine then
+decodes with a stale or default value and no exception is raised.
+
+Checks:
+* ``register_dataclass`` (direct call, ``@partial(...)`` decorator, or a
+  one-hop helper decorator like ``tree.py``'s ``_register_tree``):
+  ``data_fields + meta_fields`` must equal the dataclass's declared
+  fields — nothing missing, nothing unknown.
+* ``register_pytree_node(cls, flatten, unflatten)``: the flatten
+  function must read every ``__init__``-assigned (or annotated) field.
+* Any project ``@dataclass`` *constructed* inside jit-reachable code
+  must be registered (an unregistered dataclass is a trace error on the
+  paths that build it).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import callgraph
+from repro.analysis.core import Finding, Project, register_rule
+from repro.analysis.callgraph import ClassInfo, dotted
+
+
+def _str_list(node) -> Optional[List[str]]:
+    if isinstance(node, (ast.List, ast.Tuple, ast.Set)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.append(e.value)
+            else:
+                return None
+        return out
+    return None
+
+
+def _reg_fields(call: ast.Call) -> Optional[Tuple[List[str], List[str]]]:
+    """(data_fields, meta_fields) from a register_dataclass-ish call."""
+    data = meta = None
+    for kw in call.keywords:
+        if kw.arg == "data_fields":
+            data = _str_list(kw.value)
+        elif kw.arg == "meta_fields":
+            meta = _str_list(kw.value)
+    if data is None and meta is None:
+        return None
+    return (data or [], meta or [])
+
+
+def _class_fields(ci: ClassInfo) -> List[str]:
+    """Declared dataclass fields (annotated, non-ClassVar), else
+    ``__init__`` self-assignments."""
+    fields = []
+    for node in ci.node.body:
+        if isinstance(node, ast.AnnAssign) and \
+                isinstance(node.target, ast.Name):
+            ann = dotted(node.annotation) or ""
+            if "ClassVar" not in ann:
+                fields.append(node.target.id)
+    if fields:
+        return fields
+    init = ci.methods.get("__init__")
+    if init is not None:
+        for node in ast.walk(init.node):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Attribute) and \
+                            isinstance(t.value, ast.Name) and \
+                            t.value.id == "self" and \
+                            t.attr not in fields:
+                        fields.append(t.attr)
+    return fields
+
+
+def _is_dataclass(ci: ClassInfo) -> bool:
+    for dec in ci.node.decorator_list:
+        d = dotted(dec.func) if isinstance(dec, ast.Call) else dotted(dec)
+        if d in ("dataclass", "dataclasses.dataclass"):
+            return True
+    return False
+
+
+@register_rule(
+    "R5",
+    "pytree completeness: registered pytrees flatten every field; "
+    "dataclasses built under jit must be registered")
+def rule_pytree(project: Project) -> List[Finding]:
+    idx = callgraph.get_index(project)
+    out: List[Finding] = []
+
+    def add(rel, line, msg):
+        out.append(Finding(path=rel, line=line, rule="R5", message=msg))
+
+    # helper decorators: module functions whose body registers their
+    # argument (tree.py's `_register_tree`)
+    helper_fields: Dict[str, Tuple[List[str], List[str]]] = {}
+    for mod in idx.modules.values():
+        for name, fi in mod.funcs.items():
+            if isinstance(fi.node, ast.Lambda):
+                continue
+            for node in ast.walk(fi.node):
+                if isinstance(node, ast.Call):
+                    d = dotted(node.func) or ""
+                    args_d = [dotted(a) or "" for a in node.args]
+                    if d.endswith("register_dataclass") or \
+                            any(a.endswith("register_dataclass")
+                                for a in args_d):
+                        fields = _reg_fields(node)
+                        if fields is not None:
+                            helper_fields[f"{mod.name}.{name}"] = fields
+
+    registered: Dict[str, Tuple[ClassInfo, Optional[Tuple[List[str],
+                                                          List[str]]],
+                                int]] = {}
+
+    def register(ci: ClassInfo, fields, line):
+        registered[f"{ci.module.name}.{ci.name}"] = (ci, fields, line)
+
+    for mod in idx.modules.values():
+        # decorator-registered classes
+        for ci in mod.classes.values():
+            for dec in ci.node.decorator_list:
+                if isinstance(dec, ast.Call):
+                    d = dotted(dec.func) or ""
+                    args_d = [dotted(a) or "" for a in dec.args]
+                    if d.endswith("register_dataclass") or (
+                            d.endswith("partial") and any(
+                                a.endswith("register_dataclass")
+                                for a in args_d)):
+                        register(ci, _reg_fields(dec), dec.lineno)
+                else:
+                    d = dotted(dec) or ""
+                    # one-hop helper decorator
+                    for hname, fields in helper_fields.items():
+                        if hname.split(".")[-1] == d.split(".")[-1]:
+                            register(ci, fields, ci.node.lineno)
+        # direct register_dataclass / register_pytree_node calls
+        for node in ast.walk(mod.file.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func) or ""
+            if d.endswith("register_dataclass") and node.args and \
+                    isinstance(node.args[0], ast.Name):
+                ci = idx.resolve_class(mod, node.args[0].id)
+                if ci is not None:
+                    register(ci, _reg_fields(node), node.lineno)
+            elif d.endswith("register_pytree_node") and len(node.args) >= 2 \
+                    and isinstance(node.args[0], ast.Name):
+                ci = idx.resolve_class(mod, node.args[0].id)
+                if ci is None:
+                    continue
+                register(ci, None, node.lineno)
+                flat = node.args[1]
+                flat_fi = None
+                if isinstance(flat, ast.Name):
+                    flat_fi = mod.funcs.get(flat.id)
+                if isinstance(flat, ast.Lambda):
+                    flat_fi = callgraph.FuncInfo(
+                        node=flat, file=mod.file,
+                        qualname=f"<lambda L{flat.lineno}>", parent=mod)
+                if flat_fi is None or not flat_fi.params:
+                    continue
+                p0 = flat_fi.params[0]
+                seen_attrs: Set[str] = set()
+                walk_root = flat_fi.node.body if \
+                    isinstance(flat_fi.node, ast.Lambda) else flat_fi.node
+                for sub in ast.walk(walk_root):
+                    if isinstance(sub, ast.Attribute) and \
+                            isinstance(sub.value, ast.Name) and \
+                            sub.value.id == p0:
+                        seen_attrs.add(sub.attr)
+                missing = [x for x in _class_fields(ci)
+                           if x not in seen_attrs]
+                for x in missing:
+                    add(mod.file.rel, node.lineno,
+                        f"register_pytree_node flatten for `{ci.name}` "
+                        f"never reads field `{x}` — it is dropped on "
+                        f"every flatten/unflatten round-trip")
+
+    # completeness of register_dataclass field lists
+    for ci, fields, line in registered.values():
+        if fields is None:
+            continue
+        data, meta = fields
+        declared = set(data) | set(meta)
+        cls_fields = _class_fields(ci)
+        for x in cls_fields:
+            if x not in declared:
+                add(ci.file.rel, line,
+                    f"field `{x}` of registered pytree `{ci.name}` is in "
+                    f"neither data_fields nor meta_fields — it is lost "
+                    f"on the first tree_map/donated round-trip")
+        for x in declared:
+            if x not in cls_fields:
+                add(ci.file.rel, line,
+                    f"registration of `{ci.name}` lists unknown field "
+                    f"`{x}` (declared fields: {sorted(cls_fields)})")
+
+    # dataclasses constructed inside jit-reachable code must be registered
+    reg_names = {k.split(".")[-1] for k in registered}
+    flagged = set()
+    for fi in idx.reached_from_jit():
+        mod = idx._module_of(fi)
+        if mod is None:
+            continue
+        body = [fi.node.body] if isinstance(fi.node, ast.Lambda) \
+            else list(fi.node.body)
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if not isinstance(node, ast.Call) or \
+                        not isinstance(node.func, ast.Name):
+                    continue
+                ci = idx.resolve_class(mod, node.func.id)
+                if ci is None or not _is_dataclass(ci):
+                    continue
+                if ci.name not in reg_names and \
+                        (ci.file.rel, ci.name) not in flagged:
+                    flagged.add((ci.file.rel, ci.name))
+                    add(fi.file.rel, node.lineno,
+                        f"dataclass `{ci.name}` is constructed in "
+                        f"jit-reachable `{fi.qualname}` but is not a "
+                        f"registered pytree — tracing it will fail or "
+                        f"silently treat it as a leaf")
+    return out

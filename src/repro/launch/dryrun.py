@@ -98,16 +98,16 @@ def run_case(arch, shape_name, *, multi_pod=False, mode="hcmp",
         _save(fname, rec)
         return rec
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
         case = build_case(arch, shape_name, mesh, mode=mode, variant=variant)
         with mesh:
             jitted = jax.jit(case["step"], in_shardings=case["in_shardings"])
             lowered = jitted.lower(*case["args"])
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()

@@ -37,7 +37,11 @@ def main():
     opt = adamw_init(params)
     data = MarkovDataset(cfg.vocab_size, seed=1)
 
-    step = jax.jit(lambda p, o, b: train_step(cfg, model, p, o, b, lr=args.lr))
+    # params/opt_state are a carry (rebound from the outputs every step):
+    # donate them so AdamW updates in place instead of double-buffering
+    # the full parameter + moment memory
+    step = jax.jit(lambda p, o, b: train_step(cfg, model, p, o, b, lr=args.lr),
+                   donate_argnums=(0, 1))
     t0 = time.perf_counter()
     for i, batch in enumerate(data.batches(args.batch, args.seq, args.steps)):
         batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}

@@ -59,7 +59,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Dict, Optional
+from typing import Dict, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -255,6 +255,52 @@ def _seq_step(model, params, state, *, backend, active):
     cur = jnp.where(active, nxt, state.cur_token)
     return (type(state)(cache=cache, cur_token=cur, hidden=state.hidden),
             nxt[:, None], active.astype(jnp.int32))
+
+
+@runtime_checkable
+class SchedulableEngine(Protocol):
+    """The slot protocol ``runtime/scheduler.py`` drives engines through.
+
+    This is the declared source of truth for the scheduler/engine
+    contract; reprolint's R6 cross-checks it against the scheduler's
+    actual ``sched_*`` call sites, so it can never silently lag them.
+    Every method below is REQUIRED (called unconditionally at chunk
+    boundaries) except the last three, which the scheduler/server probe
+    with ``getattr``/``hasattr``.  Two optional *properties* are part of
+    the wider contract but kept out of this Protocol so it stays
+    ``issubclass``-checkable (runtime_checkable Protocols with non-method
+    members reject issubclass): ``sched_chunked_ok`` (chunked-prefill
+    support) and ``sched_pages_held`` (pages reserved by resident rows).
+
+    Slot-state conventions: ``state`` is the opaque resident-bank carry
+    (a registered pytree, donated by every state-threading jit), ``row``
+    an opaque B=1 prefill result, ``b`` a bank slot index.
+    """
+
+    # ---- admission sizing (host-side, no device work) --------------------
+    def sched_footprint(self, prompt_len: int, n_tokens: int) -> int: ...
+    def sched_can_admit(self, prompt_len: int, n_tokens: int) -> bool: ...
+
+    # ---- row lifecycle ---------------------------------------------------
+    def sched_prefill(self, batch): ...
+    def sched_first(self, row) -> int: ...
+    def sched_blank(self, row, batch): ...
+    def sched_insert(self, state, b, row, *, prompt_len=None,
+                     n_tokens=None): ...
+    def sched_admit(self, state, b, batch, *, n_tokens=None,
+                    reserve_len=None): ...
+    def sched_extend(self, state, b, tokens, n_valid): ...
+    def sched_reset(self, state, b): ...
+    def sched_release(self, b: int) -> None: ...
+
+    # ---- the chunk step --------------------------------------------------
+    def sched_step(self, state, done, rem, K, eos_val): ...
+    def sched_emitted(self, raw): ...
+
+    # ---- optional extensions (probed with getattr/hasattr) ---------------
+    def sched_abort(self, b: int) -> None: ...
+    def sched_pool_conserved(self) -> bool: ...
+    def sched_drained(self) -> bool: ...
 
 
 class _PagedPoolMixin:
@@ -622,10 +668,13 @@ class DecodeEngine(_PagedPoolMixin):
         else:
             state = self._prefill(self.params, self.heads, batch)
         n_max = int(budget.max())
+        # prologue sync: materialize the prefill's first token + done mask
+        # reprolint: disable=R3 (intended post-prefill sync)
         first = np.asarray(state.cur_token)
         outs = [[int(first[b])] for b in range(B)]
         done = state.cur_token == eos_val
         rem = jnp.asarray(budget - 1)
+        # reprolint: disable=R3 (intended post-prefill sync)
         done_np, rem_np = np.asarray(done), budget - 1
         accepts, times = [], []
 
@@ -638,8 +687,10 @@ class DecodeEngine(_PagedPoolMixin):
                 _pow2_chunk(K, need))(
                 self.params, self.heads, self.strategy, state, done, rem,
                 eos_val)
-            toks_np = np.asarray(toks)           # ONE host sync per chunk
-            ns_np = np.asarray(ns)
+            # ONE host sync per chunk: this block is the whole budget
+            toks_np = np.asarray(toks)    # reprolint: disable=R3 (chunk sync)
+            ns_np = np.asarray(ns)        # reprolint: disable=R3 (chunk sync)
+            # reprolint: disable=R3 (chunk sync)
             done_np, rem_np = np.asarray(done), np.asarray(rem)
             times.append(time.perf_counter() - t0)
             for k in range(ns_np.shape[0]):
@@ -660,6 +711,7 @@ class DecodeEngine(_PagedPoolMixin):
         stats["emitted_total"] = int(n_emitted.sum())
         out = np.full((B, n_max), int(eos_val), np.int32)
         for b in range(B):
+            # reprolint: disable=R3 (outs is a host list, not a device array)
             seq = np.asarray(outs[b][:budget[b]], np.int32)
             out[b, :len(seq)] = seq
         if B == 1 and self.strategy.draft == "medusa":
@@ -696,11 +748,13 @@ class DecodeEngine(_PagedPoolMixin):
 
         # warm-up compiles; the donated carry is rebound from the outputs
         state, done, rem, toks, _ = step(state, done, rem)
-        jax.block_until_ready(toks)
+        jax.block_until_ready(toks)   # reprolint: disable=R3 (timing harness)
         best = float("inf")
         for _ in range(reps):
             t0 = time.perf_counter()
             state, done, rem, toks, _ = step(state, done, rem)
+            # this IS the measurement: ARCA times the compiled step
+            # reprolint: disable=R3 (timing harness)
             jax.block_until_ready(toks)
             best = min(best, time.perf_counter() - t0)
         return best / K
@@ -769,6 +823,9 @@ class DecodeEngine(_PagedPoolMixin):
 
     @staticmethod
     def sched_emitted(raw):
+        # the scheduler's ONE budgeted sync per boundary: materialize the
+        # chunk's token block exactly once
+        # reprolint: disable=R3 (intended boundary sync)
         toks, ns = (np.asarray(x) for x in raw)
         K, B = ns.shape
         out = [[] for _ in range(B)]

@@ -100,16 +100,15 @@ class ReplicaRouter:
         return [r.health() for r in self.replicas]
 
     def pages_conserved(self) -> bool:
-        """Fleet-wide page-leak audit (True for dense engines)."""
-        return all(r.scheduler.engine.sched_pool_conserved()
-                   for r in self.replicas
-                   if hasattr(r.scheduler.engine, "sched_pool_conserved"))
+        """Fleet-wide page-leak audit (True for dense engines).  Reads
+        each replica's worker-published snapshot — the router runs on the
+        event loop and must never touch a worker-owned scheduler."""
+        return all(r.pool_conserved() for r in self.replicas)
 
     def drained(self) -> bool:
-        """After everything terminal: every replica's pool fully free."""
-        return all(r.scheduler.engine.sched_drained()
-                   for r in self.replicas
-                   if hasattr(r.scheduler.engine, "sched_drained"))
+        """After everything terminal: every replica's pool fully free
+        (as of each worker's last boundary snapshot)."""
+        return all(r.drained() for r in self.replicas)
 
     def _pick(self, avoid=None) -> Optional[AsyncEngineServer]:
         healthy = [r for r in self.replicas if r.healthy]
@@ -146,6 +145,7 @@ class ReplicaRouter:
             if replica is None:
                 result = RequestResult(
                     req_id=request.req_id,
+                    # reprolint: disable=R3 (host list, not a device array)
                     tokens=np.asarray(delivered, np.int32),
                     n_emitted=len(delivered), arrival=0.0, t_admit=0.0,
                     t_finish=0.0, state=REJECTED)

@@ -41,6 +41,7 @@ from __future__ import annotations
 import asyncio
 import collections
 import threading
+import time
 from typing import Optional
 
 import numpy as np
@@ -133,6 +134,13 @@ class AsyncEngineServer:
         self._load = 0                      # queued + resident (approx.)
         self.completed = 0
         self.rejected = 0
+        # worker-published engine snapshots: the event-loop side (health,
+        # router audits) must never touch the worker-owned scheduler, so
+        # the worker refreshes these under the lock at every publish
+        self._pool_ok = True
+        self._drained = True
+        self._t0 = time.perf_counter()      # serve clock (loop-side twin
+        #                                     of scheduler.now())
 
     # ---- lifecycle -------------------------------------------------------
     async def start(self) -> None:
@@ -140,6 +148,7 @@ class AsyncEngineServer:
             raise RuntimeError(f"{self.name} already started")
         self._loop = asyncio.get_running_loop()
         self.scheduler.start(eos=self._eos)
+        self._t0 = time.perf_counter()
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name=f"engine-{self.name}")
         self._thread.start()
@@ -162,14 +171,34 @@ class AsyncEngineServer:
         with self._lock:
             return self._load + len(self._inbox)
 
+    def _now(self) -> float:
+        """Event-loop-side serve clock.  ``scheduler.now()`` belongs to
+        the worker thread; the loop side keeps its own epoch (set when
+        the scheduler starts) for timestamps on rejected requests."""
+        return time.perf_counter() - self._t0
+
     def health(self) -> dict:
+        with self._lock:
+            completed, rejected = self.completed, self.rejected
+            load = self._load + len(self._inbox)
+            pool_ok = self._pool_ok
         return {"name": self.name, "healthy": self.healthy,
-                "load": self.load, "completed": self.completed,
-                "rejected": self.rejected,
+                "load": load, "completed": completed,
+                "rejected": rejected,
                 "crashed": repr(self._crashed) if self._crashed else None,
-                "pool_conserved": self.scheduler.engine.sched_pool_conserved()
-                if hasattr(self.scheduler.engine, "sched_pool_conserved")
-                else True}
+                "pool_conserved": pool_ok}
+
+    def pool_conserved(self) -> bool:
+        """Engine page-leak audit, as of the last boundary (worker
+        snapshot — safe to call from the event loop)."""
+        with self._lock:
+            return self._pool_ok
+
+    def drained(self) -> bool:
+        """True iff the engine pool was fully free at the last boundary
+        (worker snapshot — safe to call from the event loop)."""
+        with self._lock:
+            return self._drained
 
     # ---- request plane ---------------------------------------------------
     async def submit(self, request: Request, *,
@@ -178,9 +207,10 @@ class AsyncEngineServer:
         full admission queue resolves the handle REJECTED immediately."""
         handle = RequestHandle(request.req_id, self._loop)
         if not self.healthy or self.load >= self.queue_limit:
-            self.rejected += 1
+            with self._lock:
+                self.rejected += 1
             handle._reject_local(
-                _typed_result(request, REJECTED, self.scheduler.now()))
+                _typed_result(request, REJECTED, self._now()))
             return handle
         with self._lock:
             self._handles[request.req_id] = handle
@@ -217,6 +247,13 @@ class AsyncEngineServer:
             sched.abort(req_id, CANCELLED)
 
     def _publish(self, emitted, finished) -> None:
+        # engine audits run here, on the worker thread that owns the
+        # scheduler; the loop side reads the published snapshot
+        eng = self.scheduler.engine
+        pool_ok = eng.sched_pool_conserved() \
+            if hasattr(eng, "sched_pool_conserved") else True
+        drained = eng.sched_drained() \
+            if hasattr(eng, "sched_drained") else True
         with self._lock:
             for req_id, toks in emitted.items():
                 h = self._handles.get(req_id)
@@ -228,6 +265,8 @@ class AsyncEngineServer:
                     h._finish_threadsafe(res)
                 self.completed += 1
             self._load = self.scheduler.load
+            self._pool_ok = pool_ok
+            self._drained = drained
 
     def _run(self) -> None:
         sched = self.scheduler

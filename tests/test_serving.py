@@ -25,6 +25,7 @@ instead of hanging tier-1.
 """
 import asyncio
 import signal
+import threading
 
 import jax
 import numpy as np
@@ -359,3 +360,56 @@ def test_fault_plan_validation_and_determinism():
     assert draws("r1") == draws("r1")
     with pytest.raises(ReplicaCrash):
         FaultPlan(crash={"r0": 1}).injector("r0").on_boundary(1)
+
+
+def test_loop_observability_uses_worker_snapshots():
+    """The event-loop side (``health()``, the router's pool audits, the
+    reject path of ``submit``) must never call into the worker-owned
+    scheduler or engine: every scheduler/engine call during a serving
+    session originates on the worker thread, and the loop reads only
+    worker-published snapshots (regression test for the R4
+    thread-discipline fixes in server.py/router.py)."""
+    cfg, eng = _engine("rlock")
+    reqs = _requests(cfg, 2, budget=12)
+    calls = []
+
+    def _spy(obj, name):
+        orig = getattr(obj, name)
+
+        def wrap(*a, **k):
+            calls.append((name, threading.get_ident()))
+            return orig(*a, **k)
+
+        setattr(obj, name, wrap)
+
+    sched = ContinuousScheduler(eng, batch=2)
+    for n in ("now", "submit", "abort", "boundary", "fail_all"):
+        _spy(sched, n)
+    for n in ("sched_pool_conserved", "sched_drained"):
+        _spy(eng, n)
+
+    async def go():
+        srv = AsyncEngineServer(sched, name="rlock", queue_limit=1)
+        router = ReplicaRouter([srv])
+        await router.start()
+        h0 = await srv.submit(reqs[0])
+        h1 = await srv.submit(reqs[1])     # shed: loop-side reject path
+        health = srv.health()              # loop-side observability
+        r1 = await h1.result()
+        r0 = await h0.result()
+        audits = router.pages_conserved(), router.drained()
+        await router.stop()
+        return srv._thread.ident, health, audits, r0, r1
+
+    try:
+        worker, health, audits, r0, r1 = asyncio.run(go())
+    finally:
+        for n in ("sched_pool_conserved", "sched_drained"):
+            del eng.__dict__[n]            # engine is cached across tests
+
+    assert r0.state == DONE and r1.state == REJECTED
+    assert worker is not None and worker != threading.get_ident()
+    offenders = sorted({n for n, t in calls if t != worker})
+    assert not offenders, \
+        f"scheduler/engine touched off the worker thread: {offenders}"
+    assert health["pool_conserved"] and audits == (True, True)
