@@ -41,7 +41,7 @@ _SUPPRESS_FILE_RE = re.compile(r"#\s*reprolint:\s*disable-file=" + _RULE_LIST)
 class Finding:
     path: str                  # repo-relative (or as-given) file path
     line: int                  # 1-based line of the offending node
-    rule: str                  # "R1".."R6"
+    rule: str                  # "R1".."R9"
     message: str               # human-readable, symbol-anchored
 
     def render(self) -> str:
@@ -116,8 +116,10 @@ def register_rule(rule_id: str, doc: str):
 def _ensure_rules_loaded() -> None:
     # imported lazily so `import repro.analysis.core` has no rule deps
     from repro.analysis import (rules_donation, rules_hostsync,  # noqa: F401
-                                rules_locks, rules_protocol,
-                                rules_purity, rules_pytree)
+                                rules_kernelbounds, rules_locks,
+                                rules_model, rules_protocol,
+                                rules_purity, rules_pytree,
+                                rules_retrace)
 
 
 # --------------------------------------------------------------------------

@@ -26,9 +26,10 @@ _DEFAULT_BASELINE = Path(__file__).parent / "baseline.txt"
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
-        description="AST-based invariant checks for this repo "
+        description="Static invariant checks for this repo "
                     "(jit purity, donation, host syncs, locks, pytrees, "
-                    "slot protocol)")
+                    "slot protocol, retrace/compile-cache audit, kernel "
+                    "bounds proofs, boundary-protocol model check)")
     ap.add_argument("paths", nargs="*", help="files or directories to lint")
     ap.add_argument("--rules", default=None,
                     help="comma-separated subset, e.g. R1,R3")
@@ -41,6 +42,10 @@ def main(argv=None) -> int:
     ap.add_argument("--list-rules", action="store_true")
     ap.add_argument("--root", default=None,
                     help="anchor for relative paths in findings/baseline")
+    ap.add_argument("--format", choices=("text", "github"), default="text",
+                    help="'github' additionally emits workflow-command "
+                         "annotations (::error file=...) so findings show "
+                         "inline on the PR diff")
     args = ap.parse_args(argv)
 
     if args.list_rules:
@@ -67,6 +72,14 @@ def main(argv=None) -> int:
     fresh = [f for f in findings if f.key not in baseline]
     for f in fresh:
         print(f.render())
+        if args.format == "github":
+            # GitHub workflow command: annotates the offending line on
+            # the PR.  Message newlines/percents must be URL-escaped per
+            # the workflow-command spec.
+            msg = f"{f.rule}: {f.message}".replace("%", "%25") \
+                .replace("\r", "%0D").replace("\n", "%0A")
+            print(f"::error file={f.path},line={f.line},"
+                  f"title=reprolint {f.rule}::{msg}")
     n_base = len(findings) - len(fresh)
     if fresh:
         print(f"reprolint: {len(fresh)} finding(s)"

@@ -1,0 +1,100 @@
+"""R8 — Pallas BlockSpec bounds / coverage / page-domain verification.
+
+The heavy lifting lives in ``repro.analysis.kernelbounds``: BlockSpec
+index maps are pure Python lambdas, so they are extracted from the
+kernel modules' ASTs and *executed* over every point of the concrete
+grid for a matrix of representative shape configs (dense + paged +
+sparse, page-size/W/depth sweeps).  This rule surfaces every violation
+as a finding, and cross-checks the kernel wrappers' positional
+signatures against their ``*_ref`` oracles in ``kernels/ref.py`` (an
+argument-order skew between kernel and oracle makes every
+kernel-vs-oracle test vacuously compare garbage).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis import kernelbounds
+from repro.analysis.core import Finding, Project, register_rule
+
+_KERNEL_FILES = ("tree_attention.py", "sparse_tree.py")
+
+
+def _pos_params(node) -> List[str]:
+    a = node.args
+    return [p.arg for p in a.posonlyargs + a.args]
+
+
+def _public_defs(tree) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body
+            if isinstance(n, ast.FunctionDef)
+            and not n.name.startswith("_")}
+
+
+def _oracle_for(name: str, oracles: Dict[str, ast.FunctionDef]
+                ) -> Optional[Tuple[str, ast.FunctionDef]]:
+    """`X` -> `X_ref`, else the longest `stem_ref` with `stem` a prefix
+    of `X` (``sparse_tree_attention`` -> ``sparse_tree_ref``)."""
+    if f"{name}_ref" in oracles:
+        return f"{name}_ref", oracles[f"{name}_ref"]
+    best = None
+    for oname, onode in oracles.items():
+        if not oname.endswith("_ref"):
+            continue
+        stem = oname[:-4]
+        if name.startswith(stem) and (
+                best is None or len(stem) > len(best[0]) - 4):
+            best = (oname, onode)
+    return best
+
+
+@register_rule(
+    "R8",
+    "kernel bounds verifier: BlockSpec index maps evaluated over the "
+    "full concrete grid for a dense/paged shape matrix — in-bounds, "
+    "exactly-once output coverage, page-domain containment — plus "
+    "kernel-vs-oracle signature cross-check")
+def rule_kernelbounds(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+
+    kernel_files = [f for f in project.files
+                    if f.rel.rsplit("/", 1)[-1] in _KERNEL_FILES]
+    for f in kernel_files:
+        for line, msg in kernelbounds.verify_tree(f.tree):
+            out.append(Finding(path=f.rel, line=line, rule="R8",
+                               message=msg))
+
+    ref = project.find("kernels/ref.py")
+    if ref is not None:
+        oracles = _public_defs(ref.tree)
+        for f in kernel_files:
+            for name, node in _public_defs(f.tree).items():
+                hit = _oracle_for(name, oracles)
+                if hit is None:
+                    out.append(Finding(
+                        path=f.rel, line=node.lineno, rule="R8",
+                        message=f"kernel wrapper `{name}` has no *_ref "
+                                f"oracle in kernels/ref.py — the "
+                                f"kernel-vs-oracle sweep cannot cover "
+                                f"it"))
+                    continue
+                oname, onode = hit
+                wp, op = _pos_params(node), _pos_params(onode)
+                if wp != op:
+                    out.append(Finding(
+                        path=f.rel, line=node.lineno, rule="R8",
+                        message=f"kernel wrapper `{name}` positional "
+                                f"signature {wp} does not match oracle "
+                                f"`{oname}` {op} — argument-order skew "
+                                f"makes every allclose test compare "
+                                f"garbage"))
+        ops = project.find("kernels/ops.py")
+        if ops is not None:
+            for name, node in _public_defs(ops.tree).items():
+                if _oracle_for(name, oracles) is None:
+                    out.append(Finding(
+                        path=ops.rel, line=node.lineno, rule="R8",
+                        message=f"public kernel op `{name}` has no "
+                                f"*_ref oracle in kernels/ref.py"))
+    return out

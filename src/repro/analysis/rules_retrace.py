@@ -1,0 +1,576 @@
+"""R7 — jit retrace & compile-cache audit (static half).
+
+jax's compile cache is keyed on ``(jitted function object, static arg
+values, abstract values of traced args)``.  Three whole classes of bug
+defeat it silently — the program stays correct and 100x slower:
+
+* **construction in a hot path**: ``jax.jit(f)`` inside a per-step /
+  per-boundary method (or any loop) builds a *fresh* function object
+  every call, so the cache never hits.  Memoised construction —
+  ``self._memo[key] = jax.jit(...)`` — is the sanctioned pattern and is
+  exempt.  Hot scope = anything reachable from a ``sched_*`` slot
+  method, ``generate``, ``boundary`` or ``time_step``.
+* **fresh / unhashable statics**: a dict/list/set literal passed at a
+  ``static_argnums``/``static_argnames`` position raises at call time;
+  a lambda or comprehension is hashed *by identity*, so a fresh one per
+  call is a guaranteed miss.  Tuples are checked element-wise (a tuple
+  of lambdas is as bad as a lambda).
+* **scalar-vs-array skew**: the same parameter of one jitted function
+  fed a Python scalar at one call site and a traced array at another
+  compiles *two* cache entries and retraces on every path switch.  Call
+  sites are grouped per (jitted callable, arg position) — including
+  one hop of forwarding through a plain method that passes its own
+  parameter straight into the jit (``sched_step`` style), with
+  ``obj.sched_x(...)`` calls linked to the unique concrete class that
+  implements the slot.
+
+The dynamic counterpart (``python -m repro.analysis.tracecount``) pins
+the *actual* compile counts of a smoke run against
+``compile_budget.json``; this rule catches the same bugs without
+running jax at all.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import callgraph
+from repro.analysis.callgraph import ClassInfo, FuncInfo, ModuleInfo, dotted
+from repro.analysis.core import Finding, Project, register_rule
+
+# names whose bodies run once per decode step / scheduler boundary: the
+# roots of the "hot" closure for the construction check
+_HOT_NAMES = {"generate", "boundary", "time_step"}
+
+# numpy-ish constructors whose result traces as an array aval
+_ARRAY_FNS = {"asarray", "array", "zeros", "ones", "full", "arange",
+              "zeros_like", "ones_like", "full_like", "where",
+              "broadcast_to", "minimum", "maximum", "concatenate",
+              "stack"}
+_ARRAY_PREFIXES = {"jnp", "np", "numpy", "jax.numpy"}
+_SCALAR_CASTS = {"int", "float", "bool"}
+
+
+def _name(fi: FuncInfo) -> str:
+    return getattr(fi.node, "name", fi.qualname)
+
+
+def _own_nodes(fn_node):
+    """Nodes in a function's own body, not descending into nested
+    def/lambda bodies (those execute in their own scope, later)."""
+    body = [fn_node.body] if isinstance(fn_node, ast.Lambda) \
+        else list(fn_node.body)
+    stack = list(body)
+    while stack:
+        n = stack.pop()
+        yield n
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def _all_funcs(idx):
+    seen: Set[int] = set()
+
+    def rec(fi):
+        if id(fi.node) in seen:
+            return
+        seen.add(id(fi.node))
+        yield fi
+        for sub in fi.locals.values():
+            yield from rec(sub)
+
+    for mod in idx.modules.values():
+        for fi in mod.funcs.values():
+            yield from rec(fi)
+        for ci in mod.classes.values():
+            for fi in ci.methods.values():
+                yield from rec(fi)
+
+
+def _is_stub(fi: FuncInfo) -> bool:
+    """Protocol/ABC stub: body of docstring / Ellipsis / pass / raise."""
+    for stmt in fi.node.body:
+        if isinstance(stmt, ast.Expr) and \
+                isinstance(stmt.value, ast.Constant):
+            continue
+        if isinstance(stmt, (ast.Pass, ast.Raise)):
+            continue
+        return False
+    return True
+
+
+def _memo_exempt(tree) -> Set[int]:
+    """ids of Call nodes whose value lands in a Subscript target —
+    ``self._memo[key] = jax.jit(...)`` memoised construction."""
+    out: Set[int] = set()
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Assign) and any(
+                isinstance(t, ast.Subscript) for t in n.targets):
+            for c in ast.walk(n.value):
+                if isinstance(c, ast.Call):
+                    out.add(id(c))
+    return out
+
+
+# --------------------------------------------------------------------------
+# statics parsing
+# --------------------------------------------------------------------------
+def _static_spec(call_or_dec) -> Tuple[Set[int], Set[str]]:
+    nums: Set[int] = set()
+    names: Set[str] = set()
+    for k in call_or_dec.keywords:
+        if k.arg == "static_argnums":
+            v = k.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                nums.add(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                nums |= {e.value for e in v.elts
+                         if isinstance(e, ast.Constant)
+                         and isinstance(e.value, int)}
+        elif k.arg == "static_argnames":
+            v = k.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                names.add(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                names |= {e.value for e in v.elts
+                          if isinstance(e, ast.Constant)
+                          and isinstance(e.value, str)}
+    return nums, names
+
+
+def _fresh_desc(node) -> Optional[Tuple[str, str]]:
+    """(description, severity-phrase) when ``node`` is a fresh/unhashable
+    static value; recurses through tuple literals."""
+    if isinstance(node, ast.Lambda):
+        return ("lambda", "hashed by identity, a fresh object per call "
+                "is a guaranteed compile-cache miss")
+    if isinstance(node, ast.Dict):
+        return ("dict literal", "unhashable — jit raises at call time")
+    if isinstance(node, (ast.List, ast.Set)):
+        kind = "list" if isinstance(node, ast.List) else "set"
+        return (f"{kind} literal", "unhashable — jit raises at call time")
+    if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                         ast.GeneratorExp)):
+        return ("comprehension", "fresh (and for list/set/dict "
+                "unhashable) object every call")
+    if isinstance(node, ast.Call) and dotted(node.func) in \
+            ("dict", "list", "set"):
+        return (f"{dotted(node.func)}() call",
+                "unhashable — jit raises at call time")
+    if isinstance(node, ast.Tuple):
+        for e in node.elts:
+            inner = _fresh_desc(e)
+            if inner is not None:
+                return (f"tuple containing a {inner[0]}", inner[1])
+    return None
+
+
+# --------------------------------------------------------------------------
+# jit-callee registry (for statics + scalar/array grouping)
+# --------------------------------------------------------------------------
+class _JitCallee:
+    """One jitted callable as seen from call sites."""
+
+    def __init__(self, display: str, params: Optional[List[str]],
+                 nums: Set[int], names: Set[str]):
+        self.display = display
+        self.params = params
+        self.nums = nums
+        self.names = names
+
+
+def _jit_target_params(idx, call: ast.Call, scope, f) -> Optional[List[str]]:
+    d = dotted(call.func)
+    i = 1 if d in ("partial", "functools.partial") else 0
+    tgt = idx._callable_arg(call, i, scope, f)
+    if tgt is None:
+        return None
+    return tgt.params
+
+
+def _build_registry(idx) -> Tuple[Dict, Dict, Dict, Dict]:
+    """Returns (by_def, by_attr, by_factory, by_modname):
+
+    * by_def:     id(FunctionDef) -> _JitCallee   (decorated defs)
+    * by_attr:    (id(ClassInfo)|id(ModuleInfo), attr) -> _JitCallee
+    * by_factory: (id(ClassInfo), method) -> _JitCallee
+      (method whose body memoises ``self._m[k] = jax.jit(...)`` —
+      called as ``self.method(key)(args...)``)
+    """
+    by_def: Dict[int, _JitCallee] = {}
+    by_attr: Dict[Tuple[int, str], _JitCallee] = {}
+    by_factory: Dict[Tuple[int, str], _JitCallee] = {}
+
+    for fi in _all_funcs(idx):
+        node = fi.node
+        if isinstance(node, ast.Lambda):
+            continue
+        for dec in idx._jit_decorators(node):
+            nums, names = (_static_spec(dec)
+                           if isinstance(dec, ast.Call) else (set(), set()))
+            by_def[id(node)] = _JitCallee(fi.qualname, fi.params,
+                                          nums, names)
+
+    for mod in idx.modules.values():
+        # module-level `name = jax.jit(...)`
+        for stmt in mod.file.tree.body:
+            if isinstance(stmt, ast.Assign) and \
+                    isinstance(stmt.value, ast.Call) and \
+                    idx._trace_entry_name(stmt.value, mod) == "jit":
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        nums, names = _static_spec(stmt.value)
+                        by_attr[(id(mod), t.id)] = _JitCallee(
+                            f"{mod.name}.{t.id}",
+                            _jit_target_params(idx, stmt.value, mod,
+                                               mod.file),
+                            nums, names)
+        for ci in mod.classes.values():
+            for m in ci.methods.values():
+                for n in ast.walk(m.node):
+                    if not (isinstance(n, ast.Assign) and
+                            isinstance(n.value, ast.Call) and
+                            idx._trace_entry_name(n.value, m) == "jit"):
+                        continue
+                    nums, names = _static_spec(n.value)
+                    params = _jit_target_params(idx, n.value, m, m.file)
+                    for t in n.targets:
+                        # self._x = jax.jit(...)
+                        if isinstance(t, ast.Attribute) and \
+                                isinstance(t.value, ast.Name) and \
+                                t.value.id == "self":
+                            by_attr[(id(ci), t.attr)] = _JitCallee(
+                                f"{ci.name}.{t.attr}", params, nums,
+                                names)
+                        # self._memo[key] = jax.jit(...): `m` is a
+                        # factory — call sites look like self.m(k)(...)
+                        elif isinstance(t, ast.Subscript):
+                            by_factory[(id(ci), m.node.name)] = \
+                                _JitCallee(f"{ci.name}.{m.node.name}",
+                                           params, nums, names)
+    return by_def, by_attr, by_factory
+
+
+def _callee_at(idx, call: ast.Call, fi: FuncInfo, regs
+               ) -> Optional[Tuple[_JitCallee, int]]:
+    """(callee, self_offset) when ``call`` invokes a jitted callable.
+    ``self_offset`` maps call arg position i -> callee param i+offset."""
+    by_def, by_attr, by_factory = regs
+    fn = call.func
+    # self._chunk_fn(K)(args...) — factory pattern
+    if isinstance(fn, ast.Call) and isinstance(fn.func, ast.Attribute) \
+            and isinstance(fn.func.value, ast.Name) \
+            and fn.func.value.id == "self" and fi.cls is not None:
+        rec = by_factory.get((id(fi.cls), fn.func.attr))
+        if rec is not None:
+            return rec, 0
+    # jax.jit(f, ...)(args...) — immediate invocation
+    if isinstance(fn, ast.Call) and \
+            idx._trace_entry_name(fn, fi) == "jit":
+        nums, names = _static_spec(fn)
+        params = _jit_target_params(idx, fn, fi, fi.file)
+        return _JitCallee(dotted(fn.args[0]) if fn.args else "<jit>",
+                          params, nums, names), 0
+    # self._x(args...) — attribute-bound jit
+    if isinstance(fn, ast.Attribute) and isinstance(fn.value, ast.Name) \
+            and fn.value.id == "self" and fi.cls is not None:
+        rec = by_attr.get((id(fi.cls), fn.attr))
+        if rec is not None:
+            return rec, 0
+    # name(args...) — module-bound jit or decorated def
+    if isinstance(fn, ast.Name):
+        mod = idx._module_of(fi)
+        if mod is not None:
+            rec = by_attr.get((id(mod), fn.id))
+            if rec is not None:
+                return rec, 0
+    resolved = idx.resolve_call(call, fi)
+    if resolved is not None and id(resolved.node) in by_def:
+        rec = by_def[id(resolved.node)]
+        offset = 1 if (resolved.cls is not None and
+                       resolved.params[:1] == ["self"] and
+                       isinstance(fn, ast.Attribute)) else 0
+        return rec, offset
+    return None
+
+
+# --------------------------------------------------------------------------
+# scalar-vs-array classification
+# --------------------------------------------------------------------------
+def _classify(idx, expr, fi, depth=0, seen=None) -> Optional[str]:
+    """'scalar' | 'array' | None (unknown) for the traced aval of expr."""
+    if depth > 5:
+        return None
+    seen = seen if seen is not None else set()
+    if id(expr) in seen:
+        return None
+    seen.add(id(expr))
+
+    if isinstance(expr, ast.Constant):
+        if isinstance(expr.value, bool) or \
+                isinstance(expr.value, (int, float)):
+            return "scalar"
+        return None
+    if isinstance(expr, ast.UnaryOp) and isinstance(expr.op, ast.USub):
+        return _classify(idx, expr.operand, fi, depth + 1, seen)
+    if isinstance(expr, ast.Call):
+        d = dotted(expr.func)
+        if d in _SCALAR_CASTS:
+            return "scalar"
+        if d is not None:
+            parts = d.split(".")
+            if parts[-1] in _ARRAY_FNS and (
+                    ".".join(parts[:-1]) in _ARRAY_PREFIXES):
+                return "array"
+        callee = idx.resolve_call(expr, fi) if isinstance(fi, FuncInfo) \
+            else None
+        if callee is not None and not isinstance(callee.node, ast.Lambda):
+            kinds = set()
+            for n in ast.walk(callee.node):
+                if isinstance(n, ast.Return) and n.value is not None:
+                    kinds.add(_classify(idx, n.value, callee, depth + 1,
+                                        seen))
+            if len(kinds) == 1:
+                return kinds.pop()
+        return None
+    if isinstance(expr, ast.Name) and isinstance(fi, FuncInfo):
+        if expr.id in fi.params:
+            return None                      # forwarding handles params
+        kinds = set()
+        for n in _own_nodes(fi.node):
+            if not isinstance(n, ast.Assign):
+                continue
+            for t in n.targets:
+                if isinstance(t, ast.Name) and t.id == expr.id:
+                    kinds.add(_classify(idx, n.value, fi, depth + 1,
+                                        seen))
+                elif isinstance(t, ast.Tuple) and \
+                        isinstance(n.value, ast.Tuple) and \
+                        len(t.elts) == len(n.value.elts):
+                    for te, ve in zip(t.elts, n.value.elts):
+                        if isinstance(te, ast.Name) and te.id == expr.id:
+                            kinds.add(_classify(idx, ve, fi, depth + 1,
+                                                seen))
+        if len(kinds) == 1 and None not in kinds:
+            return kinds.pop()
+        return None
+    if isinstance(expr, ast.Attribute) and \
+            isinstance(expr.value, ast.Name) and expr.value.id == "self" \
+            and isinstance(fi, FuncInfo) and fi.cls is not None:
+        kinds = set()
+        for m in fi.cls.methods.values():
+            for n in ast.walk(m.node):
+                if not isinstance(n, ast.Assign):
+                    continue
+                for t in n.targets:
+                    if isinstance(t, ast.Attribute) and \
+                            isinstance(t.value, ast.Name) and \
+                            t.value.id == "self" and t.attr == expr.attr:
+                        kinds.add(_classify(idx, n.value, m, depth + 1,
+                                            seen))
+        if len(kinds) == 1 and None not in kinds:
+            return kinds.pop()
+        return None
+    return None
+
+
+def _unique_slot_method(idx, attr: str) -> Optional[FuncInfo]:
+    """For ``obj.sched_x(...)`` on a dynamic object: the unique concrete
+    (non-Protocol, non-stub) class method implementing the slot."""
+    if not attr.startswith("sched_"):
+        return None
+    hits = []
+    seen_cls: Set[int] = set()
+    for mod in idx.modules.values():
+        for ci in mod.classes.values():
+            if any(b.split(".")[-1] == "Protocol" for b in ci.base_names):
+                continue
+            m = ci.methods.get(attr)
+            if m is not None and not _is_stub(m) and \
+                    id(m.node) not in seen_cls:
+                seen_cls.add(id(m.node))
+                hits.append(m)
+    return hits[0] if len(hits) == 1 else None
+
+
+# --------------------------------------------------------------------------
+# the rule
+# --------------------------------------------------------------------------
+@register_rule(
+    "R7",
+    "jit retrace audit: fresh/unhashable static args, Python-scalar vs "
+    "array skew across call sites of one jit, and jit construction in "
+    "hot paths or loops without memoisation")
+def rule_retrace(project: Project) -> List[Finding]:
+    idx = callgraph.get_index(project)
+    out: List[Finding] = []
+    flagged: Set[int] = set()           # Call ids already reported
+
+    def add(f, line, msg):
+        out.append(Finding(path=f.rel, line=line, rule="R7", message=msg))
+
+    # ---- A. construction in hot paths / loops ---------------------------
+    exempt: Dict[int, Set[int]] = {}    # per-file memoised-construction ids
+    for f in project.files:
+        exempt[id(f)] = _memo_exempt(f.tree)
+
+    roots = [fi for fi in _all_funcs(idx)
+             if not isinstance(fi.node, ast.Lambda)
+             and (fi.node.name in _HOT_NAMES
+                  or fi.node.name.startswith("sched_"))
+             and not _is_stub(fi)]
+    hot: Dict[int, FuncInfo] = {}
+    work = list(roots)
+    while work:
+        fi = work.pop()
+        if id(fi.node) in hot:
+            continue
+        hot[id(fi.node)] = fi
+        for n in _own_nodes(fi.node):
+            if isinstance(n, ast.Call):
+                callee = idx.resolve_call(n, fi)
+                if callee is not None and \
+                        not isinstance(callee.node, ast.Lambda):
+                    work.append(callee)
+
+    for fi in hot.values():
+        for n in _own_nodes(fi.node):
+            if isinstance(n, ast.Call) and \
+                    idx._trace_entry_name(n, fi) == "jit" and \
+                    id(n) not in exempt[id(fi.file)] and \
+                    id(n) not in flagged:
+                flagged.add(id(n))
+                add(fi.file, n.lineno,
+                    f"jax.jit constructed inside hot path "
+                    f"`{fi.qualname}` without memoisation — a fresh jit "
+                    f"object per call never hits the compile cache; "
+                    f"build it once (e.g. in __init__) or memoise it as "
+                    f"`self._memo[key] = jax.jit(...)`")
+
+    for f in project.files:
+        mod = idx.modules.get(callgraph._module_name(f.rel))
+        for loop in ast.walk(f.tree):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            stack = list(loop.body) + list(loop.orelse)
+            while stack:
+                n = stack.pop()
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                    continue
+                if isinstance(n, ast.Call) and \
+                        idx._trace_entry_name(n, mod) == "jit" and \
+                        id(n) not in exempt[id(f)] and \
+                        id(n) not in flagged:
+                    flagged.add(id(n))
+                    add(f, n.lineno,
+                        "jax.jit constructed inside a loop without "
+                        "memoisation — every iteration builds a fresh "
+                        "jit object and recompiles; hoist it out of the "
+                        "loop or memoise per static key")
+                stack.extend(ast.iter_child_nodes(n))
+
+    # ---- B + C. call-site checks over the jit-callee registry ----------
+    regs = _build_registry(idx)
+    by_def, by_attr, by_factory = regs
+
+    # (display, pos) -> list of (kind, file, line, SourceFile)
+    groups: Dict[Tuple[str, int], List] = {}
+    # (id(FuncInfo.node), param_index) -> (display, jit_pos, callee)
+    forwards: Dict[Tuple[int, int], Tuple[str, int, _JitCallee]] = {}
+    funcs = list(_all_funcs(idx))
+
+    for fi in funcs:
+        for call in _own_nodes(fi.node):
+            if not isinstance(call, ast.Call):
+                continue
+            hit = _callee_at(idx, call, fi, regs)
+            if hit is None:
+                continue
+            rec, offset = hit
+            # B: fresh/unhashable statics at this call site
+            for i, a in enumerate(call.args):
+                pnum = i + offset
+                pname = (rec.params[pnum]
+                         if rec.params and pnum < len(rec.params) else None)
+                if pnum in rec.nums or (pname in rec.names):
+                    fd = _fresh_desc(a)
+                    if fd is not None:
+                        add(fi.file, call.lineno,
+                            f"call to jitted `{rec.display}` passes a "
+                            f"{fd[0]} as static arg "
+                            f"{pname or pnum} — {fd[1]}")
+            for kw in call.keywords:
+                if kw.arg in rec.names or (
+                        rec.params and kw.arg in rec.params and
+                        rec.params.index(kw.arg) in rec.nums):
+                    fd = _fresh_desc(kw.value)
+                    if fd is not None:
+                        add(fi.file, call.lineno,
+                            f"call to jitted `{rec.display}` passes a "
+                            f"{fd[0]} as static arg {kw.arg} — {fd[1]}")
+            # C: classify traced args / register forwards
+            if rec.params is None:
+                continue
+            for i, a in enumerate(call.args):
+                pnum = i + offset
+                if pnum in rec.nums or pnum >= len(rec.params):
+                    continue
+                if rec.params[pnum] in rec.names:
+                    continue
+                key = (rec.display, pnum)
+                kind = _classify(idx, a, fi)
+                if kind is not None:
+                    groups.setdefault(key, []).append(
+                        (kind, fi.file, call.lineno, rec))
+                elif isinstance(a, ast.Name) and a.id in fi.params:
+                    forwards[(id(fi.node), fi.params.index(a.id))] = \
+                        (rec.display, pnum, rec)
+
+    # one forwarding hop: call sites of functions that pass a parameter
+    # straight into a jit contribute their own arg classification
+    if forwards:
+        for fi in funcs:
+            for call in _own_nodes(fi.node):
+                if not isinstance(call, ast.Call):
+                    continue
+                target = idx.resolve_call(call, fi)
+                if target is None and \
+                        isinstance(call.func, ast.Attribute):
+                    target = _unique_slot_method(idx, call.func.attr)
+                if target is None:
+                    continue
+                offset = 1 if (target.cls is not None and
+                               target.params[:1] == ["self"] and
+                               isinstance(call.func, ast.Attribute)) \
+                    else 0
+                for (fnid, pidx), (disp, jpos, rec) in forwards.items():
+                    if fnid != id(target.node):
+                        continue
+                    ci = pidx - offset
+                    if 0 <= ci < len(call.args):
+                        kind = _classify(idx, call.args[ci], fi)
+                        if kind is not None:
+                            groups.setdefault((disp, jpos), []).append(
+                                (kind, fi.file, call.lineno, rec))
+
+    for (disp, pos), sites in sorted(groups.items()):
+        kinds = {k for k, *_ in sites}
+        if "scalar" not in kinds or "array" not in kinds:
+            continue
+        scalar_sites = sorted([s for s in sites if s[0] == "scalar"],
+                              key=lambda s: (s[1].rel, s[2]))
+        array_sites = sorted([s for s in sites if s[0] == "array"],
+                             key=lambda s: (s[1].rel, s[2]))
+        _, f, line, rec = scalar_sites[0]
+        pname = (rec.params[pos] if rec.params and pos < len(rec.params)
+                 else str(pos))
+        add(f, line,
+            f"argument `{pname}` of jitted `{disp}` is a Python scalar "
+            f"here but a traced array at {array_sites[0][1].rel} — the "
+            f"two avals key separate compile-cache entries, so each "
+            f"path switch retraces; coerce one side (e.g. jnp.asarray) "
+            f"so every call site shares one compilation")
+    return out

@@ -1,0 +1,217 @@
+"""R7 dynamic counterpart — compile-count audit of the serving hot path.
+
+The static R7 rule proves what it can from the AST; this module measures
+the rest: it runs a PINNED engine + scheduler smoke (fixed model config,
+fixed request set, arrivals all at t=0, no deadlines — fully
+deterministic) under ``jax_log_compiles`` and counts how many times each
+NAMED engine jit actually compiled, then diffs the per-function counts
+against the committed ``compile_budget.json``.  Any silent retrace — a
+cache-key regression from a dtype flip, a fresh static arg, a
+weak-type mismatch — fails the audit with the offending function named.
+
+Only repro-owned buckets (the named defs the engine hands to ``jax.jit``:
+``chunk_scan``, ``prefill_extend``, ``admit_row``, ...) are budgeted;
+jax-internal helper compiles vary across jax versions and are ignored, so
+the committed budget is stable anywhere the smoke runs.
+
+Re-baselining (after an INTENTIONAL compile-behavior change, e.g. a new
+chunk width in the smoke): ``python -m repro.analysis.tracecount --write``
+regenerates ``compile_budget.json``; commit the diff together with the
+change that explains it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import re
+from pathlib import Path
+from typing import Dict, Optional, Sequence
+
+# the engine's named jit targets (see DecodeEngine.__init__ and the
+# _chunk_fn/_extend_fn/_prefill_paged_fn memos — every target is a named
+# def precisely so this audit can bucket it)
+BUCKETS = (
+    "prefill_full",        # whole-batch dense prefill (generate path)
+    "prefill_prompt",      # prompt-sized dense prefill (paged generate)
+    "prefill_paged",       # fused prefill+paginate (per pool size)
+    "prefill_extend",      # chunked-prefill piece (per piece width)
+    "admit_row",           # fused dense admission
+    "admit_paged",         # fused paged admission
+    "insert_paged",        # paged row splice (bootstrap)
+    "chunk_scan",          # the K-step decode chunk (per K)
+    "_insert_row",         # dense row splice (bootstrap)
+    "_reset_state_rows",   # batched row reset
+)
+
+BUDGET_PATH = Path(__file__).resolve().parent / "compile_budget.json"
+
+# ``jax_log_compiles`` emits on two loggers depending on jax version:
+# "Finished tracing + transforming <name> for pjit" (jax._src.dispatch)
+# and/or "Compiling <name> with global shapes" (jax._src.interpreters.pxla)
+_TRACE_RE = re.compile(
+    r"Finished tracing \+ transforming (\S+) for (?:p?jit|pmap)")
+_XLA_RE = re.compile(r"Compiling (\S+) with global shapes")
+_LOGGERS = ("jax._src.dispatch", "jax._src.interpreters.pxla")
+
+
+class CompileCounter(logging.Handler):
+    """Counts ``jax_log_compiles`` records per traced-function name.
+    Trace and XLA-compile records are counted separately; ``counts``
+    prefers the trace stream (it also sees cache-key misses that reuse a
+    compiled executable) and falls back to the compile stream on jax
+    versions that only emit the latter."""
+
+    def __init__(self):
+        super().__init__(level=logging.DEBUG)
+        self.traces: Dict[str, int] = {}
+        self.compiles: Dict[str, int] = {}
+
+    def emit(self, record: logging.LogRecord) -> None:
+        msg = record.getMessage()
+        m = _TRACE_RE.search(msg)
+        if m:
+            self.traces[m.group(1)] = self.traces.get(m.group(1), 0) + 1
+            return
+        m = _XLA_RE.search(msg)
+        if m:
+            self.compiles[m.group(1)] = \
+                self.compiles.get(m.group(1), 0) + 1
+
+    @property
+    def counts(self) -> Dict[str, int]:
+        return self.traces if self.traces else self.compiles
+
+
+class count_compiles:
+    """Context manager: jax compile events -> per-name counts."""
+
+    def __init__(self):
+        self.counter = CompileCounter()
+        self._loggers = [logging.getLogger(n) for n in _LOGGERS]
+        self._saved = []
+
+    def __enter__(self):
+        import jax
+        jax.config.update("jax_log_compiles", True)
+        for lg in self._loggers:
+            self._saved.append((lg.level, lg.propagate))
+            lg.addHandler(self.counter)
+            lg.setLevel(logging.DEBUG)
+            lg.propagate = False             # keep CI logs readable
+        return self.counter
+
+    def __exit__(self, *exc):
+        import jax
+        jax.config.update("jax_log_compiles", False)
+        for lg, (level, prop) in zip(self._loggers, self._saved):
+            lg.removeHandler(self.counter)
+            lg.setLevel(level)
+            lg.propagate = prop
+        self._saved = []
+        return False
+
+
+def run_smoke() -> Dict[str, int]:
+    """The pinned workload: one paged scheduler stream (admission,
+    chunked prefill, abort, eviction, re-admission) plus one dense
+    ``generate`` call.  Deterministic by construction — every arrival is
+    t=0 and nothing consults the clock — so compile counts are exact."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models.api import get_model
+    from repro.runtime.engine import BatchEngine
+    from repro.runtime.scheduler import ContinuousScheduler, Request
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+
+    def req(rid, prompt_len, n_tokens):
+        toks = rng.integers(0, cfg.vocab_size, size=prompt_len)
+        return Request(req_id=rid, tokens=np.asarray(toks, np.int32),
+                       n_tokens=n_tokens)
+
+    with count_compiles() as counter:
+        # paged stepping stream: mirrors the modelcheck default bound
+        eng = BatchEngine(model, params, max_len=64, chunk=2, paged=True,
+                          page_size=4, pool_pages=5)
+        sched = ContinuousScheduler(eng, batch=2, chunk=2,
+                                    prefill_chunk=2)
+        sched.start([], eos=None)
+        sched.submit(req(1, 3, 2))
+        sched.submit(req(3, 2, 2))
+        sched.boundary()
+        sched.boundary()
+        sched.submit(req(2, 5, 3))          # chunked prefill (5 > 2)
+        sched.submit(req(4, 3, 2))
+        sched.abort(4)
+        for _ in range(6):
+            sched.boundary()
+        sched.finish()
+        # dense + paged generate paths (reservation-table prefill)
+        dense = BatchEngine(model, params, max_len=32, chunk=2)
+        prompts = np.asarray(
+            rng.integers(0, cfg.vocab_size, size=(2, 4)), np.int32)
+        dense.generate({"tokens": prompts}, 3)
+        eng.generate({"tokens": prompts}, 3)
+    return {name: counter.counts.get(name, 0) for name in BUCKETS}
+
+
+def diff_counts(observed: Dict[str, int],
+                budget: Dict[str, int]) -> Dict[str, str]:
+    """Per-function drift description; empty means the audit passes."""
+    out: Dict[str, str] = {}
+    for name in sorted(set(observed) | set(budget)):
+        got, want = observed.get(name, 0), budget.get(name, 0)
+        if got == want:
+            continue
+        if got > want:
+            out[name] = (f"{name}: {got} compiles, budget {want} "
+                         f"(+{got - want} SILENT RETRACE)")
+        else:
+            out[name] = (f"{name}: {got} compiles, budget {want} "
+                         f"({want - got} fewer — re-baseline if the "
+                         f"workload changed)")
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.tracecount",
+        description="Run the pinned engine+scheduler smoke under a "
+                    "compile counter and diff per-function counts "
+                    "against compile_budget.json.")
+    ap.add_argument("--budget", type=Path, default=BUDGET_PATH,
+                    help="budget file (default: the committed one)")
+    ap.add_argument("--write", action="store_true",
+                    help="re-baseline: write the observed counts")
+    args = ap.parse_args(argv)
+    observed = run_smoke()
+    width = max(len(n) for n in BUCKETS)
+    for name in BUCKETS:
+        print(f"tracecount: {name:<{width}} {observed[name]}")
+    if args.write:
+        args.budget.write_text(json.dumps(observed, indent=2,
+                                          sort_keys=True) + "\n")
+        print(f"tracecount: wrote {args.budget}")
+        return 0
+    if not args.budget.exists():
+        print(f"tracecount: FAIL — no budget at {args.budget} "
+              f"(run with --write to create it)")
+        return 1
+    budget = json.loads(args.budget.read_text())
+    drift = diff_counts(observed, budget)
+    if drift:
+        for msg in drift.values():
+            print(f"tracecount: DRIFT {msg}")
+        return 1
+    print("tracecount: OK — every compile is budgeted")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,6 +13,13 @@ Failure semantics
   optional background health watcher snapshots ``health()`` for
   observability.  With no healthy replica left the request resolves
   REJECTED without running.
+* **Liveness probes**: the same watcher reads each replica's
+  boundary-progress heartbeat.  A replica that is alive but stuck — no
+  ingest and no boundary completed for ``stall_timeout_s`` while it has
+  work — is drained proactively (``drain_stalled``): its outstanding
+  handles resolve FAILED, which feeds straight into the retry path
+  below, and the replica is marked unhealthy so routing skips it.
+  Clients never wait out a wedged worker.
 * **Retry**: a FAILED attempt (replica crashed mid-request) or a
   REJECTED one (backpressure) is retried up to ``max_retries`` times
   with exponential backoff plus deterministic per-(request, attempt)
@@ -71,6 +78,7 @@ class ReplicaRouter:
         self.retries = 0
         self.routed: Dict[str, int] = {r.name: 0 for r in self.replicas}
         self.health_log: List[list] = []
+        self.stall_drains = 0               # handles failed over by probes
         self._health_task: Optional[asyncio.Task] = None
 
     # ---- replica plane ---------------------------------------------------
@@ -89,9 +97,16 @@ class ReplicaRouter:
             await r.stop()
 
     async def _watch(self, every_s: float) -> None:
+        """Health snapshots + liveness probes.  Runs on the event loop:
+        ``stalled`` reads only loop-side state and ``drain_stalled``
+        resolves handles loop-side, so the stuck worker thread is never
+        touched — its late publishes land on popped handles."""
         try:
             while True:
                 self.health_log.append(self.health())
+                for r in self.replicas:
+                    if r.stalled:
+                        self.stall_drains += r.drain_stalled()
                 await asyncio.sleep(every_s)
         except asyncio.CancelledError:
             pass

@@ -46,7 +46,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.runtime.scheduler import (CANCELLED, QUEUED, REJECTED,
+from repro.runtime.scheduler import (CANCELLED, FAILED, QUEUED, REJECTED,
                                      ContinuousScheduler, Request,
                                      RequestResult)
 
@@ -114,9 +114,12 @@ class AsyncEngineServer:
 
     def __init__(self, scheduler: ContinuousScheduler, *,
                  name: str = "replica0", eos: Optional[int] = None,
-                 queue_limit: int = 64, poll_s: float = 0.005):
+                 queue_limit: int = 64, poll_s: float = 0.005,
+                 stall_timeout_s: float = 0.0):
         if queue_limit < 1:
             raise ValueError("queue_limit must be >= 1")
+        if stall_timeout_s < 0:
+            raise ValueError("stall_timeout_s must be >= 0")
         self.scheduler = scheduler
         self.name = name
         self._eos = eos
@@ -139,6 +142,18 @@ class AsyncEngineServer:
         # the worker refreshes these under the lock at every publish
         self._pool_ok = True
         self._drained = True
+        # boundary-progress heartbeat: the worker refreshes the timestamp
+        # at every ingest (loop liveness) and every publish (boundary
+        # progress).  A replica with work whose heartbeat goes stale past
+        # ``stall_timeout_s`` is STALLED — alive but stuck (a hung device
+        # call, an injected stall) — and the router's liveness watcher
+        # drains it proactively (``drain_stalled``) instead of letting
+        # clients wait on a wedged worker.  0 disables stall detection.
+        self.stall_timeout_s = stall_timeout_s
+        self._beat_boundary = 0
+        self._beat_t = time.perf_counter()
+        self._stalled_out = False           # sticky: drained as stalled
+        self.stall_drains = 0               # handles failed over by drains
         self._t0 = time.perf_counter()      # serve clock (loop-side twin
         #                                     of scheduler.now())
 
@@ -149,6 +164,8 @@ class AsyncEngineServer:
         self._loop = asyncio.get_running_loop()
         self.scheduler.start(eos=self._eos)
         self._t0 = time.perf_counter()
+        with self._lock:
+            self._beat_t = time.perf_counter()   # heartbeat epoch
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name=f"engine-{self.name}")
         self._thread.start()
@@ -163,8 +180,54 @@ class AsyncEngineServer:
 
     @property
     def healthy(self) -> bool:
+        with self._lock:
+            stalled_out = self._stalled_out
         return (self._thread is not None and self._thread.is_alive()
-                and self._crashed is None and not self._stopping)
+                and self._crashed is None and not self._stopping
+                and not stalled_out)
+
+    @property
+    def stalled(self) -> bool:
+        """True when the worker is alive, has work, and its heartbeat is
+        older than ``stall_timeout_s`` — no ingest and no boundary
+        completed for that long.  Idle replicas never read as stalled
+        (nothing obliges their heartbeat to move)."""
+        if not self.stall_timeout_s or self._thread is None \
+                or not self._thread.is_alive() or self._crashed is not None:
+            return False
+        with self._lock:
+            busy = (self._load + len(self._inbox)) > 0
+            age = time.perf_counter() - self._beat_t
+        return busy and age > self.stall_timeout_s
+
+    def heartbeat(self) -> dict:
+        """Loop-side view of the worker's progress beat."""
+        with self._lock:
+            return {"boundary": self._beat_boundary,
+                    "age_s": time.perf_counter() - self._beat_t}
+
+    def drain_stalled(self) -> int:
+        """Liveness drain of a stalled-but-alive replica, called from the
+        EVENT LOOP (the stuck worker cannot run its own crash path):
+        every outstanding handle resolves FAILED so the router retries it
+        elsewhere, queued-but-not-ingested requests included, and the
+        replica is marked unhealthy (sticky — it stays out of rotation
+        even if the wedged worker later limps on; its late publishes land
+        on popped handles and are dropped).  Returns the number of
+        handles failed over."""
+        with self._lock:
+            handles = list(self._handles.values())
+            self._handles.clear()
+            self._inbox.clear()
+            self._stalled_out = True
+            self.stall_drains += len(handles)
+        now = self._now()
+        for h in handles:
+            h._reject_local(RequestResult(
+                req_id=h.req_id, tokens=np.zeros((0,), np.int32),
+                n_emitted=0, arrival=now, t_admit=now, t_finish=now,
+                state=FAILED))
+        return len(handles)
 
     @property
     def load(self) -> int:
@@ -178,15 +241,21 @@ class AsyncEngineServer:
         return time.perf_counter() - self._t0
 
     def health(self) -> dict:
+        stalled = self.stalled              # takes the lock itself
         with self._lock:
             completed, rejected = self.completed, self.rejected
             load = self._load + len(self._inbox)
             pool_ok = self._pool_ok
+            beat_boundary = self._beat_boundary
+            beat_age = time.perf_counter() - self._beat_t
+            stall_drains = self.stall_drains
         return {"name": self.name, "healthy": self.healthy,
                 "load": load, "completed": completed,
                 "rejected": rejected,
                 "crashed": repr(self._crashed) if self._crashed else None,
-                "pool_conserved": pool_ok}
+                "pool_conserved": pool_ok,
+                "stalled": stalled, "boundary": beat_boundary,
+                "beat_age_s": beat_age, "stall_drains": stall_drains}
 
     def pool_conserved(self) -> bool:
         """Engine page-leak audit, as of the last boundary (worker
@@ -237,6 +306,7 @@ class AsyncEngineServer:
             # burst of submits between ingest and publish reads load 0
             # and sails past queue_limit
             self._load += len(subs)
+            self._beat_t = time.perf_counter()   # worker loop is spinning
         for req, deadline_s in subs:
             # arrivals/deadlines live on the replica's serve clock
             req.arrival = sched.now()
@@ -246,7 +316,7 @@ class AsyncEngineServer:
         for req_id in cans:
             sched.abort(req_id, CANCELLED)
 
-    def _publish(self, emitted, finished) -> None:
+    def _publish(self, emitted, finished, boundary=None) -> None:
         # engine audits run here, on the worker thread that owns the
         # scheduler; the loop side reads the published snapshot
         eng = self.scheduler.engine
@@ -267,6 +337,9 @@ class AsyncEngineServer:
             self._load = self.scheduler.load
             self._pool_ok = pool_ok
             self._drained = drained
+            self._beat_t = time.perf_counter()   # boundary progressed
+            if boundary is not None:
+                self._beat_boundary = boundary
 
     def _run(self) -> None:
         sched = self.scheduler
@@ -285,7 +358,8 @@ class AsyncEngineServer:
                         self._work.wait(timeout=0.25)
                     continue
                 report = sched.boundary()   # faults stall/crash inside
-                self._publish(report.emitted, report.finished)
+                self._publish(report.emitted, report.finished,
+                              boundary=report.boundary)
                 if report.idle:
                     # resident bank empty but requests queued (injected
                     # pool exhaustion / future arrivals): don't hot-spin

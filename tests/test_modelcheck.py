@@ -1,0 +1,235 @@
+"""Boundary-protocol model checker (analysis/modelcheck.py).
+
+Three layers of pinning:
+
+  * the checker has TEETH: seeded protocol bugs (a page leak in the abort
+    sweep, a ``fail_all`` that forgets to drain the queue, an admission
+    pass ordered before the abort sweep) are each caught with a concrete
+    counterexample trace;
+  * the documented default bound (3 requests, pool pressure, chunked
+    prefill, crash at every reachable state) explores completely and
+    violation-free — this is the same exploration the R9 lint rule and the
+    CI gate run;
+  * the model is FAITHFUL: identical action traces replayed against the
+    real ``ContinuousScheduler`` + paged ``BatchEngine`` produce the same
+    terminal states, the same per-request emission counts, the same
+    per-boundary pool occupancy, and the same drained pool at the end.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import modelcheck as mc
+from repro.configs import get_config
+from repro.models.api import get_model
+from repro.runtime.engine import BatchEngine
+from repro.runtime.scheduler import ContinuousScheduler, Request
+
+# ---------------------------------------------------------------------------
+# explorer teeth: seeded bugs must be caught
+# ---------------------------------------------------------------------------
+
+
+class _LeakyAbortModel(mc.SchedModel):
+    """Abort sweep 'releases' a row without returning its pages."""
+
+    def _release(self, slot, kind):
+        if kind == "abort_release":
+            slot["pages"] = 0
+            self.boundary_events.append(kind)
+            return
+        super()._release(slot, kind)
+
+
+class _UndrainedFailModel(mc.SchedModel):
+    """fail_all forgets self.pending: post-crash boundaries can admit."""
+
+    def fail_all(self):
+        self.failed = True
+        for b, s in enumerate(self.slots):
+            if s is None:
+                continue
+            kept = min(s["out"], self.reqs[s["id"]].n_tokens)
+            self._finalize(s["id"], kept, mc.FAILED)
+            self._release(s, "fail_release")
+            self.slots[b] = None
+        self.aborts = {}
+
+
+class _AdmitFirstModel(mc.SchedModel):
+    """Boundary runs admissions BEFORE the abort sweep (protocol order
+    inverted): freed pages arrive too late for same-boundary reuse, and
+    an aborted-then-refilled row double-finalizes."""
+
+    def boundary(self):
+        ev_admit = []
+        c = self.cfg
+        for b in range(c.batch):
+            if self.slots[b] is not None or not self.pending:
+                continue
+            req = self.reqs[self.pending[0]]
+            need = self._need_pages(req)
+            if self.started and self.free < need:
+                break
+            self.pending.pop(0)
+            self.free -= need
+            self.started = True
+            self.slots[b] = {"id": req.req_id, "out": 1,
+                             "rem": max(req.n_tokens - 1, 0),
+                             "done": False, "left": None, "pages": need}
+            self.state_of[req.req_id] = mc.DECODING
+            ev_admit.append("admit")
+        flushed = super().boundary()
+        # true temporal order: these admissions happened FIRST
+        self.boundary_events = ev_admit + self.boundary_events
+        self._check_boundary_order()
+        return flushed
+
+
+def _explore_with(model_cls):
+    orig = mc.SchedModel
+    mc.SchedModel = model_cls
+    try:
+        return mc.explore(mc.DEFAULT_REQUESTS, mc.DEFAULT_CONFIG,
+                          max_seconds=60.0)
+    finally:
+        mc.SchedModel = orig
+
+
+def test_checker_catches_page_leak_on_abort():
+    res = _explore_with(_LeakyAbortModel)
+    assert res.violations
+    assert all(msg.startswith("I1") for _, msg in res.violations)
+    # every counterexample is a concrete actionable trace
+    trace = mc.render_trace(res.violations[0][0])
+    assert "abort(" in trace and "boundary" in trace
+
+
+def test_checker_catches_undrained_fail_all():
+    res = _explore_with(_UndrainedFailModel)
+    assert res.violations
+    assert any(msg.startswith("I4") for _, msg in res.violations)
+    bad = next(p for p, m in res.violations if m.startswith("I4"))
+    assert ("crash",) in bad
+
+
+def test_checker_catches_admit_before_abort_sweep():
+    res = _explore_with(_AdmitFirstModel)
+    assert res.violations
+    kinds = {m.split(":")[0] for _, m in res.violations}
+    assert "I3" in kinds
+
+
+def test_default_bound_explores_clean():
+    res = mc.explore(mc.DEFAULT_REQUESTS, mc.DEFAULT_CONFIG,
+                     max_seconds=60.0)
+    assert res.complete and not res.violations
+    # the bound is non-trivial: hundreds of canonical states, crash
+    # reachable from each of them
+    assert res.states > 100
+    assert res.transitions > res.states
+
+
+def test_cli_smoke(capsys):
+    assert mc.main(["--max-seconds", "60"]) == 0
+    out = capsys.readouterr().out
+    assert "OK" in out and "states" in out
+
+
+def test_wall_clock_cap_failure_is_loud(capsys):
+    assert mc.main(["--max-seconds", "0"]) == 1
+    assert "NOT verified" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# model-vs-real equivalence: identical traces, identical observables
+# ---------------------------------------------------------------------------
+_REAL = {}
+
+
+def _real_pair():
+    """A paged sequential engine + scheduler matching DEFAULT_CONFIG."""
+    if not _REAL:
+        cfg = get_config("qwen2-0.5b").reduced()
+        model = get_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        c = mc.DEFAULT_CONFIG
+        eng = BatchEngine(model, params, max_len=c.max_len, chunk=c.chunk,
+                          paged=True, page_size=c.page_size,
+                          pool_pages=c.n_pages)
+        _REAL["cfg"], _REAL["eng"] = cfg, eng
+    return _REAL["cfg"], _REAL["eng"]
+
+
+def _requests(cfg):
+    rng = np.random.default_rng(11)
+    out = {}
+    for r in mc.DEFAULT_REQUESTS:
+        toks = rng.integers(0, cfg.vocab_size, size=r.prompt_len)
+        out[r.req_id] = Request(req_id=r.req_id,
+                                tokens=np.asarray(toks, np.int32),
+                                n_tokens=r.n_tokens)
+    return out
+
+
+TRACES = {
+    "plain": [("submit", 1), ("submit", 3), ("boundary",), ("boundary",),
+              ("submit", 2), ("boundary",), ("boundary",), ("boundary",),
+              ("boundary",), ("boundary",)],
+    "abort-resident": [("submit", 1), ("submit", 2), ("boundary",),
+                       ("abort", 1), ("boundary",), ("submit", 3),
+                       ("boundary",), ("boundary",), ("boundary",),
+                       ("boundary",)],
+    "abort-queued-and-prefilling": [("submit", 2), ("submit", 3),
+                                    ("abort", 3), ("boundary",),
+                                    ("abort", 2), ("boundary",),
+                                    ("boundary",)],
+    "crash-mid-flight": [("submit", 3), ("submit", 1), ("submit", 2),
+                         ("boundary",), ("boundary",), ("crash",),
+                         ("boundary",)],
+    "crash-before-start": [("submit", 1), ("crash",), ("boundary",)],
+}
+
+
+@pytest.mark.parametrize("trace_name", sorted(TRACES))
+def test_model_matches_real_scheduler(trace_name):
+    trace = TRACES[trace_name]
+    cfg, eng = _real_pair()
+    reqs = _requests(cfg)
+    c = mc.DEFAULT_CONFIG
+    # the model's page arithmetic must use the REAL engine's overshoot
+    assert c.overshoot == eng._overshoot
+
+    model = mc.SchedModel(c, mc.DEFAULT_REQUESTS)
+    sched = ContinuousScheduler(eng, batch=c.batch, chunk=c.chunk,
+                                prefill_chunk=c.prefill_chunk)
+    sched.start([], eos=None)
+    for act in trace:
+        if act[0] == "submit":
+            model.submit(act[1])
+            sched.submit(reqs[act[1]])
+        elif act[0] == "abort":
+            model.abort(act[1])
+            sched.abort(act[1])
+        elif act[0] == "crash":
+            model.fail_all()
+            sched.fail_all()
+        else:
+            flushed = model.boundary()
+            rep = sched.boundary()
+            real_flush = {rid: len(toks)
+                          for rid, toks in rep.emitted.items() if toks}
+            assert flushed == real_flush, (trace_name, act)
+        # pool occupancy tracks after EVERY action
+        real_free = eng._alloc.available if eng._alloc is not None \
+            else c.n_pages
+        assert model.free == real_free, (trace_name, act)
+        assert eng._alloc is None or eng.sched_pool_conserved()
+    # identical terminal results: state + emission count per request
+    real = {rid: (res.state, res.n_emitted)
+            for rid, res in sched._results.items()}
+    assert model.results == real, trace_name
+    # drained pool whenever the model says everything terminated
+    if model.all_terminal():
+        assert model.terminal_problems() == []
+        assert eng._alloc is None or eng.sched_drained()

@@ -341,6 +341,61 @@ def test_router_no_healthy_replica_rejects():
     assert res.state == REJECTED and not healthy and conserved
 
 
+def test_router_liveness_probe_drains_stalled_replica():
+    """Replica rs is alive but WEDGED (every boundary stalls far longer
+    than ``stall_timeout_s``): its boundary-progress heartbeat goes
+    stale, the router's liveness watcher drains it proactively — the
+    outstanding handle fails over to rs2 and the client still gets the
+    solo stream exactly once — and rs is sticky-unhealthy so routing
+    skips it from then on.  Without the probe this request would sit on
+    the wedged worker for the stall's full duration."""
+    cfg, ea = _engine("rs")
+    _, eb = _engine("rs2")
+    req = _requests(cfg, 1, budget=12)[0]
+    # prewarm both engines' scheduler-path jits: a cold compile inside
+    # the first boundary is indistinguishable from a stall and would
+    # trip the probe on the HEALTHY replica too
+    for e in (ea, eb):
+        warm = ContinuousScheduler(e, batch=2)
+        warm.start([], eos=None)
+        warm.submit(_requests(cfg, 1, budget=12, seed=9)[0])
+        while warm.has_work:
+            warm.boundary()
+        warm.finish()
+    plan = FaultPlan(seed=7, stall_rate=1.0, stall_s=2.0)
+
+    async def go():
+        servers = [
+            AsyncEngineServer(ContinuousScheduler(
+                ea, batch=2, faults=plan.injector("rs")), name="rs",
+                stall_timeout_s=0.5),
+            AsyncEngineServer(ContinuousScheduler(eb, batch=2),
+                              name="rs2", stall_timeout_s=0.5),
+        ]
+        router = ReplicaRouter(servers, max_retries=2, backoff_base=0.01,
+                               seed=7)
+        await router.start(health_every_s=0.05)
+        delivered, res = await router.generate(req)
+        health = [s.healthy for s in servers]
+        seen_stalled = any(h["name"] == "rs" and h["stalled"]
+                           for snap in router.health_log for h in snap)
+        conserved = router.pages_conserved()
+        await router.stop()               # joins rs once its decode ends
+        drained = router.drained()
+        return (delivered, res, health, seen_stalled, conserved,
+                drained, router.retries, router.stall_drains)
+
+    (delivered, res, health, seen_stalled, conserved, drained, retries,
+     stall_drains) = asyncio.run(go())
+    assert res.state == DONE and retries >= 1
+    assert stall_drains >= 1               # the probe did the failover
+    assert health == [False, True]         # rs sticky-unhealthy, rs2 fine
+    assert seen_stalled                    # health() surfaced the stall
+    np.testing.assert_array_equal(delivered, _solo(ea, req)[:12])
+    np.testing.assert_array_equal(res.tokens, delivered)
+    assert conserved and drained           # wedged != leaking
+
+
 def test_fault_plan_validation_and_determinism():
     with pytest.raises(ValueError):
         FaultPlan(cancel_rate=1.5)
