@@ -45,13 +45,25 @@ _WORKER_ENV = {
 }
 
 
-def spawn_pinned_worker(script: str, argv: list) -> dict:
+# the hcmp arm's worker: same pinned contract plus a second XLA host
+# device, so the disaggregated draft/verify executors get real device
+# objects (the flag must be set before the subprocess initializes jax)
+_HCMP_DEV_FLAG = "--xla_force_host_platform_device_count=2"
+
+
+def spawn_pinned_worker(script: str, argv: list,
+                        extra_xla_flags: str = "") -> dict:
     """Run ``script --worker *argv`` in the pinned measurement environment
     (single-thread XLA CPU, src + repo root on PYTHONPATH) and return its
     JSON record.  Shared by every bench that measures in a subprocess so
     the environment contract cannot drift between them."""
     env = dict(os.environ)
     env.update(_WORKER_ENV)
+    if extra_xla_flags:
+        # PREPEND: the pinned env ends with a bare (non --xla) token that
+        # terminates XLA's flag parsing — flags appended after it are
+        # silently ignored
+        env["XLA_FLAGS"] = f"{extra_xla_flags} {env['XLA_FLAGS']}"
     root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
     env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root \
         + os.pathsep + env.get("PYTHONPATH", "")
@@ -136,6 +148,76 @@ def _trained_arm(cfg, model, n_tokens, reps, steps, head_steps) -> dict:
             "accs_top1": [round(float(x), 4) for x in accs[:, 0]],
             "acceptance": st["acceptance_length"],
             "tok_s_b1_k8": n_tokens / t}
+
+
+def _hcmp_worker(n_tokens: int, reps: int) -> dict:
+    """hcmp arm, in its OWN pinned subprocess with two XLA host devices:
+    inline (fused chunk scan) vs overlap (disaggregated draft/verify
+    executors, core/hcmp/executors.py) tokens/sec, the bit-identity gate,
+    and ARCA's measured partition choice (``profile_engine`` timing both
+    layouts through ``time_step(..., hcmp=...)``)."""
+    import jax
+    import numpy as np
+
+    from repro.core import arca
+    from repro.core.speculative import tree as T
+    from repro.core.speculative.medusa import init_medusa
+    from repro.models.api import get_model
+    from repro.runtime.engine import SpeculativeEngine
+
+    cfg = _engine_smoke_cfg()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    heads = init_medusa(cfg, jax.random.PRNGKey(1))
+    accs = T.default_accs(cfg.medusa_heads, cfg.medusa_top_k)
+    spec = T.build_tree(accs, 4)
+    max_len = 16 + n_tokens + spec.max_depth
+    out = {"devices": len(jax.devices()), "tree_width": 4, "chunk": 8,
+           "host_cores": os.cpu_count(), "grid": []}
+    for B in (1, 4):
+        prompt = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(2), (B, 16), 0, cfg.vocab_size)}
+        inline = SpeculativeEngine(model, heads, params, spec,
+                                   max_len=max_len, chunk=8)
+        overlap = SpeculativeEngine(model, heads, params, spec,
+                                    max_len=max_len, chunk=8,
+                                    hcmp="overlap")
+        out_i, _ = inline.generate(prompt, n_tokens)
+        out_o, _ = overlap.generate(prompt, n_tokens)
+        if not np.array_equal(np.asarray(out_i), np.asarray(out_o)):
+            raise AssertionError(
+                f"overlap diverged from inline at B={B} — the arm is "
+                f"meaningless without bit-identity")
+        t_i = _time(lambda: inline.generate(prompt, n_tokens), reps)
+        t_o = _time(lambda: overlap.generate(prompt, n_tokens), reps)
+        # ARCA's view of the same choice: time_step under both partitions
+        tf = arca.profile_engine(overlap, accs=accs, batch=B,
+                                 prompt_len=16, reps=reps)
+        part = tf.partition_for(spec)
+        key = (spec.width, spec.max_depth, spec.n_paths, B)
+        hs = overlap.hcmp_stats
+        out["grid"].append({
+            "B": B, "inline_tok_s": B * n_tokens / t_i,
+            "overlap_tok_s": B * n_tokens / t_o,
+            "speedup_overlap_vs_inline": t_i / t_o,
+            "arca_partition": part,
+            "arca_step_inline_s": tf.times[key + ("inline",)],
+            "arca_step_overlap_s": tf.times[key + ("overlap",)],
+            "predraft_hits": hs["predraft_hits"],
+            "predraft_discards": hs["predraft_discards"]})
+    if all(g["speedup_overlap_vs_inline"] <= 1.0 for g in out["grid"]):
+        # honest annotation, not a failure: with every visible core
+        # shared by both executor devices the draft(t+1)/commit(t)
+        # window buys no wall time — the arm still pins the parity-safe
+        # schedule and records ARCA picking the measured winner
+        out["note"] = (
+            f"overlap did not beat inline on this container "
+            f"({out['host_cores']} visible core(s), {out['devices']} XLA "
+            f"host device(s) sharing them): the measurement is "
+            f"compute-bound, so the overlap window adds dispatch cost "
+            f"without freeing wall time; ARCA's measured partition "
+            f"choice reflects exactly that")
+    return out
 
 
 def _worker(n_tokens: int, reps: int, train_steps: int = 120,
@@ -237,6 +319,11 @@ def run(n_tokens=64, reps=3, train_steps=120, head_steps=80) -> list:
                                             "--train-steps",
                                             str(train_steps),
                                             "--head-steps", str(head_steps)])
+    # hcmp arm: its own subprocess — the second XLA host device can only
+    # be requested before the backend initializes
+    record["hcmp"] = spawn_pinned_worker(
+        __file__, ["--tokens", str(n_tokens), "--reps", str(reps),
+                   "--hcmp-arm"], extra_xla_flags=_HCMP_DEV_FLAG)
 
     rows = [("engine_legacy_seq_b1", 1e6 / record["legacy_seq_b1_tok_s"],
              f"{record['legacy_seq_b1_tok_s']:.1f} tok/s")]
@@ -260,6 +347,17 @@ def run(n_tokens=64, reps=3, train_steps=120, head_steps=80) -> list:
     rows.append(("engine_trained_vs_random_heads",
                  tr["speedup_vs_random_heads_b1_k8"],
                  "x tok/s vs random-heads arm (e2e-trained Medusa heads)"))
+    hc = record["hcmp"]
+    for g in hc["grid"]:
+        rows.append((f"engine_hcmp_overlap_b{g['B']}_k8",
+                     g["speedup_overlap_vs_inline"],
+                     f"x inline ({g['overlap_tok_s']:.1f} vs "
+                     f"{g['inline_tok_s']:.1f} tok/s, "
+                     f"{hc['devices']} devices, arca picks "
+                     f"{g['arca_partition']})"))
+    if "note" in hc:
+        rows.append(("engine_hcmp_note", float(hc["devices"]),
+                     hc["note"]))
 
     os.makedirs(RESULT_DIR, exist_ok=True)
     path = os.path.join(RESULT_DIR, "engine_bench.json")
@@ -280,10 +378,16 @@ if __name__ == "__main__":
     ap.add_argument("--head-steps", type=int, default=80,
                     help="Medusa-head steps for the trained-heads arm")
     ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--hcmp-arm", action="store_true",
+                    help="(worker-internal) run only the hcmp "
+                         "inline-vs-overlap arm")
     args = ap.parse_args()
     if args.worker:
         bootstrap_worker_path()
-        print(json.dumps(_worker(args.tokens, args.reps, args.train_steps,
-                                 args.head_steps)))
+        if args.hcmp_arm:
+            print(json.dumps(_hcmp_worker(args.tokens, args.reps)))
+        else:
+            print(json.dumps(_worker(args.tokens, args.reps,
+                                     args.train_steps, args.head_steps)))
     else:
         run(args.tokens, args.reps, args.train_steps, args.head_steps)

@@ -42,6 +42,13 @@ BUCKETS = (
     "chunk_scan",          # the K-step decode chunk (per K)
     "_insert_row",         # dense row splice (bootstrap)
     "_reset_state_rows",   # batched row reset
+    # hcmp overlap executors (core/hcmp/executors.py): the disaggregated
+    # schedule replaces chunk_scan with three named jits — the verify
+    # front half and cache commit on the verify device, the Medusa draft
+    # on the draft device
+    "verify_front",        # tree verify + accept walk (verify executor)
+    "draft_step",          # Medusa draft + tree expansion (draft executor)
+    "commit_step",         # KV commit of the accepted chain (donates cache)
 )
 
 BUDGET_PATH = Path(__file__).resolve().parent / "compile_budget.json"
@@ -158,6 +165,18 @@ def run_smoke() -> Dict[str, int]:
             rng.integers(0, cfg.vocab_size, size=(2, 4)), np.int32)
         dense.generate({"tokens": prompts}, 3)
         eng.generate({"tokens": prompts}, 3)
+        # hcmp overlap: the disaggregated draft/verify schedule — each
+        # executor jit must compile exactly once (single-device fallback
+        # traces the same three functions, so this segment is stable no
+        # matter how many host devices the process was started with)
+        from repro.core.speculative import tree as T
+        from repro.core.speculative.medusa import init_medusa
+        from repro.runtime.engine import SpeculativeEngine
+        heads = init_medusa(cfg, jax.random.PRNGKey(1))
+        accs = T.default_accs(cfg.medusa_heads, cfg.medusa_top_k)
+        seng = SpeculativeEngine(model, heads, params, T.build_tree(accs, 4),
+                                 max_len=32, chunk=2, hcmp="overlap")
+        seng.generate({"tokens": prompts}, 3)
     return {name: counter.counts.get(name, 0) for name in BUCKETS}
 
 

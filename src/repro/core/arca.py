@@ -236,6 +236,11 @@ class Strategy:
     acceptance: float
     step_time: float
     throughput: float            # tokens/s
+    hcmp: str = "inline"         # measured executor partition for this
+                                 # width: "inline" (fused draft+verify) or
+                                 # "overlap" (disaggregated draft/verify,
+                                 # core/hcmp/executors.py) — set from
+                                 # profile_engine's dual-mode timings
 
 
 def choose_strategy(cfg, accs: np.ndarray, ctx: int = 256,
@@ -251,14 +256,21 @@ def choose_strategy(cfg, accs: np.ndarray, ctx: int = 256,
         spec = T.candidate_spec(accs, w, evaluator=evaluator)
         al = T.expected_acceptance_length(spec, accs)
         ratio = contention_aware_ratio(soc, cfg, w, ctx)
+        hcmp = "inline"
         if time_fn is not None:
             t = time_fn(cfg, w, ctx, spec)
+            # a measured time_fn from profile_engine also knows which
+            # executor partition its best time came from: the partition
+            # is chosen exactly the way the speculative strategy is
+            part = getattr(time_fn, "partition_for", None)
+            if part is not None:
+                hcmp = part(spec)
         elif w == 1:
             t = step_time_sequential(soc, cfg, ctx)
         else:
             t = step_time_ghidorah(soc, cfg, w, ctx, spec, ratio)
         out[w] = Strategy(width=w, tree=spec, ratio=ratio, acceptance=al,
-                          step_time=t, throughput=al / t)
+                          step_time=t, throughput=al / t, hcmp=hcmp)
     return out
 
 
@@ -268,13 +280,28 @@ def best(strategies: Dict[int, Strategy]) -> Strategy:
 
 def profile_engine(engine, widths: Optional[Sequence[int]] = None, *,
                    accs: Optional[np.ndarray] = None, batch: int = 1,
-                   prompt_len: int = 16, reps: int = 3) -> Callable:
+                   prompt_len: int = 16, reps: int = 3,
+                   hcmp_modes: Optional[Sequence[str]] = None) -> Callable:
     """Measured time source for ``choose_strategy``: returns a
     ``time_fn(cfg, width, ctx, spec)`` that times the engine's COMPILED
     step for the given tree through ``DecodeEngine.time_step`` (one
-    measurement per tree SHAPE — ``(width, max_depth, n_paths)`` — cached,
-    so the search never re-times a same-shape candidate and switching back
-    to a profiled width is free).
+    measurement per tree SHAPE and serving batch — ``(width, max_depth,
+    n_paths, batch)`` — cached, so the search never re-times a same-shape
+    candidate and switching back to a profiled width is free).
+
+    ``batch`` must be the SERVING batch (the adaptive scheduler's bank
+    width B): per-step cost is strongly batch-dependent, so a width
+    ranked at batch=1 can be the wrong pick at B=8 — the batch is part
+    of the timing cache key for the same reason.
+
+    ``hcmp_modes`` names the executor partitions to time per candidate
+    ("inline" / "overlap", core/hcmp/executors.py).  Default: both when
+    the engine is already running the disaggregated schedule, else
+    inline only.  The returned ``time_fn`` reports each shape's BEST
+    partition time, and ``time_fn.partition_for(spec)`` names the
+    winning partition — ``choose_strategy`` stamps it on the
+    ``Strategy`` so the partition is chosen the same way the speculative
+    strategy is.
 
     ``widths`` pre-measures those candidates up front (trees built from
     ``accs``, default: the engine model's calibration table shape), which
@@ -283,15 +310,41 @@ def profile_engine(engine, widths: Optional[Sequence[int]] = None, *,
     candidate width hits a warm compile cache.  Unseen shapes are measured
     lazily on first use.
     """
+    if hcmp_modes is None:
+        hcmp_modes = ("inline", "overlap") \
+            if getattr(engine, "hcmp", "inline") == "overlap" else ("inline",)
+    hcmp_modes = tuple(hcmp_modes)
+    for m in hcmp_modes:
+        if m == "overlap" and not getattr(engine, "hcmp_capable", False):
+            raise ValueError("cannot profile the overlap partition: the "
+                             "engine has no draft source to disaggregate")
     times: Dict[tuple, float] = {}
+    partition: Dict[tuple, str] = {}
+
+    def _measure(spec) -> tuple:
+        skey = (spec.width, spec.max_depth, spec.n_paths, batch)
+        if skey not in partition:
+            strategy = engine.strategy_for(spec)
+            per = {}
+            for mode in hcmp_modes:
+                per[mode] = engine.time_step(strategy, batch=batch,
+                                             prompt_len=prompt_len,
+                                             reps=reps, hcmp=mode)
+                times[skey + (mode,)] = per[mode]
+            partition[skey] = min(per, key=per.get)
+        return skey
 
     def time_fn(cfg, width, ctx, spec) -> float:
-        key = (spec.width, spec.max_depth, spec.n_paths)
-        if key not in times:
-            times[key] = engine.time_step(engine.strategy_for(spec),
-                                          batch=batch,
-                                          prompt_len=prompt_len, reps=reps)
-        return times[key]
+        skey = _measure(spec)
+        return times[skey + (partition[skey],)]
+
+    def partition_for(spec) -> str:
+        return partition[_measure(spec)]
+
+    time_fn.partition_for = partition_for
+    time_fn.batch = batch
+    time_fn.hcmp_modes = hcmp_modes
+    time_fn.times = times
 
     if widths:
         table = accs

@@ -1,6 +1,30 @@
 """HCMP sharding rules (paper §III-B) and the Megatron baseline, as
 PartitionSpec pytrees for pjit.
 
+Hetero-core model parallelism in this repo has TWO independent layers,
+split across two modules:
+
+* **Intra-step tensor parallelism (this module)**: how one forward pass
+  is partitioned over the `model` mesh axis — the paper's column-only
+  HCMP split vs the Megatron baseline, as PartitionSpec rule tables.
+  Everything here is static layout metadata consumed by pjit; nothing
+  in this file runs at decode time.
+* **Inter-step executor disaggregation (``executors.py``)**: how the
+  speculative decode LOOP is partitioned across executors — the tree
+  verifier + KV commit pinned to the verify device, the Medusa draft
+  heads pinned to the draft device, with draft(t+1) dispatched into the
+  window where commit(t) is still in flight and a cross-chunk pre-draft
+  carried over quiet scheduler boundaries.  Ownership and ordering
+  rules (who may touch the cache, why the verify read may precede the
+  donated commit, when a pre-draft must be discarded) are documented on
+  ``HcmpOverlapRunner`` — runtime code reading this file for the
+  sharding tables does not need them, and vice versa.
+
+The two compose: an overlap executor pair can run a tensor-sharded
+model on each side, because the executor split is made at jit-dispatch
+granularity (whole ``verify_front`` / ``draft_step`` / ``commit_step``
+calls), never inside a pjit'd computation.
+
 Two tensor-parallel modes over the `model` mesh axis:
 
   hcmp      column-only split of EVERY linear (paper §III-B1).  Activations

@@ -161,6 +161,39 @@ def _replay_async(args, data, build_engine, adaptive=None):
     return results, stats
 
 
+def _hcmp_gate(args, data, eng_overlap, results, build_inline,
+               adaptive=None):
+    """--hcmp overlap acceptance gate (the CI smoke): re-serve the SAME
+    arrival stream on an inline twin engine and require bit-identical
+    per-request tokens, plus a leak-free drained pool on the overlap
+    engine.  Exits non-zero on any parity or leak failure."""
+    leak = not (eng_overlap.sched_pool_conserved()
+                and eng_overlap.sched_drained())
+    if args.sched == "continuous":
+        ref, _ = ContinuousScheduler(
+            build_inline(), batch=args.batch, chunk=args.chunk,
+            policy=args.policy, prefill_chunk=args.prefill_chunk,
+            age_limit=args.age_limit, adaptive=adaptive).serve(
+                _requests(args, data))
+    else:
+        ref, _ = serve_static(build_inline(), _requests(args, data),
+                              batch=args.batch)
+    bad = [r.req_id for r, s in zip(results, ref)
+           if not np.array_equal(r.tokens, s.tokens)]
+    hs = eng_overlap.hcmp_stats or {}
+    print(f"[serve] hcmp overlap gate: parity "
+          f"{'OK' if not bad else 'FAIL ' + str(bad)}, "
+          f"pages {'LEAKED' if leak else 'OK'}; "
+          f"predraft hits {hs.get('predraft_hits', 0)} / discards "
+          f"{hs.get('predraft_discards', 0)} over {hs.get('chunks', 0)} "
+          f"chunks on {hs.get('devices', 1)} device(s)")
+    if bad or leak:
+        raise SystemExit(f"[serve] HCMP OVERLAP VIOLATION: overlapped "
+                         f"draft/verify diverged from the inline engine "
+                         f"(mismatched req ids {bad}, leaked pages: "
+                         f"{leak})")
+
+
 def _replay(eng, args, data, cfg, adaptive=None):
     """Arrival-replay mode: Poisson request stream through the scheduler."""
     reqs = _requests(args, data)
@@ -277,6 +310,18 @@ def main():
     ap.add_argument("--queue-limit", type=int, default=64,
                     help="bounded admission queue per replica; submits "
                          "over it are REJECTED (backpressure)")
+    ap.add_argument("--hcmp", default="inline",
+                    choices=["inline", "overlap", "auto"],
+                    help="executor partition for the drafted engine "
+                         "(core/hcmp/executors.py): inline = fused "
+                         "draft+verify on one executor; overlap = "
+                         "disaggregated DraftExecutor/VerifyExecutor with "
+                         "draft(t+1) overlapping commit(t) — a replay "
+                         "additionally re-runs the stream on an inline "
+                         "twin and exits non-zero on any token mismatch "
+                         "or leaked page (the CI gate); auto = ARCA times "
+                         "both partitions and picks the faster "
+                         "(ghidorah only)")
     args = ap.parse_args()
     # ---- argument validation: fail fast with a clear error, never hang
     # or crash layers deeper --------------------------------------------
@@ -315,6 +360,9 @@ def main():
     if args.spec_width and args.mode != "ghidorah":
         ap.error("--spec-width is a ghidorah option (sequential decoding "
                  "has no verification width)")
+    if args.hcmp != "inline" and args.mode != "ghidorah":
+        ap.error("--hcmp overlap/auto is a ghidorah option (sequential "
+                 "decoding has no draft source to disaggregate)")
     if _fault_tolerant(args) and (args.arrivals != "poisson"
                                   or args.sched != "continuous"):
         ap.error("--replicas/--deadline-s/--cancel-rate/--inject-faults "
@@ -322,6 +370,16 @@ def main():
                  "plane serves an arrival stream)")
     paged_kw = dict(paged=args.paged, page_size=args.page_size,
                     pool_pages=args.pool_pages or None)
+    if args.hcmp != "inline":
+        # must run BEFORE the first jax computation: the second host
+        # device can only be requested while the backend is uninitialized
+        from repro.core.hcmp.executors import ensure_host_devices
+        ndev = ensure_host_devices(2)
+        note = "" if ndev >= 2 else \
+            " (single device: overlap degrades to a serial schedule)"
+        print(f"[serve] hcmp {args.hcmp}: {ndev} host device(s){note}")
+        # overlap-capable engine; "auto" measures and may switch back
+        paged_kw["hcmp"] = "overlap"
 
     cfg = get_config(args.arch)
     model = get_model(cfg)
@@ -389,19 +447,40 @@ def main():
               f"(E[AL]={start.acceptance:.2f}, "
               f"step {start.step_time * 1e3:.2f} ms)")
         eng.set_strategy(start.tree)
+        if args.hcmp != "inline":
+            # profile_engine timed BOTH partitions (the engine was built
+            # overlap-capable), so choose_strategy stamped the measured
+            # winner on each Strategy; "auto" follows it, "overlap" pins
+            part = "overlap" if args.hcmp == "overlap" else start.hcmp
+            print(f"[serve] hcmp partition: {part} "
+                  f"(measured winner for width {start.width}: "
+                  f"{start.hcmp})")
+            eng.set_hcmp(part)
 
         def build_auto():
             e = SpeculativeEngine(model, heads, params, specs[max(widths)],
                                   max_len=max_len, chunk=args.chunk,
                                   **paged_kw)
             e.set_strategy(start.tree)
+            if args.hcmp != "inline":
+                e.set_hcmp(eng.hcmp)
             return e
 
         if _fault_tolerant(args):
             _replay_async(args, data, _once_then(eng, build_auto),
                           adaptive=strategies)
         else:
-            _replay(eng, args, data, cfg, adaptive=strategies)
+            results, _ = _replay(eng, args, data, cfg, adaptive=strategies)
+            if args.hcmp == "overlap":
+                def build_inline():
+                    e = SpeculativeEngine(model, heads, params,
+                                          specs[max(widths)],
+                                          max_len=max_len, chunk=args.chunk,
+                                          **{**paged_kw, "hcmp": "inline"})
+                    e.set_strategy(start.tree)
+                    return e
+                _hcmp_gate(args, data, eng, results, build_inline,
+                           adaptive=strategies)
         return
     if args.width:
         spec = T.build_tree(accs, args.width)
@@ -416,6 +495,22 @@ def main():
     max_len = args.prompt_len + args.tokens + spec.max_depth
     eng = SpeculativeEngine(model, heads, params, spec, max_len=max_len,
                             chunk=args.chunk, **paged_kw)
+    if args.hcmp == "auto":
+        # measure the partition for THIS shape on THIS machine: time the
+        # compiled step under both executor layouts at the serving batch
+        # and keep the faster one (same decision path --spec-width auto
+        # takes through choose_strategy's Strategy.hcmp stamp)
+        tf = arca.profile_engine(eng, (spec.width,), accs=accs,
+                                 batch=args.batch,
+                                 prompt_len=args.prompt_len,
+                                 hcmp_modes=("inline", "overlap"))
+        part = tf.partition_for(spec)
+        key = (spec.width, spec.max_depth, spec.n_paths, args.batch)
+        print(f"[serve] measured partition: {part} "
+              f"(inline {tf.times[key + ('inline',)] * 1e3:.2f} ms, "
+              f"overlap {tf.times[key + ('overlap',)] * 1e3:.2f} ms "
+              f"per step)")
+        eng.set_hcmp(part)
     if args.arrivals != "none":
         if _fault_tolerant(args):
             _replay_async(args, data, _once_then(
@@ -424,7 +519,13 @@ def main():
                                                chunk=args.chunk,
                                                **paged_kw)))
         else:
-            _replay(eng, args, data, cfg)
+            results, _ = _replay(eng, args, data, cfg)
+            if args.hcmp == "overlap":
+                _hcmp_gate(args, data, eng, results,
+                           lambda: SpeculativeEngine(
+                               model, heads, params, spec, max_len=max_len,
+                               chunk=args.chunk,
+                               **{**paged_kw, "hcmp": "inline"}))
         return
     t0 = time.perf_counter()
     out, stats = eng.generate(batch, args.tokens)        # full batch: B >= 1
@@ -435,6 +536,25 @@ def main():
           f"({n_out / dt:.1f} tok/s), "
           f"acceptance length {stats['acceptance_length']:.2f} "
           f"over {stats['steps']} seq-steps")
+    if args.hcmp == "overlap":
+        # fixed-batch parity gate: the overlapped schedule must emit the
+        # exact token stream of the fused inline engine
+        ref = SpeculativeEngine(model, heads, params, spec, max_len=max_len,
+                                chunk=args.chunk,
+                                **{**paged_kw, "hcmp": "inline"})
+        ref_out, _ = ref.generate(batch, args.tokens)
+        hs = eng.hcmp_stats or {}
+        ok = np.array_equal(np.asarray(out), np.asarray(ref_out))
+        print(f"[serve] hcmp overlap gate: parity "
+              f"{'OK' if ok else 'FAIL'}; predraft hits "
+              f"{hs.get('predraft_hits', 0)} / discards "
+              f"{hs.get('predraft_discards', 0)} over "
+              f"{hs.get('chunks', 0)} chunks on "
+              f"{hs.get('devices', 1)} device(s)")
+        if not ok:
+            raise SystemExit("[serve] HCMP OVERLAP VIOLATION: overlapped "
+                             "draft/verify diverged from the inline "
+                             "engine on the fixed batch")
 
 
 if __name__ == "__main__":

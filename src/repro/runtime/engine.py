@@ -53,6 +53,18 @@ never outgrow a row's reservation.
 All state-threading jits (chunk scans, ``sched_admit``, ``sched_insert``,
 ``sched_reset``) DONATE the carried state, so the cache — one large pool
 when paged — is updated in place instead of copied every chunk.
+
+HCMP executor split (``hcmp="overlap"``, core/hcmp/executors.py): the
+drafted strategy's two phases run on separate executors — Medusa heads
+(DraftExecutor, device 1) and the full-model tree verify + commit
+(VerifyExecutor, device 0) — pipelined so drafting step t+1 overlaps
+step t's KV commit, with a cross-chunk pre-draft versioned by the bank
+epoch (any ``sched_*`` mutation or strategy switch bumps it; a stale
+pre-draft is discarded and redrafted).  The routing happens inside
+``_run_chunk`` below the ``sched_*`` protocol, so the scheduler is
+unchanged and outputs stay bit-identical to the inline scan.  ARCA
+times both partitions (``time_step(..., hcmp=...)`` ->
+``profile_engine``) and ``Strategy.hcmp`` records the measured choice.
 """
 from __future__ import annotations
 
@@ -455,6 +467,7 @@ class _PagedPoolMixin:
         ``cur_token``/``hidden`` of the last real position, so the finished
         slot is indistinguishable from a whole-prompt admission).  Compiled
         once per piece width C."""
+        self._touch_bank()
         return self._extend_fn(int(tokens.shape[1]))(
             self.params, state, jnp.asarray(b, jnp.int32),
             jnp.asarray(tokens, jnp.int32), jnp.asarray(n_valid, jnp.int32))
@@ -481,7 +494,8 @@ class DecodeEngine(_PagedPoolMixin):
 
     def __init__(self, model, params, *, strategy: Optional[DecodeStrategy]
                  = None, heads=None, max_len=512, window=0, backend="ref",
-                 chunk=8, paged=False, page_size=16, pool_pages=None):
+                 chunk=8, paged=False, page_size=16, pool_pages=None,
+                 hcmp="inline"):
         if strategy is None:
             if heads is not None:
                 raise ValueError("an engine with draft heads needs an "
@@ -491,8 +505,25 @@ class DecodeEngine(_PagedPoolMixin):
             raise ValueError(f"strategy draft {strategy.draft!r} "
                              f"{'requires' if strategy.draft == 'medusa' else 'forbids'} "
                              "draft heads")
+        if hcmp not in ("inline", "overlap"):
+            raise ValueError(f"hcmp must be 'inline' or 'overlap', "
+                             f"got {hcmp!r}")
+        if hcmp == "overlap" and heads is None:
+            raise ValueError("hcmp='overlap' needs a drafted strategy: the "
+                             "sequential engine has no draft source to "
+                             "disaggregate")
         self.model, self.params, self.heads = model, params, heads
         self.strategy = strategy
+        # HCMP executor split (core/hcmp/executors.py): "overlap" routes
+        # chunks through the disaggregated draft/verify runner, built
+        # lazily.  The bank epoch versions the resident state: every
+        # mutation (admission, reset, extend, strategy switch, a new
+        # generate/time_step stream) bumps it, invalidating the runner's
+        # cross-chunk pre-draft (mis-speculated overlaps are discarded
+        # and redrafted -- outputs stay bit-identical either way).
+        self.hcmp = hcmp
+        self._hcmp_runner = None
+        self._bank_epoch = 0
         self._registered: Dict[int, DecodeStrategy] = {}
         self._registered_depth = 0
         self.max_len, self.window = max_len, window
@@ -579,6 +610,59 @@ class DecodeEngine(_PagedPoolMixin):
                              f"{self.strategy.draft!r} -> {strategy.draft!r}"
                              " (the state carry differs)")
         self.strategy = strategy
+        self._touch_bank()
+
+    # ---- HCMP executor split (core/hcmp/executors.py) --------------------
+    @property
+    def hcmp_capable(self) -> bool:
+        """Whether this engine can run the disaggregated overlap schedule
+        (it needs a draft source to put on the second executor)."""
+        return self.heads is not None
+
+    def set_hcmp(self, mode: str) -> None:
+        """Switch the executor partition between chunks ("inline" |
+        "overlap").  Safe only at chunk boundaries, like
+        ``set_strategy``; bumps the bank epoch so a pre-draft computed
+        under the other schedule is discarded."""
+        if mode not in ("inline", "overlap"):
+            raise ValueError(f"hcmp must be 'inline' or 'overlap', "
+                             f"got {mode!r}")
+        if mode == "overlap" and not self.hcmp_capable:
+            raise ValueError("hcmp='overlap' needs a drafted strategy")
+        self.hcmp = mode
+        self._touch_bank()
+
+    def _touch_bank(self) -> None:
+        """Version the resident bank: called by every mutation that makes
+        a cross-chunk pre-draft stale (admission/insert/reset/extend, a
+        strategy or partition switch, a new generate/time_step stream)."""
+        self._bank_epoch += 1
+
+    def _hcmp(self):
+        if self._hcmp_runner is None:
+            from repro.core.hcmp.executors import HcmpOverlapRunner
+            self._hcmp_runner = HcmpOverlapRunner(self.model, self.heads,
+                                                  backend=self.backend)
+        return self._hcmp_runner
+
+    @property
+    def hcmp_stats(self) -> Optional[dict]:
+        """Overlap-runner counters (None until the runner exists)."""
+        if self._hcmp_runner is None:
+            return None
+        return dict(self._hcmp_runner.stats, mode=self.hcmp)
+
+    def _run_chunk(self, K, strategy, state, done, rem, eos_val):
+        """Route one K-step chunk: the fused inline ``chunk_scan`` or the
+        disaggregated overlap pipeline — same signature, bit-identical
+        outputs (greedy verification commits the greedy chain whatever
+        the draft's placement or timing)."""
+        if self.hcmp == "overlap" and strategy.draft == "medusa":
+            return self._hcmp().run_chunk(self.params, strategy, state,
+                                          done, rem, K, eos_val,
+                                          self._bank_epoch)
+        return self._chunk_fn(K)(self.params, self.heads, strategy, state,
+                                 done, rem, eos_val)
 
     def set_tree(self, tree_spec: TreeSpec) -> None:
         """Legacy alias of ``set_strategy`` (ARCA's ``measure_acceptance``
@@ -671,6 +755,7 @@ class DecodeEngine(_PagedPoolMixin):
         eos_val = _eos_scalar(eos)
         B = int(batch["tokens"].shape[0])
         budget = _budget(n_tokens, B)
+        self._touch_bank()            # new stream: stale pre-drafts die
         if self.paged:
             tables, n_total = self._reserve_tables(batch, budget)
             state = self._prefill_paged_fn(n_total)(
@@ -693,9 +778,8 @@ class DecodeEngine(_PagedPoolMixin):
             # budget bounds the steps still needed — no full-K tail chunks
             need = int(rem_np[~done_np & (rem_np > 0)].max())
             t0 = time.perf_counter()
-            state, done, rem, toks, ns = self._chunk_fn(
-                _pow2_chunk(K, need))(
-                self.params, self.heads, self.strategy, state, done, rem,
+            state, done, rem, toks, ns = self._run_chunk(
+                _pow2_chunk(K, need), self.strategy, state, done, rem,
                 eos_val)
             # ONE host sync per chunk: this block is the whole budget
             toks_np = np.asarray(toks)    # reprolint: disable=R3 (chunk sync)
@@ -731,43 +815,57 @@ class DecodeEngine(_PagedPoolMixin):
     # ---- measured step time (ARCA's time source) -------------------------
     def time_step(self, strategy: Optional[DecodeStrategy] = None, *,
                   batch: int = 1, prompt_len: int = 16, reps: int = 3,
-                  chunk: Optional[int] = None) -> float:
+                  chunk: Optional[int] = None,
+                  hcmp: Optional[str] = None) -> float:
         """Best-of-``reps`` wall time of ONE decode step under ``strategy``
         (default: the current one), measured through the engine's COMPILED
         chunk scan on a dummy prompt — the strategy is a jit argument, so
         the timed function is exactly the deployed one.  Timed at the
         serving chunk cadence (``chunk`` steps per dispatch, divided out);
-        feeds ``core/arca.py profile_engine`` -> ``choose_strategy``."""
+        feeds ``core/arca.py profile_engine`` -> ``choose_strategy``.
+
+        ``hcmp`` overrides the executor partition for this measurement
+        ("inline" | "overlap") — ARCA times both and picks the partition
+        the same way it picks the speculative strategy."""
         strategy = strategy or self.strategy
         K = chunk or self.chunk
-        bd = {"tokens": jnp.zeros((batch, prompt_len), jnp.int32)}
-        if self.paged:
-            budget = np.full((batch,), self.max_len, np.int64)
-            tables, n_total = self._reserve_tables(bd, budget)
-            state = self._prefill_paged_fn(n_total)(
-                self.params, self.heads, bd, tables)
-        else:
-            state = self._prefill(self.params, self.heads, bd)
-        done = jnp.zeros((batch,), bool)
-        rem = jnp.full((batch,), 1 << 30, jnp.int32)
-        eos = _eos_scalar(None)
-        fn = self._chunk_fn(K)
+        prev_hcmp = self.hcmp
+        if hcmp is not None:
+            self.set_hcmp(hcmp)
+        try:
+            self._touch_bank()        # measurement stream, not the bank
+            bd = {"tokens": jnp.zeros((batch, prompt_len), jnp.int32)}
+            if self.paged:
+                budget = np.full((batch,), self.max_len, np.int64)
+                tables, n_total = self._reserve_tables(bd, budget)
+                state = self._prefill_paged_fn(n_total)(
+                    self.params, self.heads, bd, tables)
+            else:
+                state = self._prefill(self.params, self.heads, bd)
+            done = jnp.zeros((batch,), bool)
+            rem = jnp.full((batch,), 1 << 30, jnp.int32)
+            eos = _eos_scalar(None)
 
-        def step(st, dn, rm):
-            return fn(self.params, self.heads, strategy, st, dn, rm, eos)
+            def step(st, dn, rm):
+                return self._run_chunk(K, strategy, st, dn, rm, eos)
 
-        # warm-up compiles; the donated carry is rebound from the outputs
-        state, done, rem, toks, _ = step(state, done, rem)
-        jax.block_until_ready(toks)   # reprolint: disable=R3 (timing harness)
-        best = float("inf")
-        for _ in range(reps):
-            t0 = time.perf_counter()
+            # warm-up compiles; the donated carry is rebound from the
+            # outputs
             state, done, rem, toks, _ = step(state, done, rem)
-            # this IS the measurement: ARCA times the compiled step
             # reprolint: disable=R3 (timing harness)
             jax.block_until_ready(toks)
-            best = min(best, time.perf_counter() - t0)
-        return best / K
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                state, done, rem, toks, _ = step(state, done, rem)
+                # this IS the measurement: ARCA times the compiled step
+                # reprolint: disable=R3 (timing harness)
+                jax.block_until_ready(toks)
+                best = min(best, time.perf_counter() - t0)
+            return best / K
+        finally:
+            if hcmp is not None:
+                self.set_hcmp(prev_hcmp)
 
     # ---- continuous-batching slot protocol (runtime/scheduler.py) --------
     def sched_prefill(self, batch):
@@ -782,6 +880,7 @@ class DecodeEngine(_PagedPoolMixin):
         return int(np.asarray(row.cur_token)[0])
 
     def sched_blank(self, row, batch):
+        self._touch_bank()
         if self.paged:
             n_total = self.pool_pages or batch * self.max_pages
             self._alloc = PageAllocator(n_total)
@@ -798,6 +897,7 @@ class DecodeEngine(_PagedPoolMixin):
                          hidden=hid)
 
     def sched_insert(self, state, b, row, *, prompt_len=None, n_tokens=None):
+        self._touch_bank()
         if self.paged:
             pages = self._sched_pages(b, prompt_len, n_tokens)
             return self._insert_paged(state, jnp.asarray(b, jnp.int32), row,
@@ -811,6 +911,7 @@ class DecodeEngine(_PagedPoolMixin):
         overrides the page reservation's prompt length — chunked prefill
         admits only the FIRST piece here but must reserve for the whole
         prompt."""
+        self._touch_bank()
         if self.paged:
             plen = reserve_len if reserve_len is not None \
                 else _prompt_len(batch)
@@ -821,6 +922,7 @@ class DecodeEngine(_PagedPoolMixin):
                            jnp.asarray(b, jnp.int32), batch)
 
     def sched_reset(self, state, b):
+        self._touch_bank()
         mask = np.zeros((int(state.cur_token.shape[0]),), bool)
         mask[b] = True
         return self._reset(state, mask)
@@ -829,8 +931,8 @@ class DecodeEngine(_PagedPoolMixin):
         # eos arrives as a Python int from the scheduler but as an int32
         # array from generate(); coerce so both paths key the SAME
         # compile-cache entry of the chunk fn (R7 retrace audit)
-        state, done, rem, toks, ns = self._chunk_fn(K)(
-            self.params, self.heads, self.strategy, state, done, rem,
+        state, done, rem, toks, ns = self._run_chunk(
+            K, self.strategy, state, done, rem,
             jnp.asarray(eos_val, jnp.int32))
         return state, done, rem, (toks, ns)
 
@@ -875,12 +977,12 @@ class SpeculativeEngine(DecodeEngine):
 
     def __init__(self, model, heads, params, tree_spec: TreeSpec, *,
                  max_len=512, window=0, backend="ref", chunk=8, paged=False,
-                 page_size=16, pool_pages=None):
+                 page_size=16, pool_pages=None, hcmp="inline"):
         super().__init__(model, params, heads=heads,
                          strategy=DecodeStrategy.medusa(tree_spec),
                          max_len=max_len, window=window, backend=backend,
                          chunk=chunk, paged=paged, page_size=page_size,
-                         pool_pages=pool_pages)
+                         pool_pages=pool_pages, hcmp=hcmp)
 
 
 def _stats(accepts, times):

@@ -47,6 +47,7 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import time
+import zlib
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -133,12 +134,16 @@ class ReplicaRouter:
         return min(preferred,
                    key=lambda r: (r.load, self.replicas.index(r)))
 
-    def _backoff(self, req_id: int, attempt: int) -> float:
+    def _backoff(self, req_id, attempt: int) -> float:
         delay = min(self.backoff_cap,
                     self.backoff_base * (2.0 ** (attempt - 1)))
         # deterministic per (seed, request, attempt): jitter decorrelates
-        # retry bursts without making chaos runs unreplayable
-        rng = np.random.default_rng([self.seed, int(req_id), attempt])
+        # retry bursts without making chaos runs unreplayable.  Request
+        # ids are application-chosen and not necessarily integers, so
+        # seed from a stable digest of the id's string form (crc32 is
+        # stable across processes, unlike hash())
+        rid = zlib.crc32(str(req_id).encode("utf-8"))
+        rng = np.random.default_rng([self.seed, rid, attempt])
         return delay * (1.0 + self.jitter * float(rng.random()))
 
     # ---- request plane ---------------------------------------------------

@@ -999,6 +999,14 @@ class ContinuousScheduler:
                     for n, f, t in self.adaptive.switches],
                 width_final=self.engine.strategy.width,
                 al_observed=self.adaptive.al_obs)
+        # HCMP boundary accounting: when the engine ran the disaggregated
+        # overlap schedule, surface its executor placement and how many
+        # chunk boundaries reused vs discarded the cross-chunk pre-draft
+        # (a quiet boundary keeps it; any admission/reset/switch bumps
+        # the bank epoch and forces a redraft)
+        hcmp = getattr(self.engine, "hcmp_stats", None)
+        if hcmp is not None:
+            stats["hcmp"] = hcmp
         return ordered, stats
 
     def serve(self, requests: Sequence[Request], *, eos: Optional[int] = None

@@ -1,0 +1,227 @@
+"""HCMP runtime executor split (core/hcmp/executors.py + the
+DecodeEngine routing in runtime/engine.py).
+
+Invariants:
+  * the overlapped draft/verify schedule is BIT-IDENTICAL to the fused
+    inline chunk scan — same emitted tokens, same per-row counts — on
+    every engine config (dense/paged x ref/pallas), because greedy tree
+    verification commits the greedy chain whatever was drafted;
+  * runtime strategy switches under the adaptive scheduler stay
+    output-neutral with the overlap engine, and the scheduler surfaces
+    the runner's stats (``stats["hcmp"]``) for boundary accounting;
+  * the cross-chunk pre-draft is reused over quiet chunk boundaries
+    (hits) and DISCARDED whenever the bank epoch moved underneath it —
+    a new stream, an admission, an abort sweep (mis-speculated overlap
+    is redrafted, never committed);
+  * a mid-flight ``abort()`` at a chunk boundary on a paged overlap
+    engine leaks no pages and leaves the survivors' outputs untouched;
+  * ``arca.profile_engine`` times BOTH partitions on an overlap-capable
+    engine and ``choose_strategy`` stamps the measured winner on the
+    ``Strategy`` (``time_step(..., hcmp=...)`` always restores the
+    engine's mode).
+
+Single-device note: tests run on one host CPU device, where the runner
+degrades to a serial schedule over the same three executor jits — the
+parity, pre-draft and abort semantics are device-count independent
+(the two-device path is exercised by the serve launcher's CI smoke,
+``--hcmp overlap``).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import arca
+from repro.core.hcmp.executors import executor_pair
+from repro.core.speculative import tree as T
+from repro.core.speculative.medusa import init_medusa
+from repro.models.api import get_model
+from repro.runtime.engine import BatchEngine, SpeculativeEngine
+from repro.runtime.scheduler import (CANCELLED, DONE, AdaptiveSpeculation,
+                                     ContinuousScheduler, Request)
+
+_CTX = None
+
+
+def _setup():
+    global _CTX
+    if _CTX is None:
+        cfg = get_config("qwen2-0.5b").reduced()
+        model = get_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        heads = init_medusa(cfg, jax.random.PRNGKey(7))
+        accs = T.default_accs(cfg.medusa_heads, cfg.medusa_top_k)
+        _CTX = (cfg, model, params, heads, accs)
+    return _CTX
+
+
+def _requests(cfg, n, budgets, prompt_len=8, seed=3):
+    toks = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n, prompt_len), 0, cfg.vocab_size),
+        np.int32)
+    return [Request(req_id=i, tokens=toks[i],
+                    n_tokens=budgets[i % len(budgets)]) for i in range(n)]
+
+
+# --------------------------------------------------------------------------
+# overlap == inline, bit for bit
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("paged", [False, True])
+def test_overlap_generate_matches_inline(paged, backend):
+    """Disaggregated draft/verify emits the exact token stream of the
+    fused chunk scan, dense and paged, on both attention backends."""
+    cfg, model, params, heads, accs = _setup()
+    spec = T.build_tree(accs, 4)
+    kw = dict(max_len=64, chunk=4, backend=backend)
+    if paged:
+        kw.update(paged=True, page_size=8)
+    toks = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(5), (2, 8), 0, cfg.vocab_size), np.int32)
+    inline = SpeculativeEngine(model, heads, params, spec, **kw)
+    overlap = SpeculativeEngine(model, heads, params, spec,
+                                hcmp="overlap", **kw)
+    out_i, st_i = inline.generate({"tokens": toks}, 12)
+    out_o, st_o = overlap.generate({"tokens": toks}, 12)
+    np.testing.assert_array_equal(out_i, out_o)
+    np.testing.assert_array_equal(st_i["n_emitted"], st_o["n_emitted"])
+    hs = overlap.hcmp_stats
+    assert hs["mode"] == "overlap"
+    assert hs["chunks"] >= 1 and hs["steps"] >= hs["chunks"]
+    assert inline.hcmp_stats is None          # runner never built
+
+
+def test_overlap_adaptive_switches_match_inline():
+    """Mid-stream strategy switches on an overlap engine stay
+    output-neutral, the scheduler surfaces the runner stats, and the
+    admissions/evictions of the stream force pre-draft discards (the
+    mis-speculated overlap is dropped, not committed)."""
+    cfg, model, params, heads, accs = _setup()
+    specs = {2: T.build_tree(accs, 2), 8: T.build_tree(accs, 8)}
+    max_len = 96 + max(s.max_depth for s in specs.values())
+    eng = SpeculativeEngine(model, heads, params, specs[8], max_len=max_len,
+                            chunk=4, paged=True, page_size=8,
+                            hcmp="overlap")
+    strategies = arca.choose_strategy(
+        cfg, accs, ctx=8, widths=(2, 8),
+        time_fn=lambda c, w, ctx, s: 1e-3 * w)
+    sched = ContinuousScheduler(
+        eng, batch=2,
+        adaptive=AdaptiveSpeculation(strategies, min_steps=4,
+                                     switch_every=1))
+    reqs = _requests(cfg, 5, budgets=[16, 9])
+    results, stats = sched.serve(reqs)
+    assert stats["strategy_switches"], "no switch happened — dead test"
+    assert stats["hcmp"]["mode"] == "overlap"
+    assert stats["hcmp"]["predraft_discards"] >= 1
+    solo = SpeculativeEngine(model, heads, params, specs[8],
+                             max_len=max_len, chunk=4)
+    for r, req in zip(results, reqs):
+        out, _ = solo.generate({"tokens": req.tokens[None]}, req.n_tokens)
+        np.testing.assert_array_equal(
+            r.tokens, np.atleast_2d(out)[0][:req.n_tokens],
+            err_msg=f"req {r.req_id} diverged under overlap+adaptive")
+
+
+# --------------------------------------------------------------------------
+# pre-draft lifecycle
+# --------------------------------------------------------------------------
+def test_predraft_reuse_and_invalidation():
+    """Quiet chunk boundaries inside one stream REUSE the dangling
+    pre-draft; a new stream (bank epoch bump) DISCARDS it."""
+    cfg, model, params, heads, accs = _setup()
+    eng = SpeculativeEngine(model, heads, params, T.build_tree(accs, 4),
+                            max_len=96, chunk=2, hcmp="overlap")
+    toks = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(9), (1, 8), 0, cfg.vocab_size), np.int32)
+    eng.generate({"tokens": toks}, 24)           # several 2-step chunks
+    hs1 = dict(eng.hcmp_stats)
+    assert hs1["predraft_hits"] >= 1
+    assert hs1["predraft_discards"] == 0         # nothing moved the bank
+    eng.generate({"tokens": toks}, 24)           # fresh stream: stale slot
+    hs2 = eng.hcmp_stats
+    assert hs2["predraft_discards"] == hs1["predraft_discards"] + 1
+    assert hs2["predraft_hits"] > hs1["predraft_hits"]
+
+
+def test_overlap_abort_midflight_conserves_pages():
+    """abort() lands at a chunk boundary while a pre-draft is dangling:
+    the sweep releases every page, the stale pre-draft is discarded, and
+    the surviving requests' outputs are untouched."""
+    cfg, model, params, heads, accs = _setup()
+    spec = T.build_tree(accs, 4)
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=64,
+                            chunk=2, paged=True, page_size=8,
+                            hcmp="overlap")
+    reqs = _requests(cfg, 3, budgets=[20, 8, 8])
+    sched = ContinuousScheduler(eng, batch=2, chunk=2)
+    sched.start(reqs)
+    i = 0
+    while sched.has_work:
+        i += 1
+        assert i < 200, "abort trace did not converge"
+        if i == 2:
+            sched.abort(0)                       # mid-decode of req 0
+        sched.boundary()
+    results, stats = sched.finish(reqs)
+    assert results[0].state == CANCELLED
+    assert eng.sched_pool_conserved() and eng.sched_drained()
+    assert eng._alloc.available == eng._alloc.n_pages
+    assert eng.hcmp_stats["predraft_discards"] >= 1
+    solo = SpeculativeEngine(model, heads, params, spec, max_len=64,
+                             chunk=2)
+    for r, req in zip(results[1:], reqs[1:]):
+        assert r.state == DONE
+        out, _ = solo.generate({"tokens": req.tokens[None]}, req.n_tokens)
+        np.testing.assert_array_equal(
+            r.tokens, np.atleast_2d(out)[0][:req.n_tokens],
+            err_msg=f"survivor {r.req_id} diverged after abort")
+
+
+# --------------------------------------------------------------------------
+# ARCA partition profiling + engine guards
+# --------------------------------------------------------------------------
+def test_profile_engine_times_both_partitions():
+    """An overlap-capable engine is profiled under BOTH partitions; the
+    measured winner lands on ``Strategy.hcmp`` via choose_strategy, and
+    time_step's hcmp override always restores the engine's mode."""
+    cfg, model, params, heads, accs = _setup()
+    spec = T.candidate_spec(accs, 2)
+    eng = SpeculativeEngine(model, heads, params, T.build_tree(accs, 2),
+                            max_len=64, chunk=2, hcmp="overlap")
+    tf = arca.profile_engine(eng, (2,), accs=accs, batch=1, prompt_len=8,
+                             reps=1)
+    assert tf.hcmp_modes == ("inline", "overlap")
+    assert eng.hcmp == "overlap"                 # override restored
+    key = (spec.width, spec.max_depth, spec.n_paths, 1)
+    assert key + ("inline",) in tf.times
+    assert key + ("overlap",) in tf.times
+    part = tf.partition_for(spec)
+    assert part == min(("inline", "overlap"),
+                       key=lambda m: tf.times[key + (m,)])
+    strategies = arca.choose_strategy(cfg, accs, ctx=8, widths=(2,),
+                                      time_fn=tf)
+    assert strategies[2].hcmp == part
+    # synthetic (unmeasured) time sources keep the inline default
+    synth = arca.choose_strategy(cfg, accs, ctx=8, widths=(2,),
+                                 time_fn=lambda c, w, ctx, s: 1e-3)
+    assert synth[2].hcmp == "inline"
+
+
+def test_overlap_guards():
+    """No draft source -> no overlap; bogus modes rejected; profiling
+    the overlap partition on a sequential engine is a typed error."""
+    cfg, model, params, heads, accs = _setup()
+    seq = BatchEngine(model, params, max_len=32)
+    assert not seq.hcmp_capable
+    with pytest.raises(ValueError):
+        seq.set_hcmp("overlap")
+    with pytest.raises(ValueError):
+        arca.profile_engine(seq, hcmp_modes=("overlap",))
+    eng = SpeculativeEngine(model, heads, params, T.build_tree(accs, 2),
+                            max_len=32)
+    with pytest.raises(ValueError):
+        eng.set_hcmp("fused")
+    # single-device fallback: the pair degenerates to one device
+    v, d = executor_pair()
+    assert v in jax.devices() and d in jax.devices()

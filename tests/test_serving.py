@@ -341,6 +341,59 @@ def test_router_no_healthy_replica_rejects():
     assert res.state == REJECTED and not healthy and conserved
 
 
+def test_backoff_accepts_string_request_ids():
+    """Regression: ``_backoff`` seeded ``np.random.default_rng`` with the
+    raw ``req_id`` — any application-chosen non-int id (uuid-style
+    strings) crashed the retry path at the first backoff.  Ids now seed
+    through a stable digest of ``str(req_id)``: deterministic per
+    (seed, id, attempt), identical for ``7`` and ``"7"``, and accepting
+    any stringifiable id."""
+    class _Stub:
+        name = "r0"
+    router = ReplicaRouter([_Stub()], seed=3)
+    d = router._backoff("req-00c4-uuid", 1)
+    assert 0.0 < d <= router.backoff_cap * (1.0 + router.jitter)
+    assert d == router._backoff("req-00c4-uuid", 1)       # deterministic
+    assert router._backoff(7, 2) == router._backoff("7", 2)
+    # attempt growth still caps at backoff_cap regardless of id type
+    assert router._backoff("x", 9) <= \
+        router.backoff_cap * (1.0 + router.jitter)
+
+
+def test_router_retry_with_string_request_id():
+    """End-to-end regression for the backoff fix: a crash-forced retry of
+    a request with a STRING id must reach DONE through the backoff path
+    (previously a TypeError inside ``_backoff``) and never double-emit."""
+    cfg, ea = _engine("rs_a")
+    _, eb = _engine("rs_b")
+    base = _requests(cfg, 1, budget=16)[0]
+    req = Request(req_id="job/alpha-7", tokens=base.tokens,
+                  n_tokens=base.n_tokens)
+    plan = FaultPlan(seed=5, crash={"rs_a": 2})
+
+    async def go():
+        servers = [
+            AsyncEngineServer(ContinuousScheduler(
+                ea, batch=2, faults=plan.injector("rs_a")), name="rs_a"),
+            AsyncEngineServer(ContinuousScheduler(eb, batch=2),
+                              name="rs_b"),
+        ]
+        router = ReplicaRouter(servers, max_retries=2, backoff_base=0.01,
+                               seed=5)
+        await router.start()
+        delivered, res = await router.generate(req)
+        conserved = router.pages_conserved() and router.drained()
+        await router.stop()
+        return delivered, res, conserved, router.retries
+
+    delivered, res, conserved, retries = asyncio.run(go())
+    assert res.state == DONE and retries >= 1
+    assert res.req_id == "job/alpha-7"
+    np.testing.assert_array_equal(delivered, _solo(ea, base)[:16])
+    np.testing.assert_array_equal(res.tokens, delivered)
+    assert conserved
+
+
 def test_router_liveness_probe_drains_stalled_replica():
     """Replica rs is alive but WEDGED (every boundary stalls far longer
     than ``stall_timeout_s``): its boundary-progress heartbeat goes
