@@ -93,9 +93,37 @@ def render_markdown(rows) -> str:
     return "".join(out)
 
 
+def int8_kv_note(arch="qwen2-0.5b", page_size=16) -> dict:
+    """Structural bytes-reduction note for the decode roofline: an edge
+    decode step is memory-bound on the KV-cache read (paper §II, and the
+    ``bound`` column above for the decode shapes), so quantized int8 pages
+    — which move ~4x fewer pool bytes per attended token, per-page scale
+    overhead included (runtime/cache.py ``page_bytes``) — shift the decode
+    memory term by the same factor.  No dry-run artifact is needed: the
+    term is per-token cache traffic, a pure shape computation.
+    """
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.runtime.cache import kv_bytes_per_token
+    cfg = get_config(arch)
+    b32 = kv_bytes_per_token(cfg.num_layers, cfg.num_kv_heads,
+                             cfg.head_dim, jnp.float32, page_size)
+    b8 = kv_bytes_per_token(cfg.num_layers, cfg.num_kv_heads,
+                            cfg.head_dim, jnp.int8, page_size)
+    return {"arch": arch, "page_size": page_size,
+            "kv_bytes_per_token_fp32": b32, "kv_bytes_per_token_int8": b8,
+            "reduction": b32 / b8}
+
+
 def main():
     rows = table()
     print(render_markdown(rows))
+    n = int8_kv_note()
+    print(f"\nint8 KV pages ({n['arch']}, ps={n['page_size']}): "
+          f"{n['kv_bytes_per_token_fp32']:.0f} -> "
+          f"{n['kv_bytes_per_token_int8']:.0f} cache bytes/token "
+          f"({n['reduction']:.2f}x less decode KV traffic)")
 
 
 if __name__ == "__main__":

@@ -57,6 +57,9 @@ def main() -> None:
             ok = [r for r in tb if r.get("status") == "ok"]
             rows.append(("roofline_cases_ok", float(len(ok)),
                          f"of {len(tb)}"))
+        kvn = roofline.int8_kv_note()
+        rows.append(("roofline_int8_kv_bytes_reduction", kvn["reduction"],
+                     f"{kvn['arch']} ps={kvn['page_size']}"))
     except Exception as e:  # dry-run artifacts may not exist yet
         print(f"## Roofline skipped: {e}")
 

@@ -115,18 +115,41 @@ def _dense_cfg(B, W, Hq, Hkv, hd, S, block_s) -> Config:
 
 
 def _paged_cfg(B, W, Hq, Hkv, hd, ps, P, tables) -> Config:
+    # operand order mirrors the wrapper: q, pool_k, pool_v, scale_k,
+    # scale_v, k_new, v_new, key_pos, q_pos, lo, tree_mask.  The (P, Hkv)
+    # dequant scales walk the SAME table-driven index map as the pools, so
+    # they join the page-domain check (a scale fetched from another
+    # sequence's page would dequantize with the wrong amax).
     G = Hq // Hkv
     maxp = len(tables[0])
     env = dict(B=B, W=W, Hq=Hq, Hkv=Hkv, hd=hd, G=G, P=P, ps=ps,
                maxp=maxp)
     ops = [(B, Hkv, G * W, hd), (P, ps, Hkv, hd), (P, ps, Hkv, hd),
+           (P, Hkv), (P, Hkv),
            (B, W, Hkv, hd), (B, W, Hkv, hd), (B, maxp * ps), (B, W),
            (B, W), (W, W)]
     reserved = [sum(1 for v in row if v >= 0) for row in tables]
     return Config(
         desc=f"paged B={B} W={W} Hq={Hq} Hkv={Hkv} hd={hd} ps={ps} "
              f"pages={P} maxp={maxp} reserved={reserved}",
-        env=env, operands=ops, table=tables, pool_operands=(1, 2))
+        env=env, operands=ops, table=tables, pool_operands=(1, 2, 3, 4))
+
+
+def _paged_cache_cfg(B, W, Hq, Hkv, hd, ps, P, tables) -> Config:
+    """``paged_cache_attention`` (split verify path): the paged walk minus
+    the tree operands — q, pool_k, pool_v, scale_k, scale_v, key_pos,
+    q_pos, lo — with a (B, Hkv, maxp) grid (no trailing tree block)."""
+    G = Hq // Hkv
+    maxp = len(tables[0])
+    env = dict(B=B, W=W, Hq=Hq, Hkv=Hkv, hd=hd, G=G, P=P, ps=ps,
+               maxp=maxp)
+    ops = [(B, Hkv, G * W, hd), (P, ps, Hkv, hd), (P, ps, Hkv, hd),
+           (P, Hkv), (P, Hkv), (B, maxp * ps), (B, W), (B, W)]
+    reserved = [sum(1 for v in row if v >= 0) for row in tables]
+    return Config(
+        desc=f"paged-cache B={B} W={W} Hq={Hq} Hkv={Hkv} hd={hd} ps={ps} "
+             f"pages={P} maxp={maxp} reserved={reserved}",
+        env=env, operands=ops, table=tables, pool_operands=(1, 2, 3, 4))
 
 
 def _sparse_cfg(B, W, Hq, Hkv, hd) -> Config:
@@ -155,7 +178,23 @@ CONFIGS: Dict[str, List[Config]] = {
                     [-1] * 6]),                          # full/partial/0
         _paged_cfg(2, 8, 8, 8, 8, 16, 4, [[0], [2]]),    # maxp=1 edge
     ],
+    "paged_cache_attention": [
+        _paged_cache_cfg(2, 4, 4, 2, 8, 8, 6,
+                         [[0, 1, 2, -1], [3, -1, -1, -1]]),
+        _paged_cache_cfg(1, 2, 2, 1, 4, 16, 3, [[-1, -1]]),
+        _paged_cache_cfg(3, 4, 8, 4, 16, 8, 9,
+                         [[0, 1, 2, 3, 4, 5], [6, 7, -1, -1, -1, -1],
+                          [-1] * 6]),
+        _paged_cache_cfg(2, 8, 8, 8, 8, 16, 4, [[0], [2]]),
+    ],
     "sparse_tree_attention": [
+        _sparse_cfg(2, 4, 4, 2, 8),
+        _sparse_cfg(1, 2, 2, 2, 4),
+        _sparse_cfg(3, 8, 8, 4, 16),
+    ],
+    # the W x W tree half of the split verify path: same operands as
+    # sparse_tree_attention, packed-(hd + 2) partials output
+    "sparse_tree_attention_partial": [
         _sparse_cfg(2, 4, 4, 2, 8),
         _sparse_cfg(1, 2, 2, 2, 4),
         _sparse_cfg(3, 8, 8, 4, 16),

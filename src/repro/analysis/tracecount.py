@@ -165,6 +165,19 @@ def run_smoke() -> Dict[str, int]:
             rng.integers(0, cfg.vocab_size, size=(2, 4)), np.int32)
         dense.generate({"tokens": prompts}, 3)
         eng.generate({"tokens": prompts}, 3)
+        # quantized int8 pool: same slot protocol, quantize-on-write +
+        # fused-dequant page walk — its admission/step/reset jits must
+        # compile once each, like the fp32 paged stream above
+        eng8 = BatchEngine(model, params, max_len=64, chunk=2, paged=True,
+                           page_size=4, pool_pages=5, kv_dtype="int8")
+        sched8 = ContinuousScheduler(eng8, batch=2, chunk=2)
+        sched8.start([], eos=None)
+        sched8.submit(req(5, 3, 2))
+        sched8.submit(req(6, 2, 2))
+        for _ in range(4):
+            sched8.boundary()
+        sched8.finish()
+        eng8.generate({"tokens": prompts}, 3)
         # hcmp overlap: the disaggregated draft/verify schedule — each
         # executor jit must compile exactly once (single-device fallback
         # traces the same three functions, so this segment is stable no

@@ -241,6 +241,11 @@ class Strategy:
                                  # "overlap" (disaggregated draft/verify,
                                  # core/hcmp/executors.py) — set from
                                  # profile_engine's dual-mode timings
+    tree_kernel: str = "dense"   # measured paged verify kernel for this
+                                 # width: "dense" (fused page walk + tree
+                                 # block) or "sparse" (split page walk +
+                                 # block-masked tree kernel) — set from
+                                 # profile_engine's per-kernel timings
 
 
 def choose_strategy(cfg, accs: np.ndarray, ctx: int = 256,
@@ -257,20 +262,25 @@ def choose_strategy(cfg, accs: np.ndarray, ctx: int = 256,
         al = T.expected_acceptance_length(spec, accs)
         ratio = contention_aware_ratio(soc, cfg, w, ctx)
         hcmp = "inline"
+        tkern = "dense"
         if time_fn is not None:
             t = time_fn(cfg, w, ctx, spec)
             # a measured time_fn from profile_engine also knows which
-            # executor partition its best time came from: the partition
-            # is chosen exactly the way the speculative strategy is
+            # executor partition / verify kernel its best time came from:
+            # both are chosen exactly the way the speculative strategy is
             part = getattr(time_fn, "partition_for", None)
             if part is not None:
                 hcmp = part(spec)
+            kern = getattr(time_fn, "kernel_for", None)
+            if kern is not None:
+                tkern = kern(spec)
         elif w == 1:
             t = step_time_sequential(soc, cfg, ctx)
         else:
             t = step_time_ghidorah(soc, cfg, w, ctx, spec, ratio)
         out[w] = Strategy(width=w, tree=spec, ratio=ratio, acceptance=al,
-                          step_time=t, throughput=al / t, hcmp=hcmp)
+                          step_time=t, throughput=al / t, hcmp=hcmp,
+                          tree_kernel=tkern)
     return out
 
 
@@ -281,7 +291,8 @@ def best(strategies: Dict[int, Strategy]) -> Strategy:
 def profile_engine(engine, widths: Optional[Sequence[int]] = None, *,
                    accs: Optional[np.ndarray] = None, batch: int = 1,
                    prompt_len: int = 16, reps: int = 3,
-                   hcmp_modes: Optional[Sequence[str]] = None) -> Callable:
+                   hcmp_modes: Optional[Sequence[str]] = None,
+                   tree_kernels: Optional[Sequence[str]] = None) -> Callable:
     """Measured time source for ``choose_strategy``: returns a
     ``time_fn(cfg, width, ctx, spec)`` that times the engine's COMPILED
     step for the given tree through ``DecodeEngine.time_step`` (one
@@ -303,6 +314,15 @@ def profile_engine(engine, widths: Optional[Sequence[int]] = None, *,
     ``Strategy`` so the partition is chosen the same way the speculative
     strategy is.
 
+    ``tree_kernels`` names the paged verify kernels to time per candidate
+    and partition ("dense" / "sparse", see ``DecodeEngine.time_step``).
+    Default: both when the engine already runs the split kernel, else
+    dense only.  ``time_fn.times[skey + (mode,)]`` stays each
+    partition's BEST kernel time (the key existing consumers read);
+    per-kernel times land at ``skey + (mode, kernel)`` and
+    ``time_fn.kernel_for(spec)`` names the overall winner, which
+    ``choose_strategy`` stamps on the ``Strategy``.
+
     ``widths`` pre-measures those candidates up front (trees built from
     ``accs``, default: the engine model's calibration table shape), which
     also pre-compiles each width's chunk scan — the serve launcher calls
@@ -318,8 +338,18 @@ def profile_engine(engine, widths: Optional[Sequence[int]] = None, *,
         if m == "overlap" and not getattr(engine, "hcmp_capable", False):
             raise ValueError("cannot profile the overlap partition: the "
                              "engine has no draft source to disaggregate")
+    if tree_kernels is None:
+        tree_kernels = ("dense", "sparse") \
+            if getattr(engine, "tree_kernel", "dense") == "sparse" \
+            else ("dense",)
+    tree_kernels = tuple(tree_kernels)
+    for tk in tree_kernels:
+        if tk == "sparse" and not getattr(engine, "paged", False):
+            raise ValueError("cannot profile the sparse tree kernel: the "
+                             "split verify path is paged-only")
     times: Dict[tuple, float] = {}
     partition: Dict[tuple, str] = {}
+    kernel: Dict[tuple, str] = {}
 
     def _measure(spec) -> tuple:
         skey = (spec.width, spec.max_depth, spec.n_paths, batch)
@@ -327,11 +357,18 @@ def profile_engine(engine, widths: Optional[Sequence[int]] = None, *,
             strategy = engine.strategy_for(spec)
             per = {}
             for mode in hcmp_modes:
-                per[mode] = engine.time_step(strategy, batch=batch,
-                                             prompt_len=prompt_len,
-                                             reps=reps, hcmp=mode)
-                times[skey + (mode,)] = per[mode]
-            partition[skey] = min(per, key=per.get)
+                for tk in tree_kernels:
+                    per[(mode, tk)] = engine.time_step(
+                        strategy, batch=batch, prompt_len=prompt_len,
+                        reps=reps, hcmp=mode, tree_kernel=tk)
+                    if len(tree_kernels) > 1:
+                        times[skey + (mode, tk)] = per[(mode, tk)]
+                # the (mode,) key existing consumers read: the
+                # partition's best kernel time
+                times[skey + (mode,)] = min(
+                    per[(mode, tk)] for tk in tree_kernels)
+            mode, tk = min(per, key=per.get)
+            partition[skey], kernel[skey] = mode, tk
         return skey
 
     def time_fn(cfg, width, ctx, spec) -> float:
@@ -341,9 +378,14 @@ def profile_engine(engine, widths: Optional[Sequence[int]] = None, *,
     def partition_for(spec) -> str:
         return partition[_measure(spec)]
 
+    def kernel_for(spec) -> str:
+        return kernel[_measure(spec)]
+
     time_fn.partition_for = partition_for
+    time_fn.kernel_for = kernel_for
     time_fn.batch = batch
     time_fn.hcmp_modes = hcmp_modes
+    time_fn.tree_kernels = tree_kernels
     time_fn.times = times
 
     if widths:

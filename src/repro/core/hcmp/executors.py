@@ -96,7 +96,8 @@ class HcmpOverlapRunner:
     concurrently with the commit.  The final iteration's draft becomes
     the next chunk's pre-draft."""
 
-    def __init__(self, model, heads, *, backend: str = "ref"):
+    def __init__(self, model, heads, *, backend: str = "ref",
+                 tree_kernel: str = "dense"):
         self.verify_dev, self.draft_dev = executor_pair()
         # DraftExecutor owns its heads copy: placed once, read-only
         self.heads = jax.device_put(heads, self.draft_dev)
@@ -117,7 +118,8 @@ class HcmpOverlapRunner:
             active = ~done
             tree = strat.tree
             logits, extras = model.verify(p, cache, tree_tokens, tree,
-                                          backend=backend)
+                                          backend=backend,
+                                          tree_kernel=tree_kernel)
             acc = accept_walk(tree, tree_tokens, logits)
             n_accept = jnp.where(active, acc["n_accept"], 0)
             path_idx = tree.node_path[acc["last_node"]]

@@ -71,7 +71,7 @@ class SpecState:
 
 
 def spec_step(model, params, heads, tree, state: SpecState, *, backend="ref",
-              active=None):
+              tree_kernel="dense", active=None):
     """One Ghidorah speculative decoding step, batched over sequences.
 
     Each sequence accepts its own chain length; the commit is a per-sequence
@@ -90,7 +90,7 @@ def spec_step(model, params, heads, tree, state: SpecState, *, backend="ref",
     cands, _ = draft_candidates(cfg, heads, state.hidden, cfg.medusa_top_k)
     tree_tokens = expand_tree_tokens(tree, state.cur_token, cands)
     logits, extras = model.verify(params, state.cache, tree_tokens, tree,
-                                  backend=backend)
+                                  backend=backend, tree_kernel=tree_kernel)
     acc = accept_walk(tree, tree_tokens, logits)
 
     # batched commit: per-sequence accepted chain / length / path

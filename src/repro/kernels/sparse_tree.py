@@ -33,6 +33,60 @@ def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, scale):
     o_ref[0, 0] = ((p @ v) / l).astype(o_ref.dtype)
 
 
+def _partial_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, scale):
+    """Same masked matmul, emitting UNNORMALIZED online-softmax partials
+    packed into one (G*W, hd + 2) block — o in [:, :hd], running max m at
+    [:, hd], sum l at [:, hd + 1] — so the tree half merges with the paged
+    cache walk (``tree_attention.paged_cache_attention``) via the Eq.-1
+    rule instead of being its own softmax island."""
+    q = q_ref[0, 0].astype(jnp.float32)            # (GW, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (W, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    tm = mask_ref[...]                             # (W, W)
+    GW = q.shape[0]
+    W = tm.shape[0]
+    G = GW // W
+    ok = jnp.broadcast_to(tm[None], (G, W, W)).reshape(GW, W)
+    s = jnp.where(ok, (q @ k.T) * scale, NEG_INF)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), NEG_INF / 2)
+    p = jnp.where(ok, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.concatenate([p @ v, m, l], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparse_tree_attention_partial(q, k_new, v_new, tree_mask, *,
+                                  interpret=True):
+    """q: (B, W, Hq, hd); returns merge partials ``(o (B, W, Hq, hd) f32
+    unnormalized, m (B, Hq, W), l (B, Hq, W))`` in the
+    ``cm.merge_partials`` layout (the W×W tree half of the split verify
+    path)."""
+    B, W, Hq, hd = q.shape
+    Hkv = k_new.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, W, Hkv, G, hd).transpose(0, 2, 3, 1, 4).reshape(
+        B, Hkv, G * W, hd)
+    packed = pl.pallas_call(
+        functools.partial(_partial_kernel, scale=hd ** -0.5),
+        grid=(B, Hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G * W, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, W, 1, hd), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, W, 1, hd), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((W, W), lambda b, h: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G * W, hd + 2),
+                               lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G * W, hd + 2), jnp.float32),
+        interpret=interpret,
+    )(qg, k_new, v_new, tree_mask)
+    pk = packed.reshape(B, Hkv, G, W, hd + 2)
+    o = pk[..., :hd].transpose(0, 3, 1, 2, 4).reshape(B, W, Hq, hd)
+    m = pk[..., hd].reshape(B, Hkv * G, W)
+    l = pk[..., hd + 1].reshape(B, Hkv * G, W)
+    return o, m, l
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def sparse_tree_attention(q, k_new, v_new, tree_mask, *, interpret=True):
     """q: (B, W, Hq, hd); returns (B, W, Hq, hd) — sparse part only."""

@@ -37,7 +37,8 @@ DEFAULT_BLOCK_S = 512
 
 
 def _kernel(q_ref, ck_ref, cv_ref, kn_ref, vn_ref, kpos_ref, qpos_ref,
-            lo_ref, mask_ref, o_ref, o_acc, m_acc, l_acc, *, nblocks, scale):
+            lo_ref, mask_ref, o_ref, o_acc, m_acc, l_acc, *, nblocks, scale,
+            sk_ref=None, sv_ref=None):
     i = pl.program_id(2)
 
     @pl.when(i == 0)
@@ -66,6 +67,12 @@ def _kernel(q_ref, ck_ref, cv_ref, kn_ref, vn_ref, kpos_ref, qpos_ref,
     def _cache_block():
         k = ck_ref[0, :, 0].astype(jnp.float32)    # (BS, hd)
         v = cv_ref[0, :, 0].astype(jnp.float32)
+        if sk_ref is not None:
+            # fused dequant: this page's per-(layer, head) scale arrived on
+            # the same scalar-prefetch walk as the page index (1.0 for
+            # float pools, so the multiply is exact there)
+            k = k * sk_ref[0, 0]
+            v = v * sv_ref[0, 0]
         kpos = kpos_ref[0]                         # (BS,) this sequence's row
         qpos = qpos_ref[0]                         # (W,)
         lo = lo_ref[0]
@@ -144,16 +151,20 @@ def tree_attention(q, ck, cv, k_new, v_new, key_pos, q_pos, lo, tree_mask,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_tree_attention(q, pool_k, pool_v, k_new, v_new, block_table,
-                         key_pos, q_pos, lo, tree_mask, *, interpret=True):
+def paged_tree_attention(q, pool_k, pool_v, scale_k, scale_v, k_new, v_new,
+                         block_table, key_pos, q_pos, lo, tree_mask, *,
+                         interpret=True):
     """Paged tree-verification attention: the KV-block grid axis walks a
     sequence's block table instead of a dense row.
 
     q: (B, W, Hq, hd); pool_k/pool_v: (n_pages + 1, ps, Hkv, hd) one
-    layer's shared pool, trash page last; block_table: (B, max_pages) int32
-    (-1 = unreserved); key_pos: (B, max_pages * ps); q_pos/lo: (B, W).
+    layer's shared pool, trash page last; scale_k/scale_v: (n_pages + 1,
+    Hkv) per-page dequant scales — all-ones for float pools, so the fused
+    multiply is exact there; block_table: (B, max_pages) int32 (-1 =
+    unreserved); key_pos: (B, max_pages * ps); q_pos/lo: (B, W).
     One KV "block" is one page (block_s == page_size): grid step i of row b
-    fetches physical page ``table[b, i]`` via scalar prefetch.
+    fetches physical page ``table[b, i]`` via scalar prefetch, and the
+    page's (1, 1) scale block rides the same table-driven index map.
     """
     B, W, Hq, hd = q.shape
     P, ps, Hkv = pool_k.shape[0], pool_k.shape[1], pool_k.shape[2]
@@ -177,6 +188,12 @@ def paged_tree_attention(q, pool_k, pool_v, k_new, v_new, block_table,
             pl.BlockSpec((1, ps, 1, hd),
                          lambda b, h, i, t, _n=maxp:
                          (t[b, jnp.minimum(i, _n - 1)], 0, h, 0)),
+            pl.BlockSpec((1, 1),
+                         lambda b, h, i, t, _n=maxp:
+                         (t[b, jnp.minimum(i, _n - 1)], h)),
+            pl.BlockSpec((1, 1),
+                         lambda b, h, i, t, _n=maxp:
+                         (t[b, jnp.minimum(i, _n - 1)], h)),
             pl.BlockSpec((1, W, 1, hd), lambda b, h, i, t: (b, 0, h, 0)),
             pl.BlockSpec((1, W, 1, hd), lambda b, h, i, t: (b, 0, h, 0)),
             pl.BlockSpec((1, ps),
@@ -195,16 +212,131 @@ def paged_tree_attention(q, pool_k, pool_v, k_new, v_new, block_table,
         ],
     )
 
-    def kernel(tbl_ref, *refs):
+    def kernel(tbl_ref, q_ref, ck_ref, cv_ref, sk_ref, sv_ref, kn_ref,
+               vn_ref, kpos_ref, qpos_ref, lo_ref, mask_ref, o_ref,
+               o_acc, m_acc, l_acc):
         # table only drives the index maps; the body is the dense kernel
-        _kernel(*refs, nblocks=maxp, scale=hd ** -0.5)
+        # with the per-page dequant scales threaded in
+        _kernel(q_ref, ck_ref, cv_ref, kn_ref, vn_ref, kpos_ref, qpos_ref,
+                lo_ref, mask_ref, o_ref, o_acc, m_acc, l_acc,
+                nblocks=maxp, scale=hd ** -0.5,
+                sk_ref=sk_ref, sv_ref=sv_ref)
 
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G * W, hd), q.dtype),
         interpret=interpret,
-    )(tbl, qg, pool_k, pool_v, k_new, v_new, key_pos, q_pos,
+    )(tbl, qg, pool_k, pool_v, scale_k.astype(jnp.float32),
+      scale_v.astype(jnp.float32), k_new, v_new, key_pos, q_pos,
       lo, tree_mask)
     return out.reshape(B, Hkv, G, W, hd).transpose(0, 3, 1, 2, 4).reshape(
         B, W, Hq, hd)
+
+
+def _cache_partial_kernel(q_ref, ck_ref, cv_ref, sk_ref, sv_ref, kpos_ref,
+                          qpos_ref, lo_ref, o_ref, o_acc, m_acc, l_acc, *,
+                          nblocks, scale):
+    """Cache-only half of the verify attention, emitting UNNORMALIZED
+    online-softmax partials packed into one (G*W, hd + 2) block — o in
+    [:, :hd], running max m at [:, hd], sum l at [:, hd + 1].  Packing into
+    a single output keeps the wrapper a one-``pallas_call``/one-BlockSpec
+    shape the R8 bounds extractor can verify; the wrapper unpacks to the
+    ``cm.merge_partials`` layout so the sparse tree half (or a sequence
+    shard) merges with the usual Eq.-1 rule."""
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        o_acc[...] = jnp.zeros_like(o_acc)
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (GW, hd)
+    GW = q.shape[0]
+    W = qpos_ref.shape[1]
+    G = GW // W
+    k = ck_ref[0, :, 0].astype(jnp.float32) * sk_ref[0, 0]
+    v = cv_ref[0, :, 0].astype(jnp.float32) * sv_ref[0, 0]
+    kpos = kpos_ref[0]
+    qpos = qpos_ref[0]
+    lo = lo_ref[0]
+    ok = ((kpos[None, :] >= 0)
+          & (kpos[None, :] <= qpos[:, None])
+          & (kpos[None, :] > lo[:, None]))         # (W, ps)
+    ok = jnp.broadcast_to(ok[None], (G, W, ok.shape[1])).reshape(GW, -1)
+    s = jnp.where(ok, (q @ k.T) * scale, NEG_INF)
+    m_new = jnp.maximum(m_acc[...], jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_acc[...] - m_new)
+    l_acc[...] = l_acc[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    o_acc[...] = o_acc[...] * corr + p @ v
+    m_acc[...] = m_new
+
+    @pl.when(i == nblocks - 1)
+    def _emit():
+        # all-masked rows: clamp m like the oracle's m_safe so partials
+        # compare exactly (l stays 0, so the merge ignores them anyway)
+        m_safe = jnp.maximum(m_acc[...], NEG_INF / 2)
+        o_ref[0, 0] = jnp.concatenate([o_acc[...], m_safe, l_acc[...]],
+                                      axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_cache_attention(q, pool_k, pool_v, scale_k, scale_v, block_table,
+                          key_pos, q_pos, lo, *, interpret=True):
+    """Cache-only paged page walk (the dense half of the verify split when
+    the W×W tree half runs as ``sparse_tree_attention_partial``).
+
+    Same operands as ``paged_tree_attention`` minus the tree ones; the grid
+    is (B, Hkv, max_pages) — no trailing tree block.  Returns merge
+    partials ``(o (B, W, Hq, hd) f32 unnormalized, m (B, Hq, W),
+    l (B, Hq, W))`` in the ``cm.merge_partials`` layout.
+    """
+    B, W, Hq, hd = q.shape
+    P, ps, Hkv = pool_k.shape[0], pool_k.shape[1], pool_k.shape[2]
+    maxp = block_table.shape[1]
+    G = Hq // Hkv
+    tbl = jnp.where(block_table < 0, P - 1, block_table).astype(jnp.int32)
+    qg = q.reshape(B, W, Hkv, G, hd).transpose(0, 2, 3, 1, 4).reshape(
+        B, Hkv, G * W, hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, maxp),
+        in_specs=[
+            pl.BlockSpec((1, 1, G * W, hd), lambda b, h, i, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, i, t: (t[b, i], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, i, t: (t[b, i], 0, h, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, i, t: (t[b, i], h)),
+            pl.BlockSpec((1, 1), lambda b, h, i, t: (t[b, i], h)),
+            pl.BlockSpec((1, ps), lambda b, h, i, t: (b, i)),
+            pl.BlockSpec((1, W), lambda b, h, i, t: (b, 0)),
+            pl.BlockSpec((1, W), lambda b, h, i, t: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G * W, hd + 2),
+                               lambda b, h, i, t: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G * W, hd), jnp.float32),
+            pltpu.VMEM((G * W, 1), jnp.float32),
+            pltpu.VMEM((G * W, 1), jnp.float32),
+        ],
+    )
+
+    def kernel(tbl_ref, *refs):
+        _cache_partial_kernel(*refs, nblocks=maxp, scale=hd ** -0.5)
+
+    packed = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G * W, hd + 2), jnp.float32),
+        interpret=interpret,
+    )(tbl, qg, pool_k, pool_v, scale_k.astype(jnp.float32),
+      scale_v.astype(jnp.float32), key_pos, q_pos, lo)
+    pk = packed.reshape(B, Hkv, G, W, hd + 2)
+    o = pk[..., :hd].transpose(0, 3, 1, 2, 4).reshape(B, W, Hq, hd)
+    m = pk[..., hd].reshape(B, Hkv * G, W)
+    l = pk[..., hd + 1].reshape(B, Hkv * G, W)
+    return o, m, l

@@ -43,7 +43,11 @@ capacity boundary and ``n_emitted`` reports the shortfall.
 prompt+budget needs, so ``--pool-pages`` bounds total KV memory instead of
 ``batch * max_len`` — shrink it below the dense equivalent to serve a
 larger ``--batch`` at fixed memory (the sched_bench paged record measures
-exactly this trade).
+exactly this trade).  ``--kv-dtype int8`` quantizes the pool's pages with
+per-page dequant scales (~3.5x fewer bytes/token — the same pool bytes
+reserve more resident tokens); ``--tree-kernel sparse|auto`` splits the
+paged verify into the quantized page walk + the block-masked tree kernel
+(auto = ARCA measures both and picks per shape).
 
 Fault-tolerant serving (``--replicas N``, ``--deadline-s``,
 ``--cancel-rate``, ``--inject-faults SEED``): the replay runs through the
@@ -281,6 +285,21 @@ def main():
                          "dense max_len row each")
     ap.add_argument("--page-size", type=int, default=16,
                     help="slots per KV page (--paged)")
+    ap.add_argument("--kv-dtype", default="fp32",
+                    choices=["fp32", "bf16", "int8"],
+                    help="paged pool storage dtype (--paged): fp32 keeps "
+                         "the model-dtype float pool; int8 quantizes KV "
+                         "pages with per-page dequant scales "
+                         "(runtime/cache.py) — ~3.5x fewer bytes/token, "
+                         "so the same pool bytes reserve more tokens")
+    ap.add_argument("--tree-kernel", default="dense",
+                    choices=["dense", "sparse", "auto"],
+                    help="paged verify kernel (ghidorah + --paged): dense "
+                         "= fused page walk + tree block; sparse = split "
+                         "quantized page walk + block-masked tree kernel "
+                         "merged by the Eq.-1 rule (forces the pallas "
+                         "backend — the split is kernel-only); auto = "
+                         "ARCA times both per shape and picks the faster")
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="total reservable pages in the shared pool "
                          "(0 = dense-equivalent: batch * pages(max_len)); "
@@ -363,13 +382,25 @@ def main():
     if args.hcmp != "inline" and args.mode != "ghidorah":
         ap.error("--hcmp overlap/auto is a ghidorah option (sequential "
                  "decoding has no draft source to disaggregate)")
+    if args.kv_dtype == "int8" and not args.paged:
+        ap.error("--kv-dtype int8 quantizes the PAGED pool (per-page "
+                 "scales live on the page axis) — add --paged")
+    if args.tree_kernel != "dense":
+        if not args.paged:
+            ap.error("--tree-kernel sparse/auto splits the PAGED verify "
+                     "path — add --paged")
+        if args.mode != "ghidorah":
+            ap.error("--tree-kernel sparse/auto is a ghidorah option "
+                     "(sequential decoding has no verification tree)")
     if _fault_tolerant(args) and (args.arrivals != "poisson"
                                   or args.sched != "continuous"):
         ap.error("--replicas/--deadline-s/--cancel-rate/--inject-faults "
                  "need --arrivals poisson --sched continuous (the async "
                  "plane serves an arrival stream)")
     paged_kw = dict(paged=args.paged, page_size=args.page_size,
-                    pool_pages=args.pool_pages or None)
+                    pool_pages=args.pool_pages or None,
+                    kv_dtype=None if args.kv_dtype == "fp32"
+                    else args.kv_dtype)
     if args.hcmp != "inline":
         # must run BEFORE the first jax computation: the second host
         # device can only be requested while the backend is uninitialized
@@ -418,6 +449,14 @@ def main():
     if args.heads_ckpt:
         heads = checkpoint.restore(args.heads_ckpt, heads)
     accs = T.default_accs(cfg.medusa_heads, cfg.medusa_top_k)
+    if args.tree_kernel != "dense":
+        # the split verify path is kernel-only: pin the pallas backend so
+        # "sparse" (and auto's sparse arm) runs the real split page walk +
+        # block-masked tree kernel, not the fused ref fallback
+        paged_kw["backend"] = "pallas"
+        if args.tree_kernel == "sparse":
+            paged_kw["tree_kernel"] = "sparse"
+        print(f"[serve] tree kernel {args.tree_kernel}: pallas backend")
     auto = args.spec_width == "auto"
     if args.spec_width and not auto:
         args.width = int(args.spec_width)
@@ -439,7 +478,10 @@ def main():
                                 **paged_kw)
         time_fn = arca.profile_engine(eng, widths, accs=accs,
                                       batch=args.batch,
-                                      prompt_len=args.prompt_len)
+                                      prompt_len=args.prompt_len,
+                                      tree_kernels=("dense", "sparse")
+                                      if args.tree_kernel == "auto"
+                                      else None)
         strategies = arca.choose_strategy(cfg, accs, ctx=args.prompt_len,
                                           time_fn=time_fn, widths=widths)
         start = arca.best(strategies)
@@ -447,6 +489,12 @@ def main():
               f"(E[AL]={start.acceptance:.2f}, "
               f"step {start.step_time * 1e3:.2f} ms)")
         eng.set_strategy(start.tree)
+        if args.tree_kernel == "auto":
+            # choose_strategy stamped the measured kernel winner on each
+            # Strategy the same way it stamped the partition
+            print(f"[serve] tree kernel: {start.tree_kernel} "
+                  f"(measured winner for width {start.width})")
+            eng.set_tree_kernel(start.tree_kernel)
         if args.hcmp != "inline":
             # profile_engine timed BOTH partitions (the engine was built
             # overlap-capable), so choose_strategy stamped the measured
@@ -462,6 +510,8 @@ def main():
                                   max_len=max_len, chunk=args.chunk,
                                   **paged_kw)
             e.set_strategy(start.tree)
+            if args.tree_kernel == "auto":
+                e.set_tree_kernel(eng.tree_kernel)
             if args.hcmp != "inline":
                 e.set_hcmp(eng.hcmp)
             return e
@@ -495,22 +545,36 @@ def main():
     max_len = args.prompt_len + args.tokens + spec.max_depth
     eng = SpeculativeEngine(model, heads, params, spec, max_len=max_len,
                             chunk=args.chunk, **paged_kw)
-    if args.hcmp == "auto":
-        # measure the partition for THIS shape on THIS machine: time the
-        # compiled step under both executor layouts at the serving batch
-        # and keep the faster one (same decision path --spec-width auto
-        # takes through choose_strategy's Strategy.hcmp stamp)
+    if args.hcmp == "auto" or args.tree_kernel == "auto":
+        # measure the partition / verify kernel for THIS shape on THIS
+        # machine: time the compiled step under each candidate layout at
+        # the serving batch and keep the faster (same decision path
+        # --spec-width auto takes through choose_strategy's Strategy
+        # hcmp/tree_kernel stamps)
+        modes = {"auto": ("inline", "overlap"), "overlap": ("overlap",),
+                 "inline": ("inline",)}[args.hcmp]
+        tks = ("dense", "sparse") if args.tree_kernel == "auto" \
+            else (args.tree_kernel,)
         tf = arca.profile_engine(eng, (spec.width,), accs=accs,
                                  batch=args.batch,
                                  prompt_len=args.prompt_len,
-                                 hcmp_modes=("inline", "overlap"))
-        part = tf.partition_for(spec)
+                                 hcmp_modes=modes, tree_kernels=tks)
         key = (spec.width, spec.max_depth, spec.n_paths, args.batch)
-        print(f"[serve] measured partition: {part} "
-              f"(inline {tf.times[key + ('inline',)] * 1e3:.2f} ms, "
-              f"overlap {tf.times[key + ('overlap',)] * 1e3:.2f} ms "
-              f"per step)")
-        eng.set_hcmp(part)
+        if args.hcmp == "auto":
+            part = tf.partition_for(spec)
+            print(f"[serve] measured partition: {part} "
+                  f"(inline {tf.times[key + ('inline',)] * 1e3:.2f} ms, "
+                  f"overlap {tf.times[key + ('overlap',)] * 1e3:.2f} ms "
+                  f"per step)")
+            eng.set_hcmp(part)
+        if args.tree_kernel == "auto":
+            tk = tf.kernel_for(spec)
+            mode = tf.partition_for(spec)
+            print(f"[serve] measured tree kernel: {tk} (dense "
+                  f"{tf.times[key + (mode, 'dense')] * 1e3:.2f} ms, sparse "
+                  f"{tf.times[key + (mode, 'sparse')] * 1e3:.2f} ms "
+                  f"per step)")
+            eng.set_tree_kernel(tk)
     if args.arrivals != "none":
         if _fault_tolerant(args):
             _replay_async(args, data, _once_then(

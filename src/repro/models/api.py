@@ -6,6 +6,9 @@
   prefill(params, batch, max_len, window)        -> logits, aux, cache
   decode(params, cache, tokens)                  -> logits, cache
   verify(params, cache, tree_tokens, spec)       -> logits, extras
+    (kw: backend, tree_kernel — "sparse" splits the paged verify into a
+     quantized page walk + block-masked tree kernel merged by Eq.-1;
+     families without that path accept and ignore it)
   commit(cache, extras, spec,
          accept_nodes (B, Dmax), n_accept (B,),
          path_idx (B,))                          -> cache
@@ -52,9 +55,11 @@ def _dense_like(cfg, family):
                                    return_cache=return_cache,
                                    last_logits=last_logits)
 
-    def verify(params, cache, tree_tokens, spec, *, backend="ref"):
+    def verify(params, cache, tree_tokens, spec, *, backend="ref",
+               tree_kernel="dense"):
         return transformer.verify(cfg, params, cache, tree_tokens,
-                                  spec.depth, spec.mask, backend=backend)
+                                  spec.depth, spec.mask, backend=backend,
+                                  tree_kernel=tree_kernel)
 
     def commit(cache, extras, spec, accept_nodes, n_accept, path_idx):
         return transformer.commit(cfg, cache, extras, accept_nodes, n_accept,
@@ -76,7 +81,9 @@ def _hybrid(cfg):
                               return_cache=return_cache,
                               last_logits=last_logits)
 
-    def verify(params, cache, tree_tokens, spec, *, backend="ref"):
+    def verify(params, cache, tree_tokens, spec, *, backend="ref",
+               tree_kernel="dense"):
+        del tree_kernel              # no paged tree-verify split here
         return hybrid.verify(cfg, params, cache, tree_tokens, spec.depth,
                              spec.mask, paths=spec.paths,
                              node_path=spec.node_path,
@@ -100,7 +107,9 @@ def _xlstm(cfg):
         return xlstm_model.prefill(cfg, params, batch["tokens"],
                                    last_logits=last_logits)
 
-    def verify(params, cache, tree_tokens, spec, *, backend="ref"):
+    def verify(params, cache, tree_tokens, spec, *, backend="ref",
+               tree_kernel="dense"):
+        del tree_kernel              # no paged tree-verify split here
         return xlstm_model.verify(cfg, params, cache, tree_tokens, spec.depth,
                                   spec.mask, paths=spec.paths,
                                   node_path=spec.node_path,
@@ -128,7 +137,9 @@ def _encdec(cfg):
                               return_cache=return_cache,
                               last_logits=last_logits)
 
-    def verify(params, cache, tree_tokens, spec, *, backend="ref"):
+    def verify(params, cache, tree_tokens, spec, *, backend="ref",
+               tree_kernel="dense"):
+        del tree_kernel              # no paged tree-verify split here
         return encdec.verify(cfg, params, cache, tree_tokens, spec.depth,
                              spec.mask, backend=backend)
 

@@ -161,7 +161,8 @@ def cross_kv_init(cfg, p, enc_out):
 
 
 def attn_verify(cfg, p, x, *, ck, cv, key_pos, pos, tree_depth, tree_mask,
-                window=0, backend="ref", block_table=None):
+                window=0, backend="ref", block_table=None,
+                scale_k=None, scale_v=None, tree_kernel="dense"):
     """Tree-verification attention over W draft tokens (decode = W=1 case).
 
     x: (B, W, d); tree_depth: (W,) node depth (0 = first new token);
@@ -174,8 +175,15 @@ def attn_verify(cfg, p, x, *, ck, cv, key_pos, pos, tree_depth, tree_mask,
     rows (B, S, Hkv, hd); paged passes ONE layer's shared page pool
     ``(n_pages + 1, ps, Hkv, hd)`` plus ``block_table (B, max_pages)`` —
     the ref path gathers the logical view through the table, the Pallas
-    path walks the table inside the kernel (scalar prefetch).  The mask
-    math is layout-agnostic: ``key_pos`` is already logical.
+    path walks the table inside the kernel (scalar prefetch).  A quantized
+    pool also passes ``scale_k/scale_v (n_pages + 1, Hkv)``; dequant is
+    fused into the kernel's page walk (ref: ``gather_pages_dequant``).
+
+    ``tree_kernel="sparse"`` (paged + pallas only) splits the verify into
+    the cache-only page walk plus the block-masked W×W sparse tree kernel,
+    merged by the Eq.-1 online-softmax rule; other layouts/backends fall
+    back to their fused path (the split exists for the paged walk).  The
+    mask math is layout-agnostic: ``key_pos`` is already logical.
     Returns (out (B, W, d), (k_new, v_new)) — fresh KVs NOT yet committed.
     """
     B, W, _ = x.shape
@@ -186,13 +194,22 @@ def attn_verify(cfg, p, x, *, ck, cv, key_pos, pos, tree_depth, tree_mask,
 
     if block_table is not None and backend == "pallas":
         from repro.kernels import ops as kops
-        o = kops.paged_tree_attention(q, ck, cv, k_new, v_new, block_table,
-                                      key_pos, pos_b, tree_depth, tree_mask)
+        if tree_kernel == "sparse":
+            cache_part = kops.paged_cache_attention(
+                q, ck, cv, block_table, key_pos, pos_b, tree_depth,
+                scale_k=scale_k, scale_v=scale_v)
+            tree_part = kops.sparse_tree_attention_partial(
+                q, k_new, v_new, tree_mask)
+            o = cm.merge_partials([cache_part, tree_part]).astype(x.dtype)
+        else:
+            o = kops.paged_tree_attention(
+                q, ck, cv, k_new, v_new, block_table, key_pos, pos_b,
+                tree_depth, tree_mask, scale_k=scale_k, scale_v=scale_v)
     else:
         if block_table is not None:
-            from repro.runtime.cache import gather_pages
-            ck = gather_pages(ck, block_table)      # (B, S_logical, Hkv, hd)
-            cv = gather_pages(cv, block_table)
+            from repro.runtime.cache import gather_pages_dequant
+            ck = gather_pages_dequant(ck, scale_k, block_table)
+            cv = gather_pages_dequant(cv, scale_v, block_table)
         key_pos_b = jnp.broadcast_to(key_pos, (B, ck.shape[1]))
         if backend == "pallas":
             from repro.kernels import ops as kops

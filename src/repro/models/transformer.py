@@ -152,29 +152,40 @@ def _bulk_write(kv, ks, vs, start):
 
 # --------------------------------------------------------------------------
 def verify(cfg, params, cache: Cache, tree_tokens, tree_depth, tree_mask,
-           *, backend="ref"):
+           *, backend="ref", tree_kernel="dense"):
     """Tree-verification forward: W draft tokens vs cache + tree mask.
 
     Returns (logits (B,W,V), tree_kv (k,v each (L,B,W,Hkv,hd))).
     KVs are NOT committed — call ``commit`` with the accepted path.
+    Quantized paged caches scan the per-layer scale slices alongside the
+    pool so dequant happens inside each layer's attention; ``tree_kernel``
+    selects the fused vs split (sparse tree kernel) paged verify path.
     """
     x = embed_tokens(cfg, params, tree_tokens)
     kv = cache.kv
     paged = isinstance(kv, PagedKVCache)
     table = kv.block_table if paged else None
+    quantized = paged and kv.scale_k is not None
 
     def body(xc, xs):
-        lp, ck, cv = xs
+        lp, ck, cv = xs[0], xs[1], xs[2]
+        sk, sv = (xs[3], xs[4]) if len(xs) == 5 else (None, None)
         a, (k1, v1) = attn_verify(
             cfg, lp["attn"], cm.rmsnorm(xc, lp["ln1"], cfg.rmsnorm_eps),
             ck=ck, cv=cv, key_pos=kv.key_pos, pos=kv.pos,
             tree_depth=tree_depth, tree_mask=tree_mask,
-            window=kv.window, backend=backend, block_table=table)
+            window=kv.window, backend=backend, block_table=table,
+            scale_k=sk, scale_v=sv, tree_kernel=tree_kernel)
         xc = xc + a
         m, _ = _mix(cfg, lp, cm.rmsnorm(xc, lp["ln2"], cfg.rmsnorm_eps))
         return xc + m, (k1, v1)
 
-    kv_scan = (kv.pool_k, kv.pool_v) if paged else (kv.k, kv.v)
+    if paged:
+        kv_scan = (kv.pool_k, kv.pool_v)
+        if quantized:
+            kv_scan += (kv.scale_k, kv.scale_v)
+    else:
+        kv_scan = (kv.k, kv.v)
     x, (k_new, v_new) = cm.layer_scan(cfg, body, x,
                                   (params["layers"],) + kv_scan)
     extras = {"tree_kv": (k_new, v_new), "hidden": x}

@@ -42,6 +42,37 @@ Shared conventions
   per sequence each step, so positions diverge across the batch; every
   write and mask below is per-sequence.
 - RoPE is applied to keys at *write* time with their absolute position.
+
+Quantized int8 pages (``kv_dtype=int8``)
+----------------------------------------
+The paged pool may store KV in **symmetric per-page int8**: ``pool_k`` /
+``pool_v`` become int8 and the cache carries ``scale_k`` / ``scale_v``
+float32 tensors of shape ``(L, n_pages + 1, Hkv)`` — one scale per (layer,
+pool page, kv head), trash page included.  Format and error model:
+
+- **Arming.** A page's scale starts at the 0.0 *unarmed* sentinel.  The
+  first write into the page arms it: scale = amax(|x| over that write's
+  entries landing in the page, per (layer, head)) / 127.  The scale is
+  then FROZEN while the page is resident — re-arming on later writes
+  would silently re-scale entries already quantized under the old scale.
+- **Saturation.** Later writes quantize with the frozen scale and clamp:
+  ``q = clip(round(x / scale), -127, 127)`` (an unarmed 0.0 scale stores
+  0).  K/V magnitudes are close to position-stationary per (layer, head),
+  so the first-write amax is a good page-lifetime range estimate; an
+  outlier later in the page saturates instead of corrupting neighbors.
+- **Dequant.** ``x' = q * scale``, fused into the Pallas page walk (the
+  scale rides the scalar-prefetched block-table path next to the page
+  index) and mirrored by ``gather_pages_dequant`` on the ref backend.
+- **Error bound.** Within the armed range the absolute error per element
+  is <= scale/2 = amax/254 (relative ~0.4% of the page's per-head peak).
+  End-to-end the engines hold attention outputs to the tolerances
+  documented in ``tests/test_kernels.py`` / ``tests/test_paged.py``.
+- **Recycling.** A page's scale is zeroed-then-re-armed exactly when a
+  fresh reservation installs it (``_paged_insert_row`` / admission).
+  ``reset_rows`` leaves pool scales alone: a freed page's armed scale is
+  unreachable garbage (like its int8 payload), and the dead row's block
+  table is stale by the time the scheduler batches resets — the page may
+  already carry a same-boundary admission whose scale must survive.
 """
 from __future__ import annotations
 
@@ -69,7 +100,8 @@ class KVCache:
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["pool_k", "pool_v", "block_table", "key_pos", "pos"],
+         data_fields=["pool_k", "pool_v", "block_table", "key_pos", "pos",
+                      "scale_k", "scale_v"],
          meta_fields=["page_size", "window"])
 @dataclasses.dataclass
 class PagedKVCache:
@@ -81,14 +113,25 @@ class PagedKVCache:
     page another sequence reserved.  ``window`` is kept for interface parity
     with ``KVCache`` but must be 0 — sliding-window caches stay dense (the
     ring IS the window).
+
+    When the pool dtype is int8 the cache is *quantized*: ``scale_k`` /
+    ``scale_v (L, n_pages + 1, Hkv)`` hold the symmetric per-page dequant
+    scales (see the module docstring for the arming/freezing error model);
+    for float pools they are None and every code path below is unchanged.
     """
     pool_k: jax.Array       # (L, n_pages + 1, page_size, Hkv, hd)
     pool_v: jax.Array       # (L, n_pages + 1, page_size, Hkv, hd)
     block_table: jax.Array  # (B, max_pages) int32 physical page id; -1 free
     key_pos: jax.Array      # (B, max_pages * page_size) int32; -1 empty
     pos: jax.Array          # (B,) int32 tokens processed so far per sequence
+    scale_k: Optional[jax.Array] = None   # (L, n_pages + 1, Hkv) f32 | None
+    scale_v: Optional[jax.Array] = None   # (L, n_pages + 1, Hkv) f32 | None
     page_size: int = 16     # static: slots per page
     window: int = 0         # static: always 0 (full attention only)
+
+    @property
+    def quantized(self) -> bool:
+        return self.pool_k.dtype == jnp.int8
 
     @property
     def max_len(self) -> int:
@@ -162,9 +205,18 @@ def init_paged_kv_cache(n_layers, batch, max_len, n_kv, head_dim, *,
 
     ``max_len`` is the *logical* per-row capacity (rounded up to whole
     pages); the physical pool holds ``n_pages`` reservable pages shared by
-    all ``batch`` rows.
+    all ``batch`` rows.  ``dtype=jnp.int8`` builds a quantized pool with
+    zeroed (unarmed) per-page scale tensors.
     """
     max_pages = pages_for(max_len, page_size)
+    quantized = jnp.dtype(dtype) == jnp.int8
+
+    def _scale():
+        # one DISTINCT buffer per call: scale_k/scale_v sharing one array
+        # would donate the same buffer twice in the state-threading jits
+        return (jnp.zeros((n_layers, n_pages + 1, n_kv), jnp.float32)
+                if quantized else None)
+
     return PagedKVCache(
         pool_k=jnp.zeros((n_layers, n_pages + 1, page_size, n_kv, head_dim),
                          dtype),
@@ -173,6 +225,8 @@ def init_paged_kv_cache(n_layers, batch, max_len, n_kv, head_dim, *,
         block_table=jnp.full((batch, max_pages), -1, jnp.int32),
         key_pos=jnp.full((batch, max_pages * page_size), -1, jnp.int32),
         pos=jnp.zeros((batch,), jnp.int32),
+        scale_k=_scale(),
+        scale_v=_scale(),
         page_size=page_size,
     )
 
@@ -180,6 +234,31 @@ def init_paged_kv_cache(n_layers, batch, max_len, n_kv, head_dim, *,
 def pages_for(n_tokens, page_size) -> int:
     """Pages needed to hold ``n_tokens`` slots."""
     return -(-int(n_tokens) // int(page_size))
+
+
+def page_bytes(n_layers, page_size, n_kv, head_dim, kv_dtype) -> int:
+    """Device bytes one pool page costs across all layers, K+V, INCLUDING
+    the per-page scale overhead when quantized — the honest denominator for
+    fixed-pool-bytes comparisons (sched_bench, admission sizing)."""
+    elt = jnp.dtype(kv_dtype).itemsize
+    data = 2 * n_layers * page_size * n_kv * head_dim * elt
+    scale = 2 * n_layers * n_kv * 4 if jnp.dtype(kv_dtype) == jnp.int8 else 0
+    return data + scale
+
+
+def kv_bytes_per_token(n_layers, n_kv, head_dim, kv_dtype, page_size) -> float:
+    """Bytes per reservable token slot (K+V, all layers, amortized scale)."""
+    return page_bytes(n_layers, page_size, n_kv, head_dim, kv_dtype) \
+        / page_size
+
+
+def pages_at_fixed_bytes(budget_bytes, n_layers, page_size, n_kv, head_dim,
+                         kv_dtype) -> int:
+    """Reservable pages a byte budget funds at ``kv_dtype`` — the engine
+    admission-sizing hook that turns the int8 bytes-per-token saving into
+    extra reservable tokens at FIXED pool memory."""
+    return int(budget_bytes) // page_bytes(n_layers, page_size, n_kv,
+                                           head_dim, kv_dtype)
 
 
 class PageAllocator:
@@ -248,18 +327,50 @@ class PageAllocator:
         self._free.sort()
 
 
-def _pool_scatter(pool_k, pool_v, tables, k_src, v_src, abs_pos, valid):
+def _arm_and_quantize(src_flat, scale, flat_page, P):
+    """Quantize one operand's writes under frozen-first-write page scales.
+
+    src_flat: (L, N, Hkv, hd) float sources; scale: (L, P, Hkv) with 0.0 =
+    unarmed; flat_page: (N,) destination pool page per write.  Pages
+    UNARMED before this op arm to amax(|writes into the page|)/127 per
+    (layer, head); already-armed pages keep their scale and later writes
+    saturate (module docstring: re-arming would mis-scale entries already
+    stored under the old scale).  Returns (q (L, N, Hkv, hd) int8,
+    new_scale (L, P, Hkv)).
+    """
+    src_flat = src_flat.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(src_flat), axis=-1)               # (L, N, Hkv)
+    page_amax = jax.ops.segment_max(jnp.moveaxis(amax, 1, 0), flat_page,
+                                    num_segments=P)          # (P, L, Hkv)
+    page_amax = jnp.maximum(jnp.moveaxis(page_amax, 0, 1), 0.0)
+    new_scale = jnp.where(scale > 0.0, scale, page_amax / 127.0)
+    s_w = new_scale[:, flat_page]                            # (L, N, Hkv)
+    s_w = s_w[..., None]
+    q = jnp.where(s_w > 0.0,
+                  jnp.clip(jnp.round(src_flat
+                                     / jnp.where(s_w > 0.0, s_w, 1.0)),
+                           -127.0, 127.0),
+                  0.0)
+    return q.astype(jnp.int8), new_scale
+
+
+def _pool_scatter(pool_k, pool_v, tables, k_src, v_src, abs_pos, valid,
+                  scale_k=None, scale_v=None):
     """Scatter per-sequence writes through block tables into the shared pool.
 
     pool_k/pool_v: (L, P, ps, Hkv, hd) with P = n_pages + 1 (trash last);
     tables: (B, max_pages); k_src/v_src: (L, B, W, Hkv, hd);
-    abs_pos/valid: (B, W) absolute positions and write mask.
+    abs_pos/valid: (B, W) absolute positions and write mask;
+    scale_k/scale_v: (L, P, Hkv) per-page dequant scales when the pool is
+    int8 (None = float pool, stored verbatim).
 
     Masked writes, and writes whose logical page is unreserved (table entry
     -1 — e.g. a partially-reserved row that outgrew its pages), are
     redirected to the trash page: a row can NEVER overwrite a page it does
-    not own.  Returns (pool_k, pool_v, ok (B, W)) where ``ok`` marks the
-    writes that landed in real pages (callers mark only those in key_pos).
+    not own (a rejected write's magnitude only ever arms the never-read
+    trash scale).  Returns (pool_k, pool_v, scale_k, scale_v, ok (B, W))
+    where ``ok`` marks the writes that landed in real pages (callers mark
+    only those in key_pos).
     """
     L, P, ps, Hkv, hd = pool_k.shape
     s_log = tables.shape[1] * ps
@@ -268,11 +379,27 @@ def _pool_scatter(pool_k, pool_v, tables, k_src, v_src, abs_pos, valid):
     ok = valid & (page >= 0)
     phys = jnp.where(ok, page * ps + logical % ps, P * ps - 1)
     flat = phys.reshape(-1)                                  # (B*W,)
+    k_flat = k_src.reshape(L, -1, Hkv, hd)
+    v_flat = v_src.reshape(L, -1, Hkv, hd)
+    if scale_k is not None:
+        k_flat, scale_k = _arm_and_quantize(k_flat, scale_k, flat // ps, P)
+        v_flat, scale_v = _arm_and_quantize(v_flat, scale_v, flat // ps, P)
     pk = pool_k.reshape(L, P * ps, Hkv, hd)
     pv = pool_v.reshape(L, P * ps, Hkv, hd)
-    pk = pk.at[:, flat].set(k_src.reshape(L, -1, Hkv, hd).astype(pk.dtype))
-    pv = pv.at[:, flat].set(v_src.reshape(L, -1, Hkv, hd).astype(pv.dtype))
-    return pk.reshape(pool_k.shape), pv.reshape(pool_v.shape), ok
+    pk = pk.at[:, flat].set(k_flat.astype(pk.dtype))
+    pv = pv.at[:, flat].set(v_flat.astype(pv.dtype))
+    return (pk.reshape(pool_k.shape), pv.reshape(pool_v.shape),
+            scale_k, scale_v, ok)
+
+
+def _zero_page_scales(scale, pages, mask):
+    """Zero (un-arm) the per-page scales of the pool pages in ``pages``
+    where ``mask`` holds.  scale: (L, P, Hkv); pages: int page ids (-1 =
+    unreserved); mask broadcastable to pages.  Non-targets redirect to the
+    trash page, whose scale is never read."""
+    P = scale.shape[1]
+    tgt = jnp.where(mask & (pages >= 0), pages, P - 1).reshape(-1)
+    return scale.at[:, tgt].set(0.0)
 
 
 def _keypos_scatter(key_pos, abs_pos, ok):
@@ -301,10 +428,11 @@ def paged_kv_write(kv: PagedKVCache, ks, vs, start) -> PagedKVCache:
         s_new = s_log
     abs_pos = start[:, None] + jnp.arange(s_new, dtype=jnp.int32)[None, :]
     valid = jnp.ones(abs_pos.shape, bool)
-    pool_k, pool_v, ok = _pool_scatter(kv.pool_k, kv.pool_v, kv.block_table,
-                                       ks, vs, abs_pos, valid)
+    pool_k, pool_v, sk, sv, ok = _pool_scatter(
+        kv.pool_k, kv.pool_v, kv.block_table, ks, vs, abs_pos, valid,
+        scale_k=kv.scale_k, scale_v=kv.scale_v)
     return dataclasses.replace(
-        kv, pool_k=pool_k, pool_v=pool_v,
+        kv, pool_k=pool_k, pool_v=pool_v, scale_k=sk, scale_v=sv,
         key_pos=_keypos_scatter(kv.key_pos, abs_pos, ok),
         pos=start + s_new)
 
@@ -321,10 +449,11 @@ def paged_kv_commit(kv: PagedKVCache, k_new, v_new, accept_nodes, n_accept,
     sel_v = sel(v_new, accept_nodes)
     abs_pos = kv.pos[:, None] + idx[None, :]
     valid = idx[None, :] < n_accept[:, None]
-    pool_k, pool_v, ok = _pool_scatter(kv.pool_k, kv.pool_v, kv.block_table,
-                                       sel_k, sel_v, abs_pos, valid)
+    pool_k, pool_v, sk, sv, ok = _pool_scatter(
+        kv.pool_k, kv.pool_v, kv.block_table, sel_k, sel_v, abs_pos, valid,
+        scale_k=kv.scale_k, scale_v=kv.scale_v)
     return dataclasses.replace(
-        kv, pool_k=pool_k, pool_v=pool_v,
+        kv, pool_k=pool_k, pool_v=pool_v, scale_k=sk, scale_v=sv,
         key_pos=_keypos_scatter(kv.key_pos, abs_pos, ok),
         pos=kv.pos + n_accept.astype(jnp.int32))
 
@@ -341,7 +470,25 @@ def gather_pages(pool_layer, block_table):
     return ck.reshape((B, maxp * ps) + pool_layer.shape[2:])
 
 
-def paginate_cache(cache: "Cache", tables, *, page_size, n_pages) -> "Cache":
+def gather_pages_dequant(pool_layer, scale_layer, block_table):
+    """``gather_pages`` for an int8 pool: dequantize while materializing the
+    logical (B, S_logical, Hkv, hd) float32 view.  ``scale_layer (P, Hkv)``
+    is one layer's per-page scales; the ref-backend mirror of the fused
+    dequant inside the Pallas page walk.  ``scale_layer=None`` falls back to
+    the verbatim gather (float pool)."""
+    if scale_layer is None:
+        return gather_pages(pool_layer, block_table)
+    P, ps = pool_layer.shape[0], pool_layer.shape[1]
+    t = jnp.where(block_table < 0, P - 1, block_table)
+    ck = jnp.take(pool_layer, t, axis=0).astype(jnp.float32)
+    sc = jnp.take(scale_layer, t, axis=0)     # (B, max_pages, Hkv)
+    ck = ck * sc[:, :, None, :, None]
+    B, maxp = block_table.shape
+    return ck.reshape((B, maxp * ps) + pool_layer.shape[2:])
+
+
+def paginate_cache(cache: "Cache", tables, *, page_size, n_pages,
+                   kv_dtype=None) -> "Cache":
     """Convert a freshly-prefilled DENSE cache into the paged layout.
 
     ``tables (B, max_pages)`` comes from the host-side allocator.  Runs
@@ -349,6 +496,10 @@ def paginate_cache(cache: "Cache", tables, *, page_size, n_pages) -> "Cache":
     (sized to the prompt, not max_len).  Entries older than one logical
     ring (an over-long prompt on a small reservation) are dropped — the
     row then freezes at its first capacity check, same as the dense path.
+
+    ``kv_dtype`` picks the POOL dtype (default: the dense cache's own) —
+    ``jnp.int8`` quantizes the prompt KV on the way in, arming each
+    destination page's scale from the prefill write.
     """
     kv = cache.kv
     if kv is None or isinstance(kv, PagedKVCache):
@@ -356,18 +507,23 @@ def paginate_cache(cache: "Cache", tables, *, page_size, n_pages) -> "Cache":
     if kv.window:
         raise ValueError("paged KV supports full attention only (window=0)")
     L, B, S, Hkv, hd = kv.k.shape
+    pool_dtype = kv.k.dtype if kv_dtype is None else jnp.dtype(kv_dtype)
     s_log = tables.shape[1] * page_size
-    pool_k = jnp.zeros((L, n_pages + 1, page_size, Hkv, hd), kv.k.dtype)
+    pool_k = jnp.zeros((L, n_pages + 1, page_size, Hkv, hd), pool_dtype)
     pool_v = jnp.zeros_like(pool_k)
+    scale = (jnp.zeros((L, n_pages + 1, Hkv), jnp.float32)
+             if pool_dtype == jnp.int8 else None)
     abs_pos = kv.key_pos                                     # (B, S)
     valid = (abs_pos >= 0) & (abs_pos >= kv.pos[:, None] - s_log)
-    pool_k, pool_v, ok = _pool_scatter(pool_k, pool_v, tables,
-                                       kv.k, kv.v, abs_pos, valid)
+    pool_k, pool_v, sk, sv, ok = _pool_scatter(
+        pool_k, pool_v, tables, kv.k, kv.v, abs_pos, valid,
+        scale_k=scale, scale_v=scale)
     key_pos = _keypos_scatter(jnp.full((B, s_log), -1, jnp.int32),
                               abs_pos, ok)
     return dataclasses.replace(cache, kv=PagedKVCache(
         pool_k=pool_k, pool_v=pool_v, block_table=tables,
-        key_pos=key_pos, pos=kv.pos, page_size=page_size))
+        key_pos=key_pos, pos=kv.pos, scale_k=sk, scale_v=sv,
+        page_size=page_size))
 
 
 def _per_batch(start_pos, batch):
@@ -506,12 +662,13 @@ def tile_rows(cache: Cache, batch: int) -> Cache:
 
 
 def blank_paged_rows(row: Cache, batch: int, *, page_size, n_pages,
-                     max_len) -> Cache:
+                     max_len, kv_dtype=None) -> Cache:
     """Paged bootstrap of the scheduler's resident bank from the first B=1
     dense-prefilled admission: non-KV leaves are tiled (masked rows never
     read them), the KV field becomes an EMPTY shared pool — blank rows hold
     no reservation, so unlike the dense ``tile_rows`` bootstrap no slot
-    memory is spent on rows that are still free."""
+    memory is spent on rows that are still free.  ``kv_dtype`` picks the
+    pool dtype (default: the prefill's own; ``int8`` = quantized pool)."""
     dkv = row.kv
     if dkv is None:                       # recurrent-only family (xLSTM)
         return tile_rows(row, batch)
@@ -520,7 +677,7 @@ def blank_paged_rows(row: Cache, batch: int, *, page_size, n_pages,
     L, _, _, Hkv, hd = dkv.k.shape
     return dataclasses.replace(out, kv=init_paged_kv_cache(
         L, batch, max_len, Hkv, hd, page_size=page_size, n_pages=n_pages,
-        dtype=dkv.k.dtype))
+        dtype=dkv.k.dtype if kv_dtype is None else kv_dtype))
 
 
 def reset_rows(cache: Cache, rows) -> Cache:
@@ -534,7 +691,17 @@ def reset_rows(cache: Cache, rows) -> Cache:
     Paged KV: the row's ``block_table`` entries drop to -1 (its pool pages
     go back to the allocator host-side; their contents are unreachable once
     no table references them) and any write the dead row still issues from
-    inside a chunk redirects to the trash page."""
+    inside a chunk redirects to the trash page.  Quantized pools
+    deliberately do NOT touch the freed pages' scales here: the dead row's
+    table is STALE bookkeeping — the scheduler releases pages host-side at
+    completion and batches row resets to the END of the boundary, so by
+    reset time a "freed" page may already carry a new resident admitted
+    earlier in the SAME boundary, and zeroing its just-armed scale would
+    let the next decode write re-arm it from the wrong amax (silent dequant
+    corruption of the resident's already-quantized prompt).  A freed page's
+    stale armed scale is unreachable garbage, exactly like its int8
+    payload; ``_paged_insert_row`` un-arms the reservation at the only
+    sound point — reserve time, zero-then-arm."""
     rows = jnp.asarray(rows, bool)
 
     def f(axis, a):
@@ -586,18 +753,29 @@ def insert_rows(cache: Cache, row, src: Cache, *, pages=None) -> Cache:
 
 def _paged_insert_row(kv: PagedKVCache, row, dkv: KVCache, pages
                       ) -> PagedKVCache:
-    """Scatter a dense B=1 prefill into ``row``'s fresh page reservation."""
+    """Scatter a dense B=1 prefill into ``row``'s fresh page reservation.
+
+    Quantized pools un-arm the fresh reservation's scales FIRST, so the
+    prompt write re-arms them from the new resident's own amax.  This is
+    the ONLY place recycled-page scales are cleared: an evicted page keeps
+    its stale armed scale until re-reserved (``reset_rows`` must not touch
+    pool scales — its view of the dead row's pages is stale by the time
+    the scheduler batches the reset; see its docstring)."""
     pages = jnp.asarray(pages, jnp.int32)
     s_log = kv.max_len
     abs_pos = dkv.key_pos[0]                              # (S_dense,)
     valid = (abs_pos >= 0) & (abs_pos >= dkv.pos[0] - s_log)
-    pool_k, pool_v, ok = _pool_scatter(
+    sk, sv = kv.scale_k, kv.scale_v
+    if sk is not None:
+        sk = _zero_page_scales(sk, pages, jnp.ones(pages.shape, bool))
+        sv = _zero_page_scales(sv, pages, jnp.ones(pages.shape, bool))
+    pool_k, pool_v, sk, sv, ok = _pool_scatter(
         kv.pool_k, kv.pool_v, pages[None, :], dkv.k, dkv.v,
-        abs_pos[None, :], valid[None, :])
+        abs_pos[None, :], valid[None, :], scale_k=sk, scale_v=sv)
     kp_row = _keypos_scatter(jnp.full((1, s_log), -1, jnp.int32),
                              abs_pos[None, :], ok)[0]
     return dataclasses.replace(
-        kv, pool_k=pool_k, pool_v=pool_v,
+        kv, pool_k=pool_k, pool_v=pool_v, scale_k=sk, scale_v=sv,
         block_table=kv.block_table.at[row].set(pages),
         key_pos=kv.key_pos.at[row].set(kp_row),
         pos=kv.pos.at[row].set(dkv.pos[0]))
@@ -657,14 +835,15 @@ def write_row_at(cache: Cache, row, ks, vs, start, n_valid) -> Cache:
 
     if isinstance(kv, PagedKVCache):
         table_row = jax.lax.dynamic_slice_in_dim(kv.block_table, row, 1, 0)
-        pool_k, pool_v, ok = _pool_scatter(
+        pool_k, pool_v, sk, sv, ok = _pool_scatter(
             kv.pool_k, kv.pool_v, table_row, ks[:, None], vs[:, None],
-            abs_pos[None, :], valid[None, :])
+            abs_pos[None, :], valid[None, :],
+            scale_k=kv.scale_k, scale_v=kv.scale_v)
         kp_row = _keypos_scatter(
             jax.lax.dynamic_slice_in_dim(kv.key_pos, row, 1, 0),
             abs_pos[None, :], ok)
         return dataclasses.replace(cache, kv=dataclasses.replace(
-            kv, pool_k=pool_k, pool_v=pool_v,
+            kv, pool_k=pool_k, pool_v=pool_v, scale_k=sk, scale_v=sv,
             key_pos=jax.lax.dynamic_update_slice_in_dim(
                 kv.key_pos, kp_row, row, 0),
             pos=new_pos))

@@ -87,6 +87,25 @@ from repro.runtime.sampling import greedy
 
 _NO_EOS = -1          # sentinel: no real token id is negative
 
+_KV_DTYPES = {"fp32": jnp.float32, "f32": jnp.float32,
+              "float32": jnp.float32, "bf16": jnp.bfloat16,
+              "bfloat16": jnp.bfloat16, "int8": jnp.int8}
+
+
+def _kv_dtype(kv_dtype):
+    """Normalize the engine's ``kv_dtype`` knob: None keeps the model
+    dtype; a name ("fp32" | "bf16" | "int8") or any jnp dtype picks the
+    paged pool's storage dtype (int8 = quantized pages, runtime/cache.py)."""
+    if kv_dtype is None:
+        return None
+    if isinstance(kv_dtype, str):
+        if kv_dtype not in _KV_DTYPES:
+            raise ValueError(f"kv_dtype must be one of "
+                             f"{sorted(_KV_DTYPES)} or a dtype, "
+                             f"got {kv_dtype!r}")
+        return _KV_DTYPES[kv_dtype]
+    return jnp.dtype(kv_dtype)
+
 
 def _eos_scalar(eos) -> jnp.ndarray:
     return jnp.asarray(_NO_EOS if eos is None else int(eos), jnp.int32)
@@ -490,12 +509,21 @@ class DecodeEngine(_PagedPoolMixin):
     strategies reuse the compiled scans.  ``register_strategies`` arms a
     candidate set for the scheduler's adaptive mode and ratchets the paged
     reservation overshoot to the deepest candidate.  ``time_step`` measures
-    one compiled step — ARCA's measured time source."""
+    one compiled step — ARCA's measured time source.
+
+    ``kv_dtype`` picks the paged pool's storage dtype — ``"int8"``
+    quantizes pages with per-page dequant scales (runtime/cache.py),
+    shrinking bytes/token ~3.5x so the same pool bytes reserve more
+    tokens.  ``tree_kernel`` picks the paged verify kernel: ``"dense"``
+    (fused page walk + tree block) or ``"sparse"`` (split quantized page
+    walk + block-masked tree kernel, merged by the Eq.-1 rule);
+    ``set_tree_kernel`` / ``time_step(tree_kernel=...)`` let ARCA
+    measure both per shape."""
 
     def __init__(self, model, params, *, strategy: Optional[DecodeStrategy]
                  = None, heads=None, max_len=512, window=0, backend="ref",
                  chunk=8, paged=False, page_size=16, pool_pages=None,
-                 hcmp="inline"):
+                 hcmp="inline", kv_dtype=None, tree_kernel="dense"):
         if strategy is None:
             if heads is not None:
                 raise ValueError("an engine with draft heads needs an "
@@ -512,6 +540,22 @@ class DecodeEngine(_PagedPoolMixin):
             raise ValueError("hcmp='overlap' needs a drafted strategy: the "
                              "sequential engine has no draft source to "
                              "disaggregate")
+        kv_dtype = _kv_dtype(kv_dtype)
+        if kv_dtype == jnp.int8 and not paged:
+            raise ValueError("kv_dtype=int8 quantizes the PAGED pool "
+                             "(per-page scales live on the page axis); "
+                             "dense ring caches stay float — pass "
+                             "paged=True")
+        if tree_kernel not in ("dense", "sparse"):
+            raise ValueError(f"tree_kernel must be 'dense' or 'sparse', "
+                             f"got {tree_kernel!r}")
+        if tree_kernel == "sparse" and not paged:
+            raise ValueError("tree_kernel='sparse' splits the PAGED verify "
+                             "path (quantized page walk + block-masked "
+                             "tree kernel); dense caches use the fused "
+                             "kernel — pass paged=True")
+        self.kv_dtype = kv_dtype
+        self.tree_kernel = tree_kernel
         self.model, self.params, self.heads = model, params, heads
         self.strategy = strategy
         # HCMP executor split (core/hcmp/executors.py): "overlap" routes
@@ -632,6 +676,23 @@ class DecodeEngine(_PagedPoolMixin):
         self.hcmp = mode
         self._touch_bank()
 
+    def set_tree_kernel(self, mode: str) -> None:
+        """Switch the paged verify kernel between chunks ("dense" = fused
+        page walk + tree block, "sparse" = split quantized page walk +
+        block-masked tree kernel, merged by the Eq.-1 rule).  Safe only at
+        chunk boundaries, like ``set_strategy``; the choice is a closure
+        static of the compiled scans (``_chunk_fn`` keys on it) and of the
+        overlap runner, which is rebuilt on change."""
+        if mode not in ("dense", "sparse"):
+            raise ValueError(f"tree_kernel must be 'dense' or 'sparse', "
+                             f"got {mode!r}")
+        if mode == "sparse" and not self.paged:
+            raise ValueError("tree_kernel='sparse' needs a paged engine")
+        if mode != self.tree_kernel:
+            self.tree_kernel = mode
+            self._hcmp_runner = None     # verify_front baked the old kernel
+        self._touch_bank()
+
     def _touch_bank(self) -> None:
         """Version the resident bank: called by every mutation that makes
         a cross-chunk pre-draft stale (admission/insert/reset/extend, a
@@ -641,8 +702,9 @@ class DecodeEngine(_PagedPoolMixin):
     def _hcmp(self):
         if self._hcmp_runner is None:
             from repro.core.hcmp.executors import HcmpOverlapRunner
-            self._hcmp_runner = HcmpOverlapRunner(self.model, self.heads,
-                                                  backend=self.backend)
+            self._hcmp_runner = HcmpOverlapRunner(
+                self.model, self.heads, backend=self.backend,
+                tree_kernel=self.tree_kernel)
         return self._hcmp_runner
 
     @property
@@ -684,8 +746,14 @@ class DecodeEngine(_PagedPoolMixin):
 
     # ---- the ONE chunk driver --------------------------------------------
     def _chunk_fn(self, K: int):
-        if K not in self._chunks:
+        # keyed by (K, tree_kernel): the verify kernel choice is baked into
+        # the compiled scan (a closure static, like ``backend``), so a
+        # runtime switch lands in a different compile-cache entry instead
+        # of silently reusing the other kernel's scan
+        key = (K, self.tree_kernel)
+        if key not in self._chunks:
             model, backend = self.model, self.backend
+            tree_kernel = self.tree_kernel
 
             def chunk_scan(p, h, strat, state, done, rem, eos):
                 def body(carry, _):
@@ -704,6 +772,7 @@ class DecodeEngine(_PagedPoolMixin):
                         state, emitted, n = spec_step(model, p, h,
                                                       strat.tree, state,
                                                       backend=backend,
+                                                      tree_kernel=tree_kernel,
                                                       active=active)
                     idx = jnp.arange(emitted.shape[1])[None, :]
                     valid = idx < n[:, None]
@@ -725,18 +794,19 @@ class DecodeEngine(_PagedPoolMixin):
 
             # donate the scan carry (state incl. the KV pool, done, rem):
             # in-place chunk updates, no per-chunk cache copy
-            self._chunks[K] = jax.jit(chunk_scan, donate_argnums=(3, 4, 5))
-        return self._chunks[K]
+            self._chunks[key] = jax.jit(chunk_scan, donate_argnums=(3, 4, 5))
+        return self._chunks[key]
 
     def _prefill_paged_fn(self, n_total: int):
         if n_total not in self._prefills_paged:
             model, ps = self.model, self.page_size
+            kvdt = self.kv_dtype
 
             def prefill_paged(p, h, b, tables):
                 st = _prefill_state(model, p, h, b, max_len=1, window=0)
                 return type(st)(
                     cache=paginate_cache(st.cache, tables, page_size=ps,
-                                         n_pages=n_total),
+                                         n_pages=n_total, kv_dtype=kvdt),
                     cur_token=st.cur_token, hidden=st.hidden)
 
             self._prefills_paged[n_total] = jax.jit(prefill_paged)
@@ -816,7 +886,8 @@ class DecodeEngine(_PagedPoolMixin):
     def time_step(self, strategy: Optional[DecodeStrategy] = None, *,
                   batch: int = 1, prompt_len: int = 16, reps: int = 3,
                   chunk: Optional[int] = None,
-                  hcmp: Optional[str] = None) -> float:
+                  hcmp: Optional[str] = None,
+                  tree_kernel: Optional[str] = None) -> float:
         """Best-of-``reps`` wall time of ONE decode step under ``strategy``
         (default: the current one), measured through the engine's COMPILED
         chunk scan on a dummy prompt — the strategy is a jit argument, so
@@ -826,12 +897,18 @@ class DecodeEngine(_PagedPoolMixin):
 
         ``hcmp`` overrides the executor partition for this measurement
         ("inline" | "overlap") — ARCA times both and picks the partition
-        the same way it picks the speculative strategy."""
+        the same way it picks the speculative strategy.  ``tree_kernel``
+        ("dense" | "sparse") likewise overrides the paged verify kernel,
+        so ARCA measures the fused vs split page walk per shape instead
+        of trusting an analytic crossover."""
         strategy = strategy or self.strategy
         K = chunk or self.chunk
         prev_hcmp = self.hcmp
+        prev_tk = self.tree_kernel
         if hcmp is not None:
             self.set_hcmp(hcmp)
+        if tree_kernel is not None:
+            self.set_tree_kernel(tree_kernel)
         try:
             self._touch_bank()        # measurement stream, not the bank
             bd = {"tokens": jnp.zeros((batch, prompt_len), jnp.int32)}
@@ -866,6 +943,8 @@ class DecodeEngine(_PagedPoolMixin):
         finally:
             if hcmp is not None:
                 self.set_hcmp(prev_hcmp)
+            if tree_kernel is not None:
+                self.set_tree_kernel(prev_tk)
 
     # ---- continuous-batching slot protocol (runtime/scheduler.py) --------
     def sched_prefill(self, batch):
@@ -887,7 +966,8 @@ class DecodeEngine(_PagedPoolMixin):
             self._row_pages = {}
             bank = blank_paged_rows(row.cache, batch,
                                     page_size=self.page_size,
-                                    n_pages=n_total, max_len=self.max_len)
+                                    n_pages=n_total, max_len=self.max_len,
+                                    kv_dtype=self.kv_dtype)
         else:
             bank = tile_rows(row.cache, batch)
         hid = None if row.hidden is None else \
@@ -962,12 +1042,12 @@ class BatchEngine(DecodeEngine):
 
     def __init__(self, model, params, *, max_len=512, window=0,
                  backend="ref", chunk=8, paged=False, page_size=16,
-                 pool_pages=None):
+                 pool_pages=None, kv_dtype=None):
         super().__init__(model, params,
                          strategy=DecodeStrategy.sequential(),
                          max_len=max_len, window=window, backend=backend,
                          chunk=chunk, paged=paged, page_size=page_size,
-                         pool_pages=pool_pages)
+                         pool_pages=pool_pages, kv_dtype=kv_dtype)
 
 
 class SpeculativeEngine(DecodeEngine):
@@ -977,12 +1057,14 @@ class SpeculativeEngine(DecodeEngine):
 
     def __init__(self, model, heads, params, tree_spec: TreeSpec, *,
                  max_len=512, window=0, backend="ref", chunk=8, paged=False,
-                 page_size=16, pool_pages=None, hcmp="inline"):
+                 page_size=16, pool_pages=None, hcmp="inline",
+                 kv_dtype=None, tree_kernel="dense"):
         super().__init__(model, params, heads=heads,
                          strategy=DecodeStrategy.medusa(tree_spec),
                          max_len=max_len, window=window, backend=backend,
                          chunk=chunk, paged=paged, page_size=page_size,
-                         pool_pages=pool_pages, hcmp=hcmp)
+                         pool_pages=pool_pages, hcmp=hcmp,
+                         kv_dtype=kv_dtype, tree_kernel=tree_kernel)
 
 
 def _stats(accepts, times):

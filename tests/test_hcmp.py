@@ -67,15 +67,18 @@ def _requests(cfg, n, budgets, prompt_len=8, seed=3):
 # overlap == inline, bit for bit
 # --------------------------------------------------------------------------
 @pytest.mark.parametrize("backend", ["ref", "pallas"])
-@pytest.mark.parametrize("paged", [False, True])
-def test_overlap_generate_matches_inline(paged, backend):
+@pytest.mark.parametrize("paged,kv_dtype", [(False, None), (True, None),
+                                            (True, "int8")])
+def test_overlap_generate_matches_inline(paged, kv_dtype, backend):
     """Disaggregated draft/verify emits the exact token stream of the
-    fused chunk scan, dense and paged, on both attention backends."""
+    fused chunk scan — dense, paged fp32 and paged int8 (quantize-on-write
+    is deterministic, so the quantized pool must not break overlap/inline
+    bit parity either), on both attention backends."""
     cfg, model, params, heads, accs = _setup()
     spec = T.build_tree(accs, 4)
     kw = dict(max_len=64, chunk=4, backend=backend)
     if paged:
-        kw.update(paged=True, page_size=8)
+        kw.update(paged=True, page_size=8, kv_dtype=kv_dtype)
     toks = np.asarray(jax.random.randint(
         jax.random.PRNGKey(5), (2, 8), 0, cfg.vocab_size), np.int32)
     inline = SpeculativeEngine(model, heads, params, spec, **kw)

@@ -77,6 +77,60 @@ def test_tree_attention_vs_oracle(B, W, Hq, Hkv, hd, S, pos, window,
                                np.asarray(ref, np.float32), atol=tol, rtol=tol)
 
 
+PAGED_INT8_CASES = [
+    # B, W, Hq, Hkv, hd, ps, n_pages, maxp
+    (1, 1, 4, 4, 32, 8, 6, 2),      # decode-shaped walk
+    (2, 8, 4, 2, 64, 16, 10, 3),    # GQA tree, fragmented reservations
+    (3, 4, 8, 1, 32, 4, 12, 4),     # MQA, many small pages
+]
+
+
+@pytest.mark.parametrize("B,W,Hq,Hkv,hd,ps,n_pages,maxp", PAGED_INT8_CASES)
+def test_paged_int8_kernel_vs_oracle(B, W, Hq, Hkv, hd, ps, n_pages, maxp):
+    """Fused-dequant page walk sweep: the int8 Pallas kernel matches the
+    int8 oracle to float tolerance (dequant is exact math — scale * int),
+    and both sit within the symmetric-quantization bound (scale/2 per
+    element) of the fp32 oracle on the same logical view."""
+    from repro.kernels.ref import paged_tree_attention_ref
+    from repro.kernels.tree_attention import paged_tree_attention
+    rng = np.random.default_rng(B * W + n_pages)
+    P = n_pages + 1
+    pool = rng.normal(size=(2, P, ps, Hkv, hd)).astype(np.float32)
+    scale = np.abs(pool).max(axis=(2, 4)) / 127.0            # (2, P, Hkv)
+    qpool = np.clip(np.round(pool / np.maximum(
+        scale, 1e-30)[:, :, None, :, None]), -127, 127).astype(np.int8)
+    q = jnp.asarray(rng.normal(size=(B, W, Hq, hd)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(B, W, Hkv, hd)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(B, W, Hkv, hd)), jnp.float32)
+    # every row holds a random fragmented reservation with a partial fill
+    table = np.full((B, maxp), -1, np.int32)
+    key_pos = np.full((B, maxp * ps), -1, np.int32)
+    fills = []
+    for b in range(B):
+        n_res = int(rng.integers(1, maxp + 1))
+        table[b, :n_res] = rng.choice(n_pages, n_res, replace=False)
+        fills.append(int(rng.integers(1, n_res * ps + 1)))
+        key_pos[b, :fills[-1]] = np.arange(fills[-1])
+    table, key_pos = jnp.asarray(table), jnp.asarray(key_pos)
+    mask, depth = _rand_tree_mask(W, seed=ps)
+    q_pos = jnp.asarray(np.asarray(fills)[:, None]
+                        + np.asarray(depth)[None, :], jnp.int32)
+    lo = jnp.full_like(q_pos, -1)
+    walk = (kn, vn, table, key_pos, q_pos, lo, mask)
+
+    ref8 = paged_tree_attention_ref(q, qpool[0], qpool[1], scale[0],
+                                    scale[1], *walk)
+    ker8 = paged_tree_attention(q, jnp.asarray(qpool[0]),
+                                jnp.asarray(qpool[1]),
+                                jnp.asarray(scale[0]), jnp.asarray(scale[1]),
+                                *walk, interpret=True)
+    np.testing.assert_allclose(np.asarray(ker8), np.asarray(ref8),
+                               atol=2e-5, rtol=2e-5)
+    ref32 = paged_tree_attention_ref(q, jnp.asarray(pool[0]),
+                                     jnp.asarray(pool[1]), None, None, *walk)
+    assert float(jnp.max(jnp.abs(ref8 - ref32))) < 3e-2
+
+
 @pytest.mark.parametrize("W,Hq,Hkv,hd,dtype", [
     (4, 4, 2, 32, jnp.float32),
     (16, 8, 8, 64, jnp.float32),

@@ -228,12 +228,12 @@ def test_paged_kernel_matches_ref():
     lo = jnp.full_like(q_pos, -1)
     tm = jnp.tril(jnp.ones((W, W), bool))
 
-    ref = KR.paged_tree_attention_ref(q, pool_k, pool_v, k_new, v_new,
-                                      table, key_pos, q_pos, lo, tm)
+    ones = jnp.ones((P, Hkv), jnp.float32)        # float pool: exact scales
+    ref = KR.paged_tree_attention_ref(q, pool_k, pool_v, None, None, k_new,
+                                      v_new, table, key_pos, q_pos, lo, tm)
     ker = KT.paged_tree_attention(
-        q, pool_k, pool_v, k_new, v_new,
-        jnp.where(table < 0, P - 1, table), key_pos, q_pos, lo, tm,
-        interpret=True)
+        q, pool_k, pool_v, ones, ones, k_new, v_new, table, key_pos, q_pos,
+        lo, tm, interpret=True)
     np.testing.assert_allclose(np.asarray(ref), np.asarray(ker),
                                atol=2e-5, rtol=2e-5)
     ck = C.gather_pages(pool_k, table)
@@ -241,6 +241,169 @@ def test_paged_kernel_matches_ref():
     dref = KR.tree_attention_ref(q, ck, cv, k_new, v_new, key_pos, q_pos,
                                  lo, tm)
     np.testing.assert_allclose(np.asarray(ref), np.asarray(dref), atol=1e-6)
+
+
+def _kernel_case(seed=1):
+    """Fragmented paged fixture shared by the kernel-parity tests: 3 rows
+    with partial reservations and diverged fills, tril tree mask."""
+    rng = np.random.default_rng(seed)
+    B, W, Hq, Hkv, hd, ps, n_pages, maxp = 3, 4, 4, 2, 8, 4, 10, 3
+    P = n_pages + 1
+    case = dict(
+        pool_k=jnp.asarray(rng.normal(size=(P, ps, Hkv, hd)), jnp.float32),
+        pool_v=jnp.asarray(rng.normal(size=(P, ps, Hkv, hd)), jnp.float32),
+        k_new=jnp.asarray(rng.normal(size=(B, W, Hkv, hd)), jnp.float32),
+        v_new=jnp.asarray(rng.normal(size=(B, W, Hkv, hd)), jnp.float32),
+        q=jnp.asarray(rng.normal(size=(B, W, Hq, hd)), jnp.float32),
+        table=jnp.asarray([[0, 3, -1], [7, -1, -1], [2, 5, 9]], jnp.int32),
+        tm=jnp.tril(jnp.ones((W, W), bool)), P=P, Hkv=Hkv)
+    fills = [6, 3, 11]
+    key_pos = np.full((B, maxp * ps), -1, np.int32)
+    for b, f in enumerate(fills):
+        key_pos[b, :f] = np.arange(f)
+    case["key_pos"] = jnp.asarray(key_pos)
+    pos = jnp.asarray(fills, jnp.int32)
+    case["q_pos"] = pos[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+    case["lo"] = jnp.full_like(case["q_pos"], -1)
+    return case
+
+
+def _quantize_pool(pool):
+    """Symmetric per-page per-head int8 quantization (the cache.py
+    convention: scale = amax/127, element error <= scale/2)."""
+    amax = jnp.max(jnp.abs(pool), axis=(1, 3))                  # (P, Hkv)
+    scale = amax / 127.0
+    qp = jnp.round(pool / jnp.maximum(scale, 1e-30)[:, None, :, None])
+    return jnp.clip(qp, -127, 127).astype(jnp.int8), scale
+
+
+def test_paged_kernel_int8_matches_ref():
+    """int8 pool: Pallas fused-dequant page walk == int8 oracle to kernel
+    tolerance, and both sit within the quantization bound of the fp32
+    oracle (the dequant happens INSIDE the walk, not via a float view)."""
+    from repro.kernels import ref as KR
+    from repro.kernels import tree_attention as KT
+    c = _kernel_case()
+    qk, sk = _quantize_pool(c["pool_k"])
+    qv, sv = _quantize_pool(c["pool_v"])
+    args = (c["k_new"], c["v_new"], c["table"], c["key_pos"], c["q_pos"],
+            c["lo"], c["tm"])
+    ref8 = KR.paged_tree_attention_ref(c["q"], qk, qv, sk, sv, *args)
+    ker8 = KT.paged_tree_attention(c["q"], qk, qv, sk, sv, *args,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(ker8), np.asarray(ref8),
+                               atol=2e-5, rtol=2e-5)
+    ref32 = KR.paged_tree_attention_ref(c["q"], c["pool_k"], c["pool_v"],
+                                        None, None, *args)
+    err = float(jnp.max(jnp.abs(ref8 - ref32)))
+    assert 0.0 < err < 3e-2, err          # quantized, yet within the bound
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_paged_split_partials_match_fused(quantized):
+    """tree_kernel=sparse decomposition: paged_cache_attention partials ==
+    their oracle, and Eq.-1-merged with the sparse tree half they equal the
+    fused paged_tree_attention output — at both pool dtypes."""
+    from repro.kernels import ref as KR
+    from repro.kernels import sparse_tree as KS
+    from repro.kernels import tree_attention as KT
+    from repro.models import common as cm
+    c = _kernel_case(seed=2)
+    if quantized:
+        pk, sk = _quantize_pool(c["pool_k"])
+        pv, sv = _quantize_pool(c["pool_v"])
+        sk_ref, sv_ref = sk, sv
+    else:
+        pk, pv = c["pool_k"], c["pool_v"]
+        sk = sv = jnp.ones((c["P"], c["Hkv"]), jnp.float32)
+        sk_ref = sv_ref = None            # ref: None == verbatim gather
+    walk = (c["table"], c["key_pos"], c["q_pos"], c["lo"])
+    cache_ker = KT.paged_cache_attention(c["q"], pk, pv, sk, sv, *walk,
+                                         interpret=True)
+    cache_ref = KR.paged_cache_attention_ref(c["q"], pk, pv, sk_ref, sv_ref,
+                                             *walk)
+    for a, b in zip(cache_ker, cache_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-5)
+    tree_ker = KS.sparse_tree_attention_partial(c["q"], c["k_new"],
+                                                c["v_new"], c["tm"],
+                                                interpret=True)
+    tree_ref = KR.sparse_tree_attention_partial_ref(c["q"], c["k_new"],
+                                                    c["v_new"], c["tm"])
+    for a, b in zip(tree_ker, tree_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-5)
+    merged = cm.merge_partials([cache_ker, tree_ker])
+    fused = KT.paged_tree_attention(c["q"], pk, pv, sk, sv, c["k_new"],
+                                    c["v_new"], *walk, c["tm"],
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(fused),
+                               atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# int8 scale lifecycle: arm on paginate, freeze on write, zero on reset,
+# re-arm on recycle (a stale scale must NEVER dequantize a new resident)
+# --------------------------------------------------------------------------
+def test_int8_scale_lifecycle_reset_and_recycle():
+    L, B, Hkv, hd, ps, max_len = 1, 2, 2, 4, 4, 16
+    rng = np.random.default_rng(7)
+    fill = 6
+    k = jnp.asarray(rng.normal(size=(L, B, fill, Hkv, hd)) * 3.0,
+                    jnp.float32)
+    dense = dataclasses.replace(
+        C.init_kv_cache(L, B, fill, Hkv, hd, dtype=jnp.float32),
+        k=k, v=k * 0.5,
+        key_pos=jnp.broadcast_to(jnp.arange(fill), (B, fill)),
+        pos=jnp.full((B,), fill, jnp.int32))
+    tables = jnp.asarray([[0, 1, -1, -1], [2, 3, -1, -1]], jnp.int32)
+    paged = C.paginate_cache(C.Cache(kv=dense), tables, page_size=ps,
+                             n_pages=4, kv_dtype=jnp.int8).kv
+    assert paged.pool_k.dtype == jnp.int8
+    sk0 = np.asarray(paged.scale_k)                       # (L, P, Hkv)
+    assert np.all(sk0[:, :4] > 0), "resident pages must arm on paginate"
+    assert np.all(sk0[:, 4] == 0), "trash page scale must stay unarmed"
+    view = C.gather_pages_dequant(paged.pool_k[0], paged.scale_k[0],
+                                  paged.block_table)
+    bound = float(np.max(sk0)) / 2 + 1e-6
+    assert float(jnp.max(jnp.abs(view[:, :fill] - dense.k[0]))) <= bound
+
+    # writes into an armed page must NOT move its scale (frozen-first-write)
+    ks = jnp.asarray(rng.normal(size=(L, B, 2, Hkv, hd)) * 30.0, jnp.float32)
+    written = C.paged_kv_write(paged, ks, ks, jnp.full((B,), fill, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(written.scale_k), sk0)
+
+    # reset frees row 0: table/key_pos clear but pool scales are left
+    # ALONE — the dead row's table is stale bookkeeping, and the scheduler
+    # batches resets to the end of a boundary, so the pages it names may
+    # already carry a same-boundary admission whose armed scale must
+    # survive (zeroing here re-armed recycled pages from decode amax and
+    # silently corrupted the resident's already-quantized prompt)
+    out = C.reset_rows(C.Cache(kv=written), np.asarray([True, False]))
+    sk1 = np.asarray(out.kv.scale_k)
+    np.testing.assert_array_equal(sk1, sk0)
+    assert np.all(np.asarray(out.kv.block_table)[0] == -1)
+
+    # recycle pages 0..1 for a new resident with ~300x smaller magnitude:
+    # the insert zero-then-arms to the NEW amax — dequantizing through the
+    # stale scale would inflate the restored values ~300x
+    small = jnp.asarray(rng.normal(size=(L, 1, fill, Hkv, hd)) * 0.01,
+                        jnp.float32)
+    src = C.Cache(kv=dataclasses.replace(
+        C.init_kv_cache(L, 1, fill, Hkv, hd, dtype=jnp.float32),
+        k=small, v=small,
+        key_pos=jnp.arange(fill, dtype=jnp.int32)[None],
+        pos=jnp.asarray([fill], jnp.int32)))
+    ins = C.insert_rows(out, 0, src, pages=jnp.asarray([0, 1, -1, -1],
+                                                       jnp.int32))
+    sk2 = np.asarray(ins.kv.scale_k)
+    assert np.all(sk2[:, :2] > 0)
+    assert float(np.max(sk2[:, :2])) < float(np.min(sk0[:, :2])), \
+        "recycled pages must re-arm to the new resident's amax"
+    view2 = C.gather_pages_dequant(ins.kv.pool_k[0], ins.kv.scale_k[0],
+                                   ins.kv.block_table)
+    err = float(jnp.max(jnp.abs(view2[0, :fill] - small[0, 0])))
+    assert err <= float(np.max(sk2[:, :2])) / 2 + 1e-7, err
 
 
 # --------------------------------------------------------------------------
@@ -268,6 +431,69 @@ def test_engines_paged_match_dense(backend):
     od, _ = dense.generate({"tokens": toks}, 12)
     op, _ = paged.generate({"tokens": toks}, 12)
     np.testing.assert_array_equal(od, op)
+
+
+def test_engines_int8_configs_agree():
+    """Every int8 engine config — ref oracle, Pallas fused walk, and the
+    tree_kernel=sparse split verify path — emits IDENTICAL tokens (same
+    quantized pool, kernels parity-tested to 2e-5, so any disagreement is
+    a dispatch bug).  Against fp32 only prefix agreement is asserted:
+    quantization can legitimately flip a borderline argmax on this
+    random-weights smoke model, and the first token always matches because
+    prefill logits are computed before the pool is quantized.  The
+    bounded-error parity gate is the kernel tests' job."""
+    cfg, model, params, heads, spec = _setup()
+    toks = jax.random.randint(jax.random.PRNGKey(3), (3, 8), 0,
+                              cfg.vocab_size)
+
+    def run(backend, tree_kernel, kv_dtype):
+        eng = SpeculativeEngine(model, heads, params, spec, max_len=64,
+                                chunk=4, backend=backend, paged=True,
+                                page_size=8, kv_dtype=kv_dtype,
+                                tree_kernel=tree_kernel)
+        out, _ = eng.generate({"tokens": toks}, 12)
+        return np.asarray(out)
+
+    i8 = {(b, tk): run(b, tk, "int8")
+          for b, tk in [("ref", "dense"), ("pallas", "dense"),
+                        ("pallas", "sparse")]}
+    base = i8[("ref", "dense")]
+    for key, out in i8.items():
+        np.testing.assert_array_equal(base, out, err_msg=str(key))
+    fp = run("pallas", "dense", None)
+    np.testing.assert_array_equal(fp[:, 0], base[:, 0])
+
+
+def test_kv_dtype_and_tree_kernel_validation():
+    """int8 and the split verify path both presuppose the paged layout;
+    the engine must refuse the meaningless combinations up front."""
+    cfg, model, params, heads, spec = _setup()
+    with pytest.raises(ValueError, match="paged"):
+        SpeculativeEngine(model, heads, params, spec, max_len=64, chunk=4,
+                          kv_dtype="int8")
+    with pytest.raises(ValueError, match="paged"):
+        SpeculativeEngine(model, heads, params, spec, max_len=64, chunk=4,
+                          tree_kernel="sparse")
+    with pytest.raises(ValueError):
+        SpeculativeEngine(model, heads, params, spec, max_len=64, chunk=4,
+                          paged=True, page_size=8, tree_kernel="bogus")
+    with pytest.raises(ValueError):
+        SpeculativeEngine(model, heads, params, spec, max_len=64, chunk=4,
+                          paged=True, page_size=8, kv_dtype="int4")
+    eng = SpeculativeEngine(model, heads, params, spec, max_len=64, chunk=4,
+                            paged=True, page_size=8, backend="pallas")
+    # live switch: dense -> sparse -> dense, same tokens each way
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0,
+                              cfg.vocab_size)
+    od, _ = eng.generate({"tokens": toks}, 10)
+    eng.set_tree_kernel("sparse")
+    os_, _ = eng.generate({"tokens": toks}, 10)
+    eng.set_tree_kernel("dense")
+    od2, _ = eng.generate({"tokens": toks}, 10)
+    np.testing.assert_array_equal(od, os_)
+    np.testing.assert_array_equal(od, od2)
+    with pytest.raises(ValueError):
+        eng.set_tree_kernel("coo")
 
 
 @pytest.mark.parametrize("arch", ["zamba2-7b", "seamless-m4t-medium",

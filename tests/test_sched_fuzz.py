@@ -2,7 +2,9 @@
 scheduler must be indistinguishable, per request, from solo B=1 runs.
 
 Each drawn example is a full serve(): random arrivals, prompt lengths,
-budgets, admission policy (fifo/sjf/lpt), layout (dense/paged), engine
+budgets, admission policy (fifo/sjf/lpt), layout (dense / paged fp32 /
+paged int8 — the quantized arm obeys the SAME solo oracle, since
+quantize-on-write is deterministic per resident), engine
 (sequential/speculative), bank width and chunked-prefill setting.  The
 oracle is ``engine.generate`` on each request alone — the scheduler may
 only change WHEN a request runs, never WHAT it emits:
@@ -64,14 +66,15 @@ _ENGINES = {}
 _SOLO = {}                             # (engine key, prompt, budget) -> out
 
 
-def _engine(kind, paged):
-    key = (kind, paged)
+def _engine(kind, paged, kv_dtype=None):
+    key = (kind, paged, kv_dtype)
     if key not in _ENGINES:
         cfg = get_config("qwen2-0.5b").reduced()
         model = get_model(cfg)
         params = model.init_params(jax.random.PRNGKey(0))
         kw = dict(max_len=MAX_LEN, chunk=4, paged=paged,
-                  page_size=PAGE_SIZE, pool_pages=POOL_PAGES[paged])
+                  page_size=PAGE_SIZE, pool_pages=POOL_PAGES[paged],
+                  kv_dtype=kv_dtype)
         if kind == "spec":
             heads = init_medusa(cfg, jax.random.PRNGKey(7))
             spec = T.build_tree(
@@ -91,19 +94,31 @@ def _solo(key, eng, req):
     return _SOLO[skey]
 
 
+LAYOUTS = [(False, None), (True, None), (True, "int8")]
+# (paged, kv_dtype): the int8 arm serves through the SAME solo-oracle
+# contract — quantize-on-write is deterministic per resident, so the
+# scheduler still may not change WHAT a request emits, only when.
+
+
 @settings(max_examples=8, deadline=None)
 @given(ex=st.tuples(
     st.integers(1, 6),                         # number of requests
     st.integers(0, 2 ** 31 - 1),               # trace seed
     st.sampled_from(["seq", "spec"]),
-    st.sampled_from([False, True]),            # paged
+    st.sampled_from(LAYOUTS),                  # (paged, kv_dtype)
     st.sampled_from(["fifo", "sjf", "lpt"]),
     st.sampled_from([0, PREFILL_CHUNK]),
     st.sampled_from([2, 3]),                   # bank width B
 ))
 def test_fuzz_continuous_matches_solo(ex):
-    n, seed, kind, paged, policy, prefill_chunk, B = ex
-    cfg, eng = _engine(kind, paged)
+    n, seed, kind, (paged, kv_dtype), policy, prefill_chunk, B = ex
+    if kv_dtype == "int8":
+        # frozen-first-write page scales make the quantized values depend
+        # on prefill chunk boundaries (a partial first chunk arms the
+        # scale, later chunks clip under it), so bit-parity with the
+        # whole-prompt solo oracle is only guaranteed unchunked
+        prefill_chunk = 0
+    cfg, eng = _engine(kind, paged, kv_dtype)
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n):
@@ -121,16 +136,22 @@ def test_fuzz_continuous_matches_solo(ex):
     assert [r.req_id for r in results] == [r.req_id for r in reqs]
     assert stats["admitted"] == n
     for r, req in zip(results, reqs):
-        solo_toks, solo_n = _solo((kind, paged), eng, req)
+        solo_toks, solo_n = _solo((kind, paged, kv_dtype), eng, req)
         assert r.n_emitted <= req.n_tokens
         assert len(r.tokens) == r.n_emitted       # no emission after done
         assert r.n_emitted == solo_n, (r.req_id, r.n_emitted, solo_n)
         np.testing.assert_array_equal(
             r.tokens, solo_toks[:solo_n],
             err_msg=f"req {r.req_id} (policy={policy}, paged={paged}, "
-                    f"chunked={prefill_chunk}, B={B})")
+                    f"kv_dtype={kv_dtype}, chunked={prefill_chunk}, B={B})")
     if paged:                                     # full drain returns pages
         assert eng._alloc.available == eng._alloc.n_pages
+    if kv_dtype == "int8":
+        # freed pages may keep stale ARMED scales (reset_rows must not
+        # touch pool scales — see runtime/cache.py), but every row still
+        # holding a reservation after drain would be a leak
+        kv = sched.last_state.cache.kv
+        assert np.all(np.asarray(kv.block_table) == -1)
 
 
 @settings(max_examples=8, deadline=None)
@@ -138,7 +159,7 @@ def test_fuzz_continuous_matches_solo(ex):
     st.integers(2, 6),                         # number of requests
     st.integers(0, 2 ** 31 - 1),               # lifecycle seed
     st.sampled_from(["seq", "spec"]),
-    st.sampled_from([False, True]),            # paged
+    st.sampled_from(LAYOUTS),                  # (paged, kv_dtype)
     st.sampled_from([2, 3]),                   # bank width B
 ))
 def test_fuzz_lifecycle_terminal_and_conserved(ex):
@@ -146,8 +167,8 @@ def test_fuzz_lifecycle_terminal_and_conserved(ex):
     exactly one typed terminal state, emitted tokens are always a
     bit-identical prefix of the solo run, and the paged pool conserves
     every page through mid-flight abort and timeout cleanup."""
-    n, seed, kind, paged, B = ex
-    cfg, eng = _engine(kind, paged)
+    n, seed, kind, (paged, kv_dtype), B = ex
+    cfg, eng = _engine(kind, paged, kv_dtype)
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n):
@@ -182,12 +203,12 @@ def test_fuzz_lifecycle_terminal_and_conserved(ex):
     assert [r.req_id for r in results] == [r.req_id for r in reqs]
     for r, req in zip(results, reqs):
         assert r.state in TERMINAL_STATES
-        solo_toks, solo_n = _solo((kind, paged), eng, req)
+        solo_toks, solo_n = _solo((kind, paged, kv_dtype), eng, req)
         assert len(r.tokens) == r.n_emitted <= solo_n
         np.testing.assert_array_equal(
             r.tokens, solo_toks[:r.n_emitted],
             err_msg=f"req {r.req_id} state={r.state} (kind={kind}, "
-                    f"paged={paged}, B={B})")
+                    f"paged={paged}, kv_dtype={kv_dtype}, B={B})")
         if r.state == DONE:                # full solo output, nothing less
             assert r.n_emitted == solo_n
         if r.state == CANCELLED:
